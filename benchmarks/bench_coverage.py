@@ -1,0 +1,34 @@
+"""Paper Figs. 13/14: speedup vs input tissue coverage (25..100%).
+
+The frontier/tiled engines' advantage over the full sweep should GROW as
+coverage shrinks (the sweep wastes passes on pixels that never change —
+exactly the FH_GPU vs SR_GPU gap the paper measures)."""
+
+from __future__ import annotations
+
+from benchmarks.common import edt_state, emit, morph_state, timeit
+from repro.core.frontier import run_dense
+from repro.core.tiles import run_tiled
+
+
+def main(size: int = 512):
+    for cov in (0.25, 0.5, 0.75, 1.0):
+        op, state = morph_state(size, coverage=cov, seed=3, n_sweeps=1)
+        t_sweep = timeit(lambda: run_dense(op, state, "sweep"))
+        t_front = timeit(lambda: run_dense(op, state, "frontier"))
+        t_tiled = timeit(lambda: run_tiled(op, state, tile=128,
+                                           queue_capacity=64))
+        emit(f"fig13/morph/cov={cov}", t_front,
+             f"sweep={t_sweep * 1e6:.0f}us;frontier_speedup={t_sweep / t_front:.2f};"
+             f"tiled_speedup={t_sweep / t_tiled:.2f}")
+
+        op2, st2 = edt_state(size, coverage=cov, seed=4)
+        t2_sweep = timeit(lambda: run_dense(op2, st2, "sweep"))
+        t2_tiled = timeit(lambda: run_tiled(op2, st2, tile=128,
+                                            queue_capacity=64))
+        emit(f"fig14/edt/cov={cov}", t2_tiled,
+             f"sweep={t2_sweep * 1e6:.0f}us;tiled_speedup={t2_sweep / t2_tiled:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper §5.2.4: cost of exceeding the queue storage limit.
+
+The tiled engine's active-tile queue has fixed capacity; overflowed tiles
+are retained for the next round (re-execution from partial output — the
+paper's overflow semantics).  The paper reports 6% / 9% penalties for one /
+two overflow rounds; we sweep capacity and report the penalty and the
+number of overflow rounds."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, morph_state, timeit
+from repro.core.tiles import run_tiled
+
+
+def main(size: int = 512):
+    op, state = morph_state(size, coverage=1.0, seed=5, n_sweeps=1)
+    tile = 64
+    full_cap = (size // tile) ** 2
+    _, st = run_tiled(op, state, tile=tile, queue_capacity=full_cap)
+    t_full = timeit(lambda: run_tiled(op, state, tile=tile,
+                                      queue_capacity=full_cap))
+    emit("overflow/full_capacity", t_full,
+         f"cap={full_cap};overflows={int(st.overflow_events)}")
+    for frac in (0.5, 0.25, 0.125):
+        cap = max(1, int(full_cap * frac))
+        _, st = run_tiled(op, state, tile=tile, queue_capacity=cap)
+        t = timeit(lambda: run_tiled(op, state, tile=tile, queue_capacity=cap))
+        emit(f"overflow/cap={cap}", t,
+             f"overflow_rounds={int(st.overflow_events)};"
+             f"penalty={100 * (t - t_full) / t_full:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 1: queue design vs initialization depth.
+
+The paper varies the number of FH init raster scans (7..19) to shrink the
+initial queue, then compares Naive / prefix-sum (PF) / +thread-queue (TQ)
+GPU queue designs.  Our TPU analogues of increasing locality:
+
+  E0 sweep    — no wavefront tracking at all (queue-less lower bound;
+                the SR_GPU-style full-grid pass),
+  E1 frontier — wavefront tracked as a dense mask (Naive/PF analogue:
+                tracks the queue but pays full-grid bandwidth each round),
+  E2 tiled    — hierarchical: active-tile queue + VMEM-local drain (the
+                paper's TQ/BQ/GBQ multi-level design).
+
+Reported: initial frontier population, total queued work, and wall time
+per engine.  The paper's trend to reproduce: deeper init -> smaller queue
+-> faster wavefront phase; hierarchical queueing wins and its advantage
+grows as the wavefront sparsifies.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, morph_state, timeit
+from repro.core.frontier import run_dense
+from repro.core.tiles import run_tiled
+
+
+def main(size: int = 512):
+    for n_sweeps in (1, 2, 3, 4):
+        op, state = morph_state(size, coverage=1.0, seed=0, n_sweeps=n_sweeps)
+        init_q = int(jnp.sum(op.init_frontier(state)))
+        _, st = run_dense(op, state, "frontier")
+        total = int(st.sources_processed)
+        t0 = timeit(lambda: run_dense(op, state, "sweep"))
+        t1 = timeit(lambda: run_dense(op, state, "frontier"))
+        t2 = timeit(lambda: run_tiled(op, state, tile=128, queue_capacity=64))
+        emit(f"table1/sweeps={n_sweeps}/E0_sweep", t0,
+             f"init_q={init_q};total_q={total}")
+        emit(f"table1/sweeps={n_sweeps}/E1_frontier", t1,
+             f"speedup_vs_E0={t0 / t1:.2f}")
+        emit(f"table1/sweeps={n_sweeps}/E2_tiled", t2,
+             f"speedup_vs_E0={t0 / t2:.2f};vs_E1={t1 / t2:.2f}")
+
+
+if __name__ == "__main__":
+    main()

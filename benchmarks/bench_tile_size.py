@@ -1,0 +1,34 @@
+"""Paper Fig. 11 + Table 2: performance vs tile size.
+
+FH engine (init scans + wavefront phase) and the SR-style full-sweep
+baseline on morphological reconstruction, plus the EDT tile sweep.  The
+paper's trend: larger tiles amortize launch overheads up to a knee
+(16K x 16K on the GPU; scaled down for the CPU-hosted engines here).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import edt_state, emit, morph_state, timeit
+from repro.core.frontier import run_dense
+from repro.core.tiles import run_tiled
+
+
+def main(size: int = 512):
+    op, state = morph_state(size, coverage=1.0, seed=1, n_sweeps=1)
+    t_sr = timeit(lambda: run_dense(op, state, "sweep"))
+    emit("fig11/SR_sweep", t_sr, "baseline")
+    for tile in (64, 128, 256):
+        t = timeit(lambda: run_tiled(op, state, tile=tile, queue_capacity=64))
+        emit(f"fig11/FH_tiled/tile={tile}", t, f"speedup_vs_SR={t_sr / t:.2f}")
+
+    op2, st2 = edt_state(size, coverage=0.5, seed=2)
+    t_sweep = timeit(lambda: run_dense(op2, st2, "sweep"))
+    emit("table2/EDT_sweep", t_sweep, "baseline")
+    for tile in (64, 128, 256):
+        t = timeit(lambda: run_tiled(op2, st2, tile=tile, queue_capacity=64))
+        emit(f"table2/EDT_tiled/tile={tile}", t,
+             f"speedup_vs_sweep={t_sweep / t:.2f}")
+
+
+if __name__ == "__main__":
+    main()

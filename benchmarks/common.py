@@ -1,0 +1,56 @@
+"""Shared benchmark helpers: timing, CSV emission, workload builders."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.images import binary_blobs, tissue_image
+from repro.edt.ops import EdtOp
+from repro.morph.ops import MorphReconstructOp
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) (block_until_ready on pytrees)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
+
+
+def morph_state(size: int, coverage: float, seed: int = 0, n_sweeps: int = 0,
+                marker_kind: str = "seeded"):
+    """marker_kind: "seeded" (paper Fig. 1 markers-in-objects; sparse ring
+    wavefront) or "dense" (mask - h dome filling; dense wavefront)."""
+    marker, mask = tissue_image(size, size, coverage, seed)
+    if marker_kind == "seeded":
+        from repro.data.images import seeded_marker
+        marker = seeded_marker(mask, n_seeds=max(8, size // 20), seed=seed)
+    op = MorphReconstructOp(connectivity=8)
+    J = jnp.asarray(marker.astype(np.int32))
+    I = jnp.asarray(mask.astype(np.int32))
+    if n_sweeps:
+        from repro.morph.ops import fh_init
+        J = fh_init(J, I, n_sweeps=n_sweeps)
+    return op, op.make_state(J, I)
+
+
+def edt_state(size: int, coverage: float, seed: int = 0):
+    """Few concentrated background disks -> distances of O(size): the
+    long-propagation regime of the paper's whole-slide images."""
+    from repro.data.images import bg_disks
+    fg = bg_disks(size, size, min(coverage, 0.97), n_disks=6, seed=seed)
+    op = EdtOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(fg))

@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell (results/dryrun/*.json):
+  compute_s    = per-device HLO FLOPs / 197e12        (v5e bf16 peak)
+  memory_s     = per-device HLO bytes accessed / 819e9 (HBM bw)
+  collective_s = per-device collective wire bytes / 50e9 (ICI link bw)
+
+(cost_analysis() of the post-SPMD module is per-device, so the prompt's
+"HLO_FLOPs / (chips x peak)" with global FLOPs reduces to the same value.)
+
+MODEL_FLOPS uses the step kind: 6*N_active*tokens (train: fwd+bwd),
+2*N_active*tokens (prefill), 2*N_active*batch (decode, one token each).
+usefulness = MODEL_FLOPS / (per-device FLOPs x chips): how much of the
+compiled compute is "useful" model math (catches remat recompute, padding
+and dispatch waste).  roofline_fraction = model-flops-time / dominant-term
+time: the score of how close the cell is to its hardware bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from functools import lru_cache
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes / s / chip
+ICI_BW = 50e9             # bytes / s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@lru_cache(maxsize=None)
+def _n_active(arch: str) -> int:
+    from repro.configs.registry import get_config
+    from repro.models.counting import active_matmul_param_count
+    return active_matmul_param_count(get_config(arch))
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs.base import SHAPES
+    sh = SHAPES[shape_name]
+    n = _n_active(arch)
+    if sh.kind == "train":
+        return 6.0 * n * sh.global_batch * sh.seq_len
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len
+    return 2.0 * n * sh.global_batch          # decode: one token / sequence
+
+
+def analyze_cell(rec: dict) -> dict:
+    chips = int(np.prod(rec["mesh"]))
+    ca = rec.get("cost_analysis", {})
+    hc = rec.get("hlo_cost", {})
+    if "flops" in hc:          # loop-aware model (preferred; see hlocost.py)
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        wire_dev = hc["collectives"].get("total_wire_bytes", 0)
+    else:                      # raw cost_analysis (undercounts scan bodies)
+        flops_dev = ca.get("flops", 0.0)
+        bytes_dev = ca.get("bytes accessed", 0.0)
+        wire_dev = rec.get("collectives", {}).get("total_wire_bytes", 0)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_time = mf / (chips * PEAK_FLOPS)
+    bound = max(terms.values())
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "status": rec["status"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf,
+        "usefulness": mf / max(flops_dev * chips, 1.0),
+        "roofline_fraction": mf_time / max(bound, 1e-30),
+        "hbm_gib": (rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+                    + rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0))
+        / 2**30,
+        "tag": rec.get("tag", ""),
+    }
+    out["suggestion"] = _suggest(out)
+    return out
+
+
+def _suggest(c: dict) -> str:
+    if c["dominant"] == "collective":
+        return ("cut collective bytes: reshard to keep the dominant matmul "
+                "local, or overlap the gather under the scan body")
+    if c["dominant"] == "memory":
+        if c["usefulness"] < 0.4:
+            return ("memory-bound with low usefulness: remat recompute or "
+                    "padded dispatch dominates — relax remat / shrink buffers")
+        return ("memory-bound: raise arithmetic intensity (larger per-chip "
+                "microbatch, fuse the loss, bf16 cache)")
+    if c["usefulness"] < 0.5:
+        return ("compute-bound but <50% useful flops: eliminate recompute "
+                "(remat policy) or dispatch padding (MoE capacity)")
+    return "compute-bound and mostly useful flops: near roofline"
+
+
+def load_cells(mesh_kind: str, results_dir: str = RESULTS_DIR, tag: str = ""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, mesh_kind, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("tag", "") != tag:
+            continue
+        if rec["status"] != "ok":
+            cells.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "status": rec["status"]})
+            continue
+        cells.append(analyze_cell(rec))
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | dominant | compute_s | memory_s | collective_s | "
+           "roofline_frac | useful | HBM GiB | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for c in cells:
+        if c.get("status", "ok") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — "
+                        f"| — | {c['status']} |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | **{c['dominant']}** "
+            f"| {c['compute_s']:.4f} | {c['memory_s']:.4f} "
+            f"| {c['collective_s']:.4f} | {c['roofline_fraction']:.3f} "
+            f"| {c['usefulness']:.2f} | {c['hbm_gib']:.1f} "
+            f"| {c['suggestion']} |")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--results", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.mesh, args.results, args.tag)
+    table = markdown_table(cells)
+    print(table)
+    ok = [c for c in cells if c.get("status", "ok") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda c: c["roofline_fraction"])
+        coll = max(ok, key=lambda c: c["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:   {coll['arch']}/{coll['shape']} "
+              f"({coll['collective_s']:.3f}s)")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+    return cells
+
+
+if __name__ == "__main__":
+    main()

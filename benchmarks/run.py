@@ -1,0 +1,69 @@
+"""Benchmark entry point: one bench per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--size 512] [--quick] [--skip ...]
+
+Emits ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Wall-clock numbers are CPU-host engine times — they validate the paper's
+*trends* (queue design, tile size, coverage, overflow, scaling); the TPU
+roofline story lives in benchmarks/roofline.py over the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=512)
+    ap.add_argument("--quick", action="store_true",
+                    help="256px inputs, skip the multidevice subprocess bench")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args(argv)
+    size = 256 if args.quick else args.size
+
+    from benchmarks import (bench_coverage, bench_overflow,
+                            bench_queue_variants, bench_tile_size)
+    benches = [
+        ("queue_variants", lambda: bench_queue_variants.main(size)),
+        ("tile_size", lambda: bench_tile_size.main(size)),
+        ("coverage", lambda: bench_coverage.main(size)),
+        ("overflow", lambda: bench_overflow.main(size)),
+    ]
+    if not args.quick and "multidevice" not in args.skip:
+        from benchmarks import bench_multidevice
+        benches.append(("multidevice", lambda: bench_multidevice.main(size)))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if name in args.skip:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+    # roofline summary (if a dry-run sweep exists)
+    from benchmarks import roofline
+    for mesh in ("single", "multi"):
+        d = os.path.join(roofline.RESULTS_DIR, mesh)
+        if os.path.isdir(d) and os.listdir(d):
+            print(f"\n## roofline ({mesh}-pod)")
+            try:
+                roofline.main(["--mesh", mesh])
+            except Exception:  # noqa: BLE001
+                failures += 1
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

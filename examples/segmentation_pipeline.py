@@ -1,0 +1,86 @@
+"""The paper's motivating pipeline, end to end: whole-slide-style image ->
+IWPP operators -> patch features for a multimodal model.
+
+    PYTHONPATH=src python examples/segmentation_pipeline.py
+
+Stages (paper §1: segmentation substages built on these low-level ops):
+  1. synthetic tissue tile (marker/mask pair);
+  2. morphological reconstruction (tiled IWPP engine) — h-dome/noise
+     suppression, the paper's reconstruction-from-markers;
+  3. euclidean distance transform of the cleaned foreground (IWPP) —
+     the watershed-separation substrate;
+  4. local-maxima object markers from the distance map;
+  5. patch embeddings + M-RoPE position grid for the qwen2-vl-2b backbone
+     (its vision frontend is a stub per the assignment — the IWPP stages
+     here play the role of the preprocessing that feeds it), and one
+     forward pass of the reduced backbone over those patches.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import smoke_config
+from repro.core.tiles import run_tiled
+from repro.data.images import tissue_image
+from repro.edt.ops import EdtOp, distance_map
+from repro.models.transformer import forward, init_params
+from repro.morph.ops import MorphReconstructOp
+
+
+def main():
+    H = W = 256
+    marker, mask = tissue_image(H, W, coverage=0.7, seed=3)
+    print(f"[1] tissue tile {H}x{W}, fg={100 * (mask > 0).mean():.0f}%")
+
+    # 2. reconstruction: fills domes from the (mask - h) marker; the
+    #    difference mask - recon is the h-dome (bright object) map.
+    op = MorphReconstructOp(connectivity=8)
+    st = op.make_state(jnp.asarray(marker.astype(np.int32)),
+                       jnp.asarray(mask.astype(np.int32)))
+    out, stats = run_tiled(op, st, tile=64, queue_capacity=32)
+    recon = np.asarray(out["J"])
+    domes = mask.astype(np.int32) - recon
+    print(f"[2] reconstruction: {int(stats.tiles_processed)} tile drains; "
+          f"h-dome pixels: {(domes > 5).sum()}")
+
+    # 3. EDT on the cleaned foreground
+    fg = jnp.asarray(domes > 5)
+    eop = EdtOp(connectivity=8)
+    eout, _ = run_tiled(eop, eop.make_state(~fg), tile=64, queue_capacity=32)
+    dist = np.sqrt(np.asarray(distance_map(eout), np.float64))
+    print(f"[3] EDT: max interior distance {dist.max():.1f}px")
+
+    # 4. object markers = local maxima of the distance map (3x3)
+    pad = np.pad(dist, 1, constant_values=-1)
+    nb = np.stack([pad[1 + dr:H + 1 + dr, 1 + dc:W + 1 + dc]
+                   for dr in (-1, 0, 1) for dc in (-1, 0, 1)
+                   if (dr, dc) != (0, 0)])
+    peaks = (dist > 1.0) & (dist >= nb.max(axis=0))
+    print(f"[4] watershed markers: {int(peaks.sum())} object seeds")
+
+    # 5. patchify -> embeddings for the VLM backbone stub
+    cfg = smoke_config("qwen2-vl-2b")
+    P = 16
+    patches = dist.reshape(H // P, P, W // P, P).mean(axis=(1, 3))
+    n_patch = patches.size
+    feats = np.zeros((1, n_patch, cfg.d_model), np.float32)
+    feats[0, :, 0] = patches.reshape(-1) / max(patches.max(), 1e-6)
+    feats[0, :, 1] = peaks.reshape(H // P, P, W // P, P).sum(axis=(1, 3)) \
+                          .reshape(-1)
+    t = np.zeros(n_patch, np.int32)
+    hh, ww = np.mgrid[0:H // P, 0:W // P].astype(np.int32)
+    pos = np.stack([np.broadcast_to(t, (1, n_patch)),
+                    hh.reshape(1, -1), ww.reshape(1, -1)])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    hidden, _ = forward(params, cfg, {"embeds": jnp.asarray(feats),
+                                      "positions": jnp.asarray(pos)})
+    print(f"[5] qwen2-vl backbone over {n_patch} patch embeddings -> "
+          f"hidden {tuple(hidden.shape)}, finite="
+          f"{bool(jnp.isfinite(hidden.astype(jnp.float32)).all())}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

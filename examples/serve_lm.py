@@ -1,0 +1,58 @@
+"""Batched serving demo: continuous-batching engine over a small model.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch xlstm-350m] [--n 6]
+
+Submits more requests than slots; the engine prefillsinto free slots,
+decodes all active slots in one batched step, and recycles slots as
+requests finish.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--n", type=int, default=6, help="number of requests")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    pending = [Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, 8)
+                       .astype(np.int32), max_new=args.max_new)
+               for i in range(args.n)]
+    done = []
+    t0 = time.perf_counter()
+    steps = 0
+    while pending or eng.active:
+        while pending and eng.add_request(pending[0]):
+            print(f"[serve] admitted request {pending[0].rid} "
+                  f"(slots busy: {len(eng.active)}/{args.slots})")
+            pending.pop(0)
+        done.extend(eng.step())
+        steps += 1
+        for r in [d for d in done if d.out is not None][len(done) - 1:]:
+            pass
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in done)
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"[serve] req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
+    print(f"[serve] {len(done)} requests, {tokens} tokens in {dt:.1f}s "
+          f"({steps} engine steps, {tokens / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

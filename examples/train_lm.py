@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-parameter LM on the synthetic
+pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 30          # quick
+    PYTHONPATH=src python examples/train_lm.py --steps 300         # full
+
+The config is a gemma2-family block at ~100M params (8 layers, d=768,
+tied 32k vocab).  On a laptop-class CPU a step is a few seconds; on real
+accelerators point --arch at any registry config and launch via
+repro.launch.train with a mesh.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import get_config
+from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.data.pipeline import DataIterator
+from repro.models.counting import param_count
+from repro.models.transformer import init_params
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def config_100m():
+    base = get_config("gemma2-27b")
+    return dataclasses.replace(
+        base, name="gemma2-100m", n_layers=8, d_model=768, n_heads=8,
+        n_kv_heads=4, head_dim=96, d_ff=2048, vocab_size=32768,
+        attn_scale=(768 / 8) ** -0.5, window_pattern=(512, -1),
+        train_microbatches=1, remat="none")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args(argv)
+
+    cfg = config_100m()
+    print(f"[train_lm] {cfg.name}: {param_count(cfg) / 1e6:.1f}M params")
+    shape = ShapeSpec("ex", args.seq, args.batch, "train")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, st, _ = restore(args.ckpt_dir,
+                               like={"params": params, "opt": opt})
+        params, opt = st["params"], st["opt"]
+        print(f"[train_lm] restored step {start}")
+    step_fn = jax.jit(make_train_step(
+        cfg, OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)))
+    it = DataIterator(cfg, shape, start_step=start)
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        if step == start or (step + 1) % 10 == 0:
+            print(f"[train_lm] step {step + 1:4d} loss {float(m['loss']):.4f} "
+                  f"({(time.perf_counter() - t0):.0f}s)")
+        if ckpt and (step + 1) % 50 == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt})
+    if ckpt:
+        ckpt.wait()
+    print("[train_lm] done")
+
+
+if __name__ == "__main__":
+    main()

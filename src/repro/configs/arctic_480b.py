@@ -1,0 +1,29 @@
+"""arctic-480b [moe] — dense-MoE hybrid [hf:Snowflake/snowflake-arctic-base].
+
+35L d_model=7168 56H (GQA kv=8) vocab=32000.  128 experts top-2
+(d_expert=4864) computed in parallel with a dense residual FFN
+(d_ff=4864) on every layer — Arctic's dense+MoE architecture.  FSDP on
+(480B total parameters).
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    mlp="silu",
+    rope_theta=1e4,
+    moe=MoEConfig(n_experts=128, top_k=2, d_expert=4864, n_shared=0,
+                  capacity_factor=1.25),
+    dense_ff_residual=True,
+    fsdp=True,
+    train_microbatches=8,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

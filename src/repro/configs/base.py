@@ -1,0 +1,156 @@
+"""Architecture config system.
+
+One `ArchConfig` describes every assigned architecture (10 archs from the
+public pool, see configs/<id>.py) plus reduced smoke variants.  All fields
+that alter layer math are explicit; anything uncertain in the public record
+is marked `# ASSUMED` in the arch file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (deepseek-v2 / minicpm3)."""
+    q_lora_rank: Optional[int]   # None -> direct q projection
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    n_shared: int = 0             # shared (always-on) experts, deepseek-style
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    normalize_topk: bool = True   # renormalize top-k router probs
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma / Griffin recurrent block."""
+    lru_width: int
+    conv_width: int = 4
+    c_exponent: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor_m: float = 2.0       # mLSTM block up-projection
+    conv_width: int = 4
+    ffn_factor_s: float = 4.0 / 3.0  # FFN after sLSTM blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    """Whisper-style encoder-decoder."""
+    n_enc_layers: int
+    n_frames: int = 1500          # stub frontend output length (30 s clip)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    mlp: str = "silu"             # silu | gelu | geglu | sqrelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    embed_scale: bool = False     # gemma: multiply embeddings by sqrt(d)
+    post_norm: bool = False       # gemma2 pre+post sandwich norms
+    parallel_block: bool = False  # command-r style parallel attn+FFN
+
+    rope_theta: float = 1e4
+    mrope_sections: Optional[Tuple[int, int, int]] = None   # qwen2-vl
+    attn_logit_softcap: Optional[float] = None               # gemma2
+    final_logit_softcap: Optional[float] = None
+    attn_scale: Optional[float] = None    # override head_dim**-0.5
+    # per-layer sliding window; -1 = global.  None -> all global.
+    window_pattern: Optional[Tuple[int, ...]] = None
+
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    moe_layer_start: int = 0      # deepseek: first k layers dense
+    dense_ff_residual: bool = False  # arctic: dense FFN in parallel with MoE
+
+    # heterogeneous stacks: per-layer block kind, e.g. ("rec","rec","attn")
+    block_pattern: Optional[Tuple[str, ...]] = None
+    rglru: Optional[RGLRUConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    encdec: Optional[EncDecConfig] = None
+    embed_inputs: str = "tokens"  # tokens | embeds (vlm stub) | frames (audio stub)
+
+    # infra
+    scan_layers: bool = True
+    remat: str = "full"           # none | full | dots
+    train_microbatches: int = 1   # grad-accum splits of the global batch
+    fsdp: bool = False            # shard params (+opt) over the data axis
+    seq_shard_residual: bool = False  # megatron-SP style residual sharding
+    vocab_pad_multiple: int = 128
+    dtype: str = "bfloat16"
+    long_context_ok: bool = False  # sub-quadratic -> long_500k cell runs
+
+    source: str = ""
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def q_group(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def layer_kind(self, i: int) -> str:
+        if self.block_pattern is None:
+            return "attn"
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def window_for_layer(self, i: int) -> int:
+        if self.window_pattern is None:
+            return -1
+        return self.window_pattern[i % len(self.window_pattern)]
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (same four for every LM arch; see DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable_shapes(cfg: ArchConfig):
+    """Shapes that apply to this arch (long_500k gated on sub-quadratic)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.long_context_ok:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,28 @@
+"""command-r-plus-104b [dense] — [hf:CohereForAI/c4ai-command-r-plus].
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000.  Cohere parallel
+block (attention and FFN both read the same pre-norm; one residual add),
+no biases, rope_theta=75e6, tied embeddings with logit scaling
+(# ASSUMED: logit_scale folded into the tied head).  FSDP on.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    mlp="silu",
+    rope_theta=75e6,
+    parallel_block=True,
+    tie_embeddings=True,
+    fsdp=True,
+    train_microbatches=16,
+    source="hf:CohereForAI/c4ai-command-r-plus",
+)

@@ -1,0 +1,31 @@
+"""deepseek-v2-lite-16b [moe] — MLA + fine-grained MoE [arXiv:2405.04434; hf].
+
+27L d_model=2048 16H vocab=102400.  MLA: kv_lora_rank=512, qk_nope=128,
+qk_rope=64, v=128, no q-lora (lite).  MoE: 64 routed experts top-6 +
+2 shared experts, expert d_ff=1408; layer 0 is dense (d_ff=10944, hf
+config).  The assignment's bracket text mentions "160 routed" (full V2);
+the inline spec "64e top-6" matches V2-Lite and is what we build.
+"""
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=192,                     # qk_nope + qk_rope (MLA path)
+    d_ff=10944,                       # dense layer 0 (hf config)
+    vocab_size=102400,
+    mlp="silu",
+    rope_theta=1e4,
+    mla=MLAConfig(q_lora_rank=None, kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                  capacity_factor=1.25),
+    moe_layer_start=1,
+    train_microbatches=4,
+    source="arXiv:2405.04434; hf:deepseek-ai/DeepSeek-V2-Lite",
+)

@@ -1,0 +1,33 @@
+"""gemma2-27b [dense] — [arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.  Alternating
+local(4096)/global attention, attn logit softcap 50, final softcap 30,
+pre+post sandwich norms, GeGLU, embeddings scaled by sqrt(d), tied head,
+query scale (d_model/n_heads)^-1/2 = 144^-1/2.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    mlp="geglu",
+    rope_theta=1e4,
+    tie_embeddings=True,
+    embed_scale=True,
+    post_norm=True,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    attn_scale=(4608 / 32) ** -0.5,
+    window_pattern=(4096, -1),
+    norm_eps=1e-6,
+    train_microbatches=4,
+    source="arXiv:2408.00118; hf:google/gemma-2-27b",
+)

@@ -1,0 +1,28 @@
+"""minicpm3-4b [dense] — MLA attention [hf:openbmb/MiniCPM3-4B; hf].
+
+62L d_model=2560 40H d_ff=6400 vocab=73448.  Multi-head Latent Attention:
+q_lora_rank=768, kv_lora_rank=256, qk_nope=64, qk_rope=32, v_head_dim=64
+(hf config).  # ASSUMED: mup-style embedding/depth scaling factors of the
+original are folded into init and omitted from layer math.
+"""
+
+from repro.configs.base import ArchConfig, MLAConfig
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=96,                      # qk_nope + qk_rope (derived; MLA path)
+    d_ff=6400,
+    vocab_size=73448,
+    mlp="silu",
+    rope_theta=1e4,
+    tie_embeddings=True,
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_head_dim=64,
+                  qk_rope_head_dim=32, v_head_dim=64),
+    train_microbatches=4,
+    source="hf:openbmb/MiniCPM3-4B",
+)

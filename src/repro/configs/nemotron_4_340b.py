@@ -1,0 +1,26 @@
+"""nemotron-4-340b [dense] — [arXiv:2402.16819; unverified].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000; squared-ReLU MLP
+(no gating).  # ASSUMED: full-dim RoPE (the paper reports rotary pct 50%;
+partial-rope omitted), no bias terms.  FSDP on: 340B params do not fit
+replicated on a 16-chip model axis.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp="sqrelu",
+    rope_theta=1e4,
+    fsdp=True,
+    train_microbatches=16,
+    source="arXiv:2402.16819",
+)

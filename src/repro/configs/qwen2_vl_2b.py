@@ -1,0 +1,29 @@
+"""qwen2-vl-2b [vlm] — Qwen2-VL 2B backbone [arXiv:2409.12191; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.  M-RoPE with
+(t, h, w) position ids; dynamic-resolution vision frontend is a STUB —
+`input_specs` feeds precomputed patch/text embeddings plus the (3, B, S)
+M-RoPE position grid, per the assignment.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    mlp="silu",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),      # sum = head_dim/2 = 64
+    tie_embeddings=True,
+    embed_inputs="embeds",
+    norm_eps=1e-6,
+    train_microbatches=2,
+    source="arXiv:2409.12191; hf:Qwen/Qwen2-VL-2B-Instruct",
+)

@@ -1,0 +1,32 @@
+"""recurrentgemma-2b [hybrid] — Griffin 1:2 pattern [arXiv:2402.19427; hf].
+
+26L d_model=2560 10H (MQA kv=1, head_dim 256) d_ff=7680 vocab=256000.
+Layer pattern (rec, rec, attn) cycling; attention layers use a 2048 local
+window; recurrent block = dual up-projection (GeLU gate x conv1d+RG-LRU),
+lru_width=2560.  Sub-quadratic -> the long_500k cell runs (state is O(1)
+in context: RG-LRU hidden + 2048-window KV).
+"""
+
+from repro.configs.base import ArchConfig, RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    mlp="geglu",
+    rope_theta=1e4,
+    tie_embeddings=True,
+    embed_scale=True,
+    block_pattern=("rec", "rec", "attn"),
+    window_pattern=(2048,),           # applies to the attn layers
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4, c_exponent=8.0),
+    long_context_ok=True,
+    train_microbatches=2,
+    source="arXiv:2402.19427; hf:google/recurrentgemma-2b",
+)

@@ -1,0 +1,147 @@
+"""Arch registry: full configs, reduced smoke variants, and input specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of a (arch x shape) cell — weak-type-correct, shardable, no device
+allocation — exactly what `jax.jit(...).lower()` consumes in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, EncDecConfig, MLAConfig, MoEConfig,
+                                RGLRUConfig, ShapeSpec, SHAPES, XLSTMConfig,
+                                runnable_shapes)
+
+from repro.configs import (arctic_480b, command_r_plus_104b,
+                           deepseek_v2_lite_16b, gemma2_27b, minicpm3_4b,
+                           nemotron_4_340b, qwen2_vl_2b, recurrentgemma_2b,
+                           whisper_small, xlstm_350m)
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c for c in [
+        qwen2_vl_2b.CONFIG,
+        nemotron_4_340b.CONFIG,
+        minicpm3_4b.CONFIG,
+        gemma2_27b.CONFIG,
+        command_r_plus_104b.CONFIG,
+        recurrentgemma_2b.CONFIG,
+        xlstm_350m.CONFIG,
+        deepseek_v2_lite_16b.CONFIG,
+        arctic_480b.CONFIG,
+        whisper_small.CONFIG,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family config: small layers/width/experts/vocab.
+
+    Keeps every structural feature (MLA, MoE, block pattern, windows,
+    softcaps, enc-dec) so the smoke test exercises the same code paths as
+    the full config.
+    """
+    cfg = get_config(name)
+    n_heads = 4
+    n_kv = max(1, min(cfg.n_kv_heads * n_heads // max(cfg.n_heads, 1), n_heads))
+    if cfg.n_kv_heads == cfg.n_heads:
+        n_kv = n_heads
+    head_dim = 16
+    d_model = n_heads * head_dim * 2          # 128
+    # keep >= 2 pattern periods for heterogeneous stacks
+    if cfg.block_pattern is not None:
+        n_layers = 2 * len(cfg.block_pattern)
+    else:
+        n_layers = 4
+    repl = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=max(1, min(cfg.d_ff, 256)) if cfg.d_ff else 0,
+        vocab_size=512,
+        vocab_pad_multiple=64,
+        remat="none",
+        fsdp=False,
+    )
+    if cfg.attn_scale is not None:
+        repl["attn_scale"] = (d_model / n_heads) ** -0.5
+    if cfg.window_pattern is not None:
+        repl["window_pattern"] = tuple(min(w, 32) if w > 0 else w
+                                       for w in cfg.window_pattern)
+    if cfg.mla is not None:
+        repl["mla"] = MLAConfig(
+            q_lora_rank=32 if cfg.mla.q_lora_rank else None,
+            kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8,
+            v_head_dim=16)
+    if cfg.moe is not None:
+        repl["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=min(cfg.moe.top_k, 2), d_expert=64,
+            n_shared=min(cfg.moe.n_shared, 1))
+    if cfg.rglru is not None:
+        repl["rglru"] = RGLRUConfig(lru_width=d_model, conv_width=4)
+    if cfg.encdec is not None:
+        repl["encdec"] = EncDecConfig(n_enc_layers=2, n_frames=16)
+    if cfg.mrope_sections is not None:
+        repl["mrope_sections"] = (2, 3, 3)    # sum = head_dim/2 = 8
+    return dataclasses.replace(cfg, **repl)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *, batch_override=None):
+    """Model inputs for the cell, as ShapeDtypeStructs.
+
+    train   -> {tokens/embeds..., labels}
+    prefill -> {tokens/embeds...}
+    decode  -> {tokens/embeds (one step)}; the KV cache spec comes from
+               `jax.eval_shape(init_decode_cache, ...)` in the dry-run.
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.embed_inputs == "embeds":
+            specs["embeds"] = _sds((B, S, cfg.d_model), dt)
+            specs["positions"] = _sds((3, B, S), jnp.int32)
+        else:
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.encdec is not None:
+            specs["frames"] = _sds((B, cfg.encdec.n_frames, cfg.d_model), dt)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        if cfg.embed_inputs == "embeds":
+            specs["tokens"] = _sds((B, cfg.d_model), dt)
+        else:
+            specs["tokens"] = _sds((B,), jnp.int32)
+    return specs
+
+
+def all_cells():
+    """Every (arch, shape) cell with its run/skip status."""
+    cells = []
+    for name, cfg in ARCHS.items():
+        runnable = set(runnable_shapes(cfg))
+        for sname, sh in SHAPES.items():
+            status = "run" if sname in runnable else "skip:full-attention"
+            cells.append((name, sname, status))
+    return cells

@@ -1,0 +1,28 @@
+"""whisper-small [audio] — encoder-decoder [arXiv:2212.04356; unverified].
+
+12L decoder (+12L encoder) d_model=768 12H d_ff=3072 vocab=51865.  The
+conv frontend is a STUB per the assignment: `input_specs` provides 1500
+precomputed frame embeddings (B, 1500, 768).  Absolute positions
+(sinusoidal encoder / learned decoder), no RoPE.  # ASSUMED: RMSNorm
+without bias in place of LayerNorm+bias; learned decoder positions
+extended to 32768 for the synthetic decode_32k cell.
+"""
+
+from repro.configs.base import ArchConfig, EncDecConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    mlp="gelu",
+    tie_embeddings=True,
+    encdec=EncDecConfig(n_enc_layers=12, n_frames=1500),
+    embed_inputs="tokens",
+    source="arXiv:2212.04356; hf:openai/whisper-small",
+)

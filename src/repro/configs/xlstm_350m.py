@@ -1,0 +1,26 @@
+"""xlstm-350m [ssm] — xLSTM[7:1] [arXiv:2405.04517; unverified].
+
+24L d_model=1024 4 heads vocab=50304, d_ff=0 (mLSTM blocks carry their own
+2x up-projection; sLSTM blocks carry a 4/3 GeLU FFN).  Pattern: 7 mLSTM
+then 1 sLSTM, repeated (3 sLSTM blocks total).  Matrix/scalar memory ->
+O(1) decode state -> the long_500k cell runs.
+"""
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab_size=50304,
+    mlp="gelu",
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    xlstm=XLSTMConfig(proj_factor_m=2.0, conv_width=4, ffn_factor_s=4.0 / 3.0),
+    long_context_ok=True,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,134 @@
+"""E3: multi-device IWPP via shard_map — the paper's §4 strategy on a mesh.
+
+The grid is partitioned into one block per device over a 2-D device grid
+(rows over the first mesh axis, columns over the second).  Each global round
+is exactly the paper's TP/BP pipeline:
+
+  TP (Tile Propagation)  -> every device drains its local block to stability
+                            (dense frontier rounds — E1 — or the tiled E2);
+  BP (Border Propagation)-> halo exchange of the 1-px border ring with the
+                            4 mesh neighbors via `lax.ppermute` (two-step:
+                            columns first, then rows of the column-extended
+                            block, so corners arrive transitively);
+  convergence            -> `lax.psum` of per-device "changed" flags; the
+                            outer `while_loop` stops when no device changed
+                            (paper: "until no more intra- and inter-tile
+                            propagations").
+
+Restarting local propagation from received halos is seeded only at the
+border ring — the frontier of the next TP stage is the set of pixels the
+halo actually improved, which is the paper's "propagations initiated from
+the borders".
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.pattern import PropagationOp, tree_shape
+
+
+def _shift_axis(x, axis_name: str, direction: int, fill, mesh_axis_size: int):
+    """ppermute x to the neighbor `direction` steps along `axis_name`.
+
+    Device i receives from device i - direction; edge devices receive
+    `fill` (non-periodic boundary).
+    """
+    n = mesh_axis_size
+    perm = [(i, i + direction) for i in range(n) if 0 <= i + direction < n]
+    y = jax.lax.ppermute(x, axis_name, perm)
+    idx = jax.lax.axis_index(axis_name)
+    # Devices with no sender hold garbage/zeros -> overwrite with fill.
+    no_sender = (idx == 0) if direction > 0 else (idx == n - 1)
+    return jnp.where(no_sender, jnp.full_like(y, fill), y)
+
+
+def _exchange_halo(block, pad_vals, axes: Tuple[str, str], mesh_shape):
+    """Build the (h+2, w+2) halo-extended block from mesh neighbors."""
+    row_ax, col_ax = axes
+    nrows, ncols = mesh_shape
+
+    def extend(x, fill):
+        h, w = x.shape[-2:]
+        # columns: my left edge goes right, so I receive neighbor's right edge
+        left_halo = _shift_axis(x[..., :, w - 1 : w], col_ax, +1, fill, ncols)
+        right_halo = _shift_axis(x[..., :, 0:1], col_ax, -1, fill, ncols)
+        xe = jnp.concatenate([left_halo, x, right_halo], axis=-1)
+        top_halo = _shift_axis(xe[..., h - 1 : h, :], row_ax, +1, fill, nrows)
+        bot_halo = _shift_axis(xe[..., 0:1, :], row_ax, -1, fill, nrows)
+        return jnp.concatenate([top_halo, xe, bot_halo], axis=-2)
+
+    return jax.tree_util.tree_map(extend, block, pad_vals)
+
+
+def _local_drain(op: PropagationOp, block, frontier, max_iters: int = 1_000_000):
+    def cond(c):
+        _, f, it = c
+        return jnp.any(f) & (it < max_iters)
+
+    def body(c):
+        blk, f, it = c
+        blk, f = op.round(blk, f)
+        return blk, f, it + 1
+
+    block, _, iters = jax.lax.while_loop(cond, body, (block, frontier, jnp.int32(0)))
+    return block, iters
+
+
+def run_sharded(op: PropagationOp, state, mesh: Mesh,
+                axes: Tuple[str, str] = ("data", "model")):
+    """Run `op` to the global fixed point on `mesh`.
+
+    `state` leaves are (..., H, W) with H divisible by mesh.shape[axes[0]]
+    and W by mesh.shape[axes[1]].
+    """
+    row_ax, col_ax = axes
+    nrows, ncols = mesh.shape[row_ax], mesh.shape[col_ax]
+    H, W = tree_shape(state)
+    assert H % nrows == 0 and W % ncols == 0, (H, W, nrows, ncols)
+    pad_vals = op.pad_value(state)
+
+    spec = jax.tree_util.tree_map(
+        lambda x: P(*([None] * (x.ndim - 2) + [row_ax, col_ax])), state)
+
+    def device_fn(block):
+        # TP round 0: local drain from the op's own init frontier.
+        f0 = op.init_frontier(block)
+        block, _ = _local_drain(op, block, f0)
+
+        def cond(carry):
+            _, changed, it = carry
+            return changed & (it < 10_000)
+
+        def body(carry):
+            block, _, it = carry
+            # BP: halo exchange, then one masked round sourcing only from the
+            # halo ring, to find which border pixels the neighbors improved.
+            ext = _exchange_halo(block, pad_vals, (row_ax, col_ax), (nrows, ncols))
+            h, w = tree_shape(block)
+            halo_frontier = jnp.zeros((h + 2, w + 2), dtype=bool)
+            halo_frontier = halo_frontier.at[0, :].set(True).at[-1, :].set(True)
+            halo_frontier = halo_frontier.at[:, 0].set(True).at[:, -1].set(True)
+            ext_new, f_ext = op.round(ext, halo_frontier)
+            inner = lambda x: x[..., 1:-1, 1:-1]
+            block = jax.tree_util.tree_map(lambda _, b: inner(b), block, ext_new)
+            f_in = inner(f_ext)
+            # TP: drain local propagation seeded by improved border pixels.
+            block, _ = _local_drain(op, block, f_in)
+            changed_local = jnp.any(f_in)
+            changed = jax.lax.psum(changed_local.astype(jnp.int32), (row_ax, col_ax)) > 0
+            return block, changed, it + 1
+
+        block, _, rounds = jax.lax.while_loop(cond, body, (block, jnp.bool_(True), jnp.int32(0)))
+        return block, rounds
+
+    fn = jax.shard_map(
+        device_fn, mesh=mesh, in_specs=(spec,),
+        out_specs=(spec, P()), check_vma=False)
+    out, rounds = jax.jit(fn)(state)
+    return out, rounds

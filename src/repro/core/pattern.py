@@ -1,0 +1,95 @@
+"""The Irregular Wavefront Propagation Pattern (IWPP) abstraction.
+
+Paper Algorithm 1, re-expressed for a SIMD/vector machine: instead of a
+queue of *pixels* mutated by atomics, the wavefront is a boolean *frontier*
+plane and one `round` applies every queued propagation simultaneously:
+
+    state', frontier' = op.round(state, frontier)
+
+The update rule must be commutative + monotone (paper §3.1's atomicity
+requirement); under that contract the bulk-synchronous rounds reach the same
+fixed point as the sequential queue, in any processing order.  Engines
+(`core.frontier`, `core.tiles`, `core.distributed`) drive `round` with
+different work-tracking granularities — the TPU analogue of the paper's
+Naive / prefix-sum / multi-level-queue designs.
+
+A `PropagationOp` owns:
+  * ``state``      — pytree of (H, W) arrays (all leaves same spatial shape).
+  * ``pad_value``  — pytree of scalars: *neutral* halo fill per leaf.  A cell
+    holding its neutral value can never propagate (morph: dtype-min; EDT:
+    far sentinel coords).
+  * ``init_frontier(state)`` — initial wavefront (paper line 3).
+  * ``round(state, frontier)`` — one bulk propagation round (lines 5-12).
+  * ``stable_leaves``          — names of leaves that never change (masks),
+    used by engines to skip writeback work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+N8_OFFSETS = ((-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1))
+N4_OFFSETS = ((-1, 0), (0, -1), (0, 1), (1, 0))
+
+
+def offsets_for(connectivity: int):
+    if connectivity == 8:
+        return N8_OFFSETS
+    if connectivity == 4:
+        return N4_OFFSETS
+    raise ValueError(f"connectivity must be 4 or 8, got {connectivity}")
+
+
+def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
+    """out[r, c] = x[r + dr, c + dc], out-of-bounds cells = ``fill``.
+
+    Static offsets in {-1, 0, 1}; compiles to pad+slice (no gather), which
+    is the vector-friendly formulation on TPU.
+    """
+    H, W = x.shape[-2], x.shape[-1]
+    pad = [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)]
+    xp = jnp.pad(x, pad, constant_values=fill)
+    return jax.lax.slice_in_dim(
+        jax.lax.slice_in_dim(xp, 1 + dr, 1 + dr + H, axis=x.ndim - 2),
+        1 + dc, 1 + dc + W, axis=x.ndim - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PropagationOp:
+    """Bundle of the pattern's plug points (duck-typed; subclasses override)."""
+
+    connectivity: int = 8
+
+    @property
+    def offsets(self):
+        return offsets_for(self.connectivity)
+
+    @property
+    def static_leaves(self):
+        """State leaves that rounds never modify (skipped at writeback)."""
+        return ("valid",)
+
+    # -- interface ---------------------------------------------------------
+    def init_frontier(self, state) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def round(self, state, frontier) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError
+
+    def pad_value(self, state):
+        """Pytree (same structure as state) of neutral scalars."""
+        raise NotImplementedError
+
+    # -- shared helpers ----------------------------------------------------
+    def changed_any(self, frontier) -> jnp.ndarray:
+        return jnp.any(frontier)
+
+
+def tree_shape(state):
+    leaf = jax.tree_util.tree_leaves(state)[0]
+    return leaf.shape[-2], leaf.shape[-1]

@@ -1,0 +1,184 @@
+"""Demand-driven host tile scheduler — the paper's runtime (§4, Fig. 8).
+
+The paper dispatches Tile-Propagation (TP) task instances to CPU cores and
+GPUs demand-driven (FCFS) and re-instantiates the pipeline when Border
+Propagation (BP) finds cross-tile waves.  This module reproduces that
+runtime at the host level with worker threads over jitted tile tasks.  It
+is the *CPU path* of the framework and the substrate of the fault-tolerance
+story:
+
+* demand-driven FCFS queue -> natural straggler mitigation (fast workers
+  take more tiles, exactly the paper's load-balance argument);
+* IWPP updates are monotone + commutative and tiles are re-executable from
+  current state, so a worker failure is handled by re-queuing its tile —
+  the same §5.2.4 argument that makes queue overflow benign.
+
+Threads genuinely overlap because jitted JAX CPU computations release the
+GIL.  Writes are per-tile-interior (disjoint); halos are read under the
+array lock, so a stale read at worst re-queues a tile (never corrupts).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Set, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SchedulerStats:
+    tiles_processed: int = 0
+    rounds: int = 0
+    requeues_from_failures: int = 0
+    per_worker: Dict[int, int] = field(default_factory=dict)
+
+
+class TileScheduler:
+    """FCFS demand-driven scheduler over a shared 2-D state.
+
+    Parameters
+    ----------
+    state : dict of str -> np.ndarray, all (H, W)-shaped trailing dims.
+    tile_fn : callable (block_state, ) -> (new_block_state, border_changed)
+        Drains one (T+2, T+2) halo block to local stability.  ``border_changed``
+        is a dict with keys 'top','bottom','left','right' of python bools.
+    init_active : boolean (nty, ntx) array of initially-active tiles.
+    """
+
+    def __init__(self, state: Dict[str, np.ndarray], tile: int,
+                 tile_fn: Callable, init_active: np.ndarray,
+                 n_workers: int = 4, mutable=("J",),
+                 merge_fn: Optional[Callable] = None,
+                 fail_worker: Optional[int] = None, fail_after: int = 3):
+        H, W = next(iter(state.values())).shape[-2:]
+        assert H % tile == 0 and W % tile == 0, "host scheduler expects tile-aligned grids"
+        self.state = state
+        self.tile = tile
+        self.tile_fn = tile_fn
+        self.nty, self.ntx = H // tile, W // tile
+        self.n_workers = n_workers
+        self.mutable = mutable
+        # Commutative merge at write-back — the scheduler analogue of the
+        # paper's atomicMax/atomicCAS: a worker that raced with a fresher
+        # update must not regress it.  Default: elementwise max (morph).
+        self.merge_fn = merge_fn or (lambda key, old, new: np.maximum(old, new))
+        self.fail_worker = fail_worker
+        self.fail_after = fail_after
+        self._lock = threading.Lock()
+        self._q: "queue.Queue[Tuple[int, int]]" = queue.Queue()
+        self._in_queue: Set[Tuple[int, int]] = set()
+        self._inflight = 0
+        self._done = threading.Condition(self._lock)
+        self.stats = SchedulerStats()
+        for ty in range(self.nty):
+            for tx in range(self.ntx):
+                if init_active[ty, tx]:
+                    self._push((ty, tx))
+
+    # -- queue ops (lock held) ---------------------------------------------
+    def _push(self, tid):
+        if tid not in self._in_queue:
+            self._in_queue.add(tid)
+            self._q.put(tid)
+
+    def _slice_block(self, ty, tx):
+        T = self.tile
+        H, W = next(iter(self.state.values())).shape[-2:]
+        r0, c0 = ty * T, tx * T
+        out = {}
+        for k, arr in self.state.items():
+            pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
+                                                   if arr.dtype.kind in "iu" else -np.inf)
+            blk = np.full(arr.shape[:-2] + (T + 2, T + 2), pad_val, dtype=arr.dtype)
+            rs, re = max(0, r0 - 1), min(H, r0 + T + 1)
+            cs, ce = max(0, c0 - 1), min(W, c0 + T + 1)
+            blk[..., rs - (r0 - 1): rs - (r0 - 1) + (re - rs),
+                cs - (c0 - 1): cs - (c0 - 1) + (ce - cs)] = arr[..., rs:re, cs:ce]
+            out[k] = blk
+        return out
+
+    def _write_back(self, ty, tx, block) -> Dict[str, bool]:
+        T = self.tile
+        r0, c0 = ty * T, tx * T
+        changed_edges = {"top": False, "bottom": False, "left": False, "right": False}
+        for k in self.mutable:
+            new_inner = np.asarray(block[k])[..., 1:-1, 1:-1]
+            old_inner = self.state[k][..., r0:r0 + T, c0:c0 + T]
+            merged = self.merge_fn(k, old_inner, new_inner)
+            diff = merged != old_inner
+            if diff.any():
+                changed_edges["top"] |= bool(diff[..., 0, :].any())
+                changed_edges["bottom"] |= bool(diff[..., -1, :].any())
+                changed_edges["left"] |= bool(diff[..., :, 0].any())
+                changed_edges["right"] |= bool(diff[..., :, -1].any())
+                self.state[k][..., r0:r0 + T, c0:c0 + T] = merged
+        return changed_edges
+
+    def _mark_neighbors(self, ty, tx, edges):
+        def m(dy, dx):
+            yy, xx = ty + dy, tx + dx
+            if 0 <= yy < self.nty and 0 <= xx < self.ntx:
+                self._push((yy, xx))
+        if edges["top"]:
+            m(-1, -1); m(-1, 0); m(-1, 1)
+        if edges["bottom"]:
+            m(1, -1); m(1, 0); m(1, 1)
+        if edges["left"]:
+            m(-1, -1); m(0, -1); m(1, -1)
+        if edges["right"]:
+            m(-1, 1); m(0, 1); m(1, 1)
+
+    # -- worker loop ---------------------------------------------------------
+    def _worker(self, wid: int):
+        n_done = 0
+        while True:
+            try:
+                tid = self._q.get(timeout=0.05)
+            except queue.Empty:
+                with self._lock:
+                    if self._inflight == 0 and self._q.empty():
+                        return
+                continue
+            with self._lock:
+                self._inflight += 1
+                self._in_queue.discard(tid)
+                block = self._slice_block(*tid)
+            try:
+                if self.fail_worker == wid and n_done >= self.fail_after:
+                    raise RuntimeError(f"injected failure on worker {wid}")
+                new_block, _ = self.tile_fn(block)
+                with self._lock:
+                    edges = self._write_back(*tid, new_block)
+                    self._mark_neighbors(*tid, edges)
+                    self.stats.tiles_processed += 1
+                    self.stats.per_worker[wid] = self.stats.per_worker.get(wid, 0) + 1
+                    n_done += 1
+            except Exception:
+                # Fault tolerance: re-queue the tile; state untouched (tiles
+                # are idempotent under IWPP's monotone commutative updates).
+                with self._lock:
+                    self._push(tid)
+                    self.stats.requeues_from_failures += 1
+                    self._inflight -= 1
+                return  # worker dies; remaining workers pick up the slack
+            with self._lock:
+                self._inflight -= 1
+
+    def run(self) -> SchedulerStats:
+        workers = [threading.Thread(target=self._worker, args=(w,), daemon=True)
+                   for w in range(self.n_workers)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join()
+        if not self._q.empty():  # killed workers left work behind
+            survivors = [threading.Thread(target=self._worker, args=(self.n_workers + w,), daemon=True)
+                         for w in range(max(1, self.n_workers - 1))]
+            for t in survivors:
+                t.start()
+            for t in survivors:
+                t.join()
+        return self.stats

@@ -1,0 +1,190 @@
+"""E2: the tiled active-set engine — TPU analogue of the paper's
+multi-level queue (§3.2).
+
+Hierarchy mapping (DESIGN.md §2):
+  * within a tile, propagation is dense vector work in VMEM (BQ analogue);
+    the tile iterates *locally to stability* before returning — one "queue
+    drain" per activation, amortizing HBM traffic exactly like the paper
+    amortizes shared-memory traffic;
+  * across tiles, a fixed-capacity **active-tile queue** lives at the outer
+    level (GBQ analogue).  Each outer round compacts the active bitmap into
+    at most ``queue_capacity`` tile ids (`jnp.where(..., size=)` — the
+    prefix-sum of the paper, done by XLA), processes them sequentially under
+    `lax.scan` (monotone commutative updates make any order valid), and
+    marks neighbor tiles whose halo became stale.
+  * overflow: tiles beyond capacity are simply *retained* in the bitmap for
+    the next round — the same re-execution-from-partial-output semantics as
+    the paper's §5.2.4 GBQ overflow, without ever dropping information.
+
+The engine is fully jittable; the per-tile inner solver can be swapped for
+the Pallas kernel (`repro.kernels.ops`) via ``tile_solver``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pattern import PropagationOp, tree_shape
+
+
+class TileStats(NamedTuple):
+    outer_rounds: jnp.ndarray
+    tiles_processed: jnp.ndarray
+    overflow_events: jnp.ndarray   # rounds where active > capacity (paper §5.2.4)
+
+
+def _pad_state(op, state, tile: int):
+    """Pad spatially: +1 halo ring plus padding up to a tile multiple.
+
+    Extra padding area is marked invalid; neutral fill values guarantee the
+    padding can never propagate (see PropagationOp.pad_value contract).
+    """
+    H, W = tree_shape(state)
+    Ht = -(-H // tile) * tile
+    Wt = -(-W // tile) * tile
+    pads = ((1, Ht - H + 1), (1, Wt - W + 1))
+    pv = op.pad_value(state)
+    padded = jax.tree_util.tree_map(
+        lambda x, v: jnp.pad(x, [(0, 0)] * (x.ndim - 2) + list(pads), constant_values=v),
+        state, pv)
+    return padded, (H, W, Ht // tile, Wt // tile)
+
+
+def _tile_local_solve(op: PropagationOp, block, max_iters: int):
+    """Drain one tile: dense rounds on the (T+2, T+2) halo block until stable.
+
+    Seeded with an all-true frontier (halo included) so incoming halo values
+    propagate inward on the first round.
+    """
+    frontier0 = jnp.ones(tree_shape(block), dtype=bool)
+
+    def cond(c):
+        _, f, it = c
+        return jnp.any(f) & (it < max_iters)
+
+    def body(c):
+        blk, f, it = c
+        blk, f = op.round(blk, f)
+        return blk, f, it + 1
+
+    block, _, _ = jax.lax.while_loop(cond, body, (block, frontier0, jnp.int32(0)))
+    return block
+
+
+def initial_active_tiles(op: PropagationOp, state, tile: int,
+                         nty: int = None, ntx: int = None):
+    """Tiles containing (or *adjacent to*) an initial-frontier pixel.
+
+    The frontier condition marks *source* pixels; a source on a tile border
+    must also activate the receiving tile (its own tile may drain without
+    any interior change, producing no neighbor marks).  Hence the 1-px
+    dilation before the per-tile reduction.
+    """
+    H, W = tree_shape(state)
+    if nty is None:
+        nty, ntx = -(-H // tile), -(-W // tile)
+    f0 = op.init_frontier(state)
+    dil = f0
+    for dr, dc in op.offsets:
+        from repro.core.pattern import shift2d
+        dil = dil | shift2d(f0, dr, dc, False)
+    fp = jnp.pad(dil, ((0, nty * tile - H), (0, ntx * tile - W)))
+    return fp.reshape(nty, tile, ntx, tile).any(axis=(1, 3))
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5))
+def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 256,
+              max_outer_rounds: int = 100_000,
+              tile_solver: Optional[Callable] = None):
+    """Run `op` to the global fixed point with the tiled active-set engine."""
+    solver = tile_solver or (lambda blk: _tile_local_solve(op, blk, max_iters=4 * tile))
+    padded, (H, W, nty, ntx) = _pad_state(op, state, tile)
+    # a queue longer than the tile grid only adds dead scan slots
+    queue_capacity = min(queue_capacity, nty * ntx)
+
+    active0 = initial_active_tiles(op, state, tile, nty, ntx)
+
+    mutable = [k for k in padded.keys() if k not in op.static_leaves]
+
+    def process_tile(carry, tid):
+        padded = carry
+        ty = tid // ntx
+        tx = tid % ntx
+
+        def do(padded):
+            start = (ty * tile, tx * tile)
+            block = jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_slice(
+                    x, (0,) * (x.ndim - 2) + start,
+                    x.shape[:-2] + (tile + 2, tile + 2)),
+                padded)
+            pre = {k: block[k] for k in mutable}
+            block = solver(block)
+            # Write back interior only.
+            def wb(x, b):
+                inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
+                                      b.shape[:-2] + (tile + 1, tile + 1))
+                return jax.lax.dynamic_update_slice(
+                    x, inner, (0,) * (x.ndim - 2) + (start[0] + 1, start[1] + 1))
+            new_padded = dict(padded)
+            for k in mutable:
+                new_padded[k] = wb(padded[k], block[k])
+
+            # Which edges of the interior changed?  (drives neighbor marking)
+            def edge_changed(sel):
+                return jnp.array([jnp.any(pre[k][sel] != block[k][sel]) for k in mutable]).any()
+            i0, i1 = 1, tile + 1
+            top = edge_changed((Ellipsis, slice(i0, i0 + 1), slice(i0, i1)))
+            bot = edge_changed((Ellipsis, slice(i1 - 1, i1), slice(i0, i1)))
+            lef = edge_changed((Ellipsis, slice(i0, i1), slice(i0, i0 + 1)))
+            rig = edge_changed((Ellipsis, slice(i0, i1), slice(i1 - 1, i1)))
+            marks = jnp.zeros((nty, ntx), dtype=bool)
+            def mark(m, dy, dx, flag):
+                yy = jnp.clip(ty + dy, 0, nty - 1)
+                xx = jnp.clip(tx + dx, 0, ntx - 1)
+                inb = ((ty + dy) >= 0) & ((ty + dy) < nty) & ((tx + dx) >= 0) & ((tx + dx) < ntx)
+                return m.at[yy, xx].max(flag & inb)
+            marks = mark(marks, -1, 0, top); marks = mark(marks, -1, -1, top | lef)
+            marks = mark(marks, -1, 1, top | rig); marks = mark(marks, 1, 0, bot)
+            marks = mark(marks, 1, -1, bot | lef); marks = mark(marks, 1, 1, bot | rig)
+            marks = mark(marks, 0, -1, lef); marks = mark(marks, 0, 1, rig)
+            return new_padded, marks
+
+        def skip(padded):
+            return padded, jnp.zeros((nty, ntx), dtype=bool)
+
+        padded, marks = jax.lax.cond(tid >= 0, do, skip, padded)
+        return padded, marks
+
+    def outer_cond(carry):
+        padded, active, stats = carry
+        return jnp.any(active) & (stats.outer_rounds < max_outer_rounds)
+
+    def outer_body(carry):
+        padded, active, stats = carry
+        flat = active.reshape(-1)
+        (ids,) = jnp.where(flat, size=queue_capacity, fill_value=-1)
+        n_active = jnp.sum(flat)
+        processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
+        padded, marks = jax.lax.scan(process_tile, padded, ids)
+        dirty = jnp.any(marks, axis=0)
+        # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones.
+        active = (active & ~processed) | dirty
+        stats = TileStats(
+            stats.outer_rounds + 1,
+            stats.tiles_processed + jnp.sum(ids >= 0),
+            stats.overflow_events + (n_active > queue_capacity).astype(jnp.int32))
+        return padded, active, stats
+
+    stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    padded, _, stats = jax.lax.while_loop(outer_cond, outer_body, (padded, active0, stats0))
+
+    # Strip padding back to the original domain.
+    out = jax.tree_util.tree_map(
+        lambda x: jax.lax.slice(x, (0,) * (x.ndim - 2) + (1, 1),
+                                x.shape[:-2] + (1 + H, 1 + W)), padded)
+    return out, stats

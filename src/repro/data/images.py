@@ -1,0 +1,83 @@
+"""Synthetic "tissue" image generator for IWPP benchmarks and tests.
+
+The paper evaluates on whole-slide tissue images with varying tissue
+coverage (Fig. 12: 25/50/75/100%).  We reproduce the workload shape with
+blob images: smoothed thresholded noise gives connected tissue-like regions;
+``coverage`` controls the foreground fraction; the marker is the standard
+``I - h`` marker (mask minus a constant, clipped), which makes morphological
+reconstruction fill regional maxima domes — the paper's segmentation use.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _smooth(x: np.ndarray, iters: int = 3) -> np.ndarray:
+    """Cheap separable box smoothing (no scipy)."""
+    for _ in range(iters):
+        x = (x + np.roll(x, 1, 0) + np.roll(x, -1, 0)) / 3.0
+        x = (x + np.roll(x, 1, 1) + np.roll(x, -1, 1)) / 3.0
+    return x
+
+
+def tissue_image(h: int, w: int, coverage: float = 1.0, seed: int = 0,
+                 dtype=np.uint8):
+    """Returns (marker, mask) uint8 images with ~`coverage` foreground."""
+    rng = np.random.default_rng(seed)
+    noise = _smooth(rng.random((h, w)), iters=4)
+    thresh = np.quantile(noise, 1.0 - coverage) if coverage < 1.0 else -np.inf
+    fg = noise >= thresh
+    lo, hi = noise.min(), noise.max()
+    gray = ((noise - lo) / max(hi - lo, 1e-9) * 200 + 30).astype(dtype)
+    mask = np.where(fg, gray, 0).astype(dtype)
+    h_drop = 40
+    marker = np.clip(mask.astype(np.int32) - h_drop, 0, None).astype(dtype)
+    return marker, mask
+
+
+def binary_blobs(h: int, w: int, coverage: float = 0.5, seed: int = 0,
+                 scale: int = 4):
+    """Boolean foreground image for the EDT benchmarks.  ``scale`` sets the
+    blob feature size (smoothing depth): larger scale -> larger connected
+    regions -> deeper distance propagation (the whole-slide-tissue regime)."""
+    rng = np.random.default_rng(seed)
+    noise = _smooth(rng.random((h, w)), iters=scale)
+    thresh = np.quantile(noise, 1.0 - coverage)
+    return noise >= thresh
+
+
+def bg_disks(h: int, w: int, coverage: float = 0.9, n_disks: int = 6,
+             seed: int = 0):
+    """Foreground image whose background is a few concentrated disks
+    (total area ~ (1 - coverage) of the image).  Distances inside the
+    foreground then reach O(image size) — the whole-slide regime the paper
+    evaluates EDT on (their Fig. 14: speedups GROW with tissue coverage
+    because distances get longer)."""
+    rng = np.random.default_rng(seed)
+    fg = np.ones((h, w), bool)
+    r = int(np.sqrt((1.0 - coverage) * h * w / (max(n_disks, 1) * np.pi)))
+    yy, xx = np.mgrid[0:h, 0:w]
+    for _ in range(n_disks):
+        cy, cx = rng.integers(0, h), rng.integers(0, w)
+        fg &= ((yy - cy) ** 2 + (xx - cx) ** 2) > r * r
+    return fg
+
+
+def seeded_marker(mask: np.ndarray, n_seeds: int = 32, patch: int = 3,
+                  seed: int = 0):
+    """Sparse-seed marker: the paper's reconstruction-from-markers workload
+    (Fig. 1: small marker patches inside objects).  The wavefront is a thin
+    expanding ring — the regime where queue/tile tracking beats full sweeps
+    hardest (in contrast to the dense ``mask - h`` marker, whose initial
+    wavefront covers the whole image)."""
+    rng = np.random.default_rng(seed)
+    marker = np.zeros_like(mask)
+    fg = np.argwhere(mask > 0)
+    if len(fg) == 0:
+        return marker
+    for idx in rng.choice(len(fg), size=min(n_seeds, len(fg)), replace=False):
+        r, c = fg[idx]
+        r0, c0 = max(0, r - patch), max(0, c - patch)
+        marker[r0:r + patch, c0:c + patch] = mask[r0:r + patch, c0:c + patch]
+    return marker

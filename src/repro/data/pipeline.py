@@ -1,0 +1,89 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are a pure function of (seed, step, shard) — a restarted run
+replays the exact same stream (the checkpoint/restart fault-tolerance
+story depends on this), and each data-parallel host shard draws a disjoint
+slice.  Token streams are Zipf-ish synthetic text; vision/audio stubs draw
+Gaussian embeddings (the assignment supplies frontends as stubs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    zipf_a: float = 1.2
+
+
+def _rng(cfg: DataConfig, step: int, shard: int):
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, shard]))
+
+
+def synth_tokens(rng, batch, seq, vocab, zipf_a=1.2):
+    """Zipf-distributed token ids (shape (batch, seq)) in [2, vocab)."""
+    raw = rng.zipf(zipf_a, size=(batch, seq)).astype(np.int64)
+    return (2 + (raw - 1) % max(vocab - 2, 1)).astype(np.int32)
+
+
+def batch_for_step(cfg: ArchConfig, shape: ShapeSpec, step: int,
+                   data_cfg: Optional[DataConfig] = None,
+                   shard: int = 0, n_shards: int = 1) -> Dict[str, np.ndarray]:
+    """The training/prefill batch for `step` (this shard's slice)."""
+    dc = data_cfg or DataConfig()
+    rng = _rng(dc, step, shard)
+    B = shape.global_batch // n_shards
+    S = shape.seq_len
+    out: Dict[str, np.ndarray] = {}
+    if cfg.embed_inputs == "embeds":
+        out["embeds"] = rng.standard_normal((B, S, cfg.d_model), np.float32)
+        # M-RoPE grid: text tokens have t=h=w=index (the vision stub would
+        # supply patch (t, h, w) triplets)
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, None],
+                              (3, B, S)).copy()
+        out["positions"] = pos
+    else:
+        out["tokens"] = synth_tokens(rng, B, S, cfg.vocab_size, dc.zipf_a)
+    if cfg.encdec is not None:
+        out["frames"] = rng.standard_normal(
+            (B, cfg.encdec.n_frames, cfg.d_model), np.float32)
+    if shape.kind == "train":
+        src = out.get("tokens")
+        if src is None:
+            out["labels"] = synth_tokens(rng, B, S, cfg.vocab_size, dc.zipf_a)
+        else:
+            out["labels"] = np.concatenate(
+                [src[:, 1:], np.full((B, 1), 2, np.int32)], axis=1)
+    return out
+
+
+class DataIterator:
+    """Stateful wrapper; `state` is just the step counter (checkpointable)."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec,
+                 data_cfg: Optional[DataConfig] = None,
+                 shard: int = 0, n_shards: int = 1, start_step: int = 0):
+        self.cfg, self.shape = cfg, shape
+        self.data_cfg = data_cfg or DataConfig()
+        self.shard, self.n_shards = shard, n_shards
+        self.step = start_step
+
+    def __next__(self):
+        b = batch_for_step(self.cfg, self.shape, self.step, self.data_cfg,
+                           self.shard, self.n_shards)
+        self.step += 1
+        return b
+
+    def state(self):
+        return {"step": self.step}
+
+    def restore(self, state):
+        self.step = int(state["step"])

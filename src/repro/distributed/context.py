@@ -1,0 +1,47 @@
+"""Trace-time parallel context.
+
+pjit/GSPMD propagates most shardings from the in_shardings annotations, but
+the MoE dispatch is deliberately implemented as a `shard_map` island (local
+token routing per data shard + expert-parallel slice per model shard — the
+sort-based dispatch must not be partitioned by GSPMD, which would turn the
+argsort into a distributed sort).  The island needs the mesh and axis names
+at *trace* time; this module carries them.  `set_parallel(None)` restores
+single-device behaviour (tests, CPU examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]       # batch axes, e.g. ("pod", "data")
+    tp_axis: str = "model"         # tensor/expert-parallel axis
+
+
+_CTX: Optional[ParallelCtx] = None
+
+
+def set_parallel(ctx: Optional[ParallelCtx]):
+    global _CTX
+    _CTX = ctx
+
+
+def get_parallel() -> Optional[ParallelCtx]:
+    return _CTX
+
+
+@contextmanager
+def parallel_ctx(ctx: Optional[ParallelCtx]):
+    prev = get_parallel()
+    set_parallel(ctx)
+    try:
+        yield
+    finally:
+        set_parallel(prev)

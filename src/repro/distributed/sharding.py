@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules -> PartitionSpecs for params, batches, caches.
+
+Path-based rules (t5x-style): each param leaf's pytree path is matched
+against name patterns; the rule gives the spec of the *trailing* dims, and
+leading dims (stacked-layer axes from scan-over-layers) are padded with
+None.  FSDP (cfg.fsdp) additionally shards one replicated param dim over
+the data axis (ZeRO-3 style; GSPMD inserts the per-layer all-gathers).
+
+Axis conventions (DESIGN.md §3.2):
+  batch   -> ("pod", "data")  [multi-pod]  or ("data",)
+  heads / ffn / vocab / experts -> "model"
+  sequence (decode KV cache when heads don't divide the TP width) -> "model"
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _pad(spec_dims, ndim):
+    """Left-pad a trailing-dims spec with None up to ndim."""
+    dims = list(spec_dims)
+    assert len(dims) <= ndim, (dims, ndim)
+    return P(*([None] * (ndim - len(dims)) + dims))
+
+
+# (substring patterns, trailing-dims spec, fsdp trailing-dims spec)
+_PARAM_RULES = [
+    # embeddings / head
+    (("embed'", ), ("model", None), ("model", "data")),
+    (("lm_head",), (None, "model"), ("data", "model")),
+    (("dec_pos",), (None, None), (None, "data")),
+    # MLA
+    (("wq_a",), (None, None), ("data", None)),
+    (("wq_b",), (None, "model"), (None, "model")),
+    (("wkv_a",), (None, None), ("data", None)),
+    (("wkv_b",), (None, "model"), (None, "model")),
+    # attention
+    (("'wq'", "'wk'", "'wv'", "xwq", "xwk", "xwv"),
+     (None, "model"), ("data", "model")),
+    (("'wo'", "xwo"), ("model", None), ("model", "data")),
+    # MoE expert stacks (E, D, F) / (E, F, D): experts over model
+    (("moe']['up", "moe']['gate", "moe']['down"),
+     ("model", None, None), ("model", "data", None)),
+    (("router",), (None, None), (None, None)),
+    # dense MLP
+    (("mlp']['up", "mlp']['gate", "ffn_up"), (None, "model"), ("data", "model")),
+    (("mlp']['down", "ffn_down"), ("model", None), ("model", "data")),
+    # Griffin recurrent block: lru channels over model
+    (("w_gate", "w_main"), (None, "model"), ("data", "model")),
+    (("w_out",), ("model", None), ("model", "data")),
+    (("'wr'", "'wi'"), (None, "model"), (None, "model")),
+    (("lru']['br", "lru']['bi", "lam",), ("model",), ("model",)),
+    (("rec']['conv",), (None, "model"), (None, "model")),
+    # xLSTM
+    (("w_up",), (None, "model"), ("data", "model")),
+    (("w_if",), (None, None), (None, None)),
+    (("w_down",), ("model", None), ("model", "data")),
+    (("mlstm']['conv", "gn_scale"), (None,), (None,)),
+    (("w_z", "w_i", "w_f", "w_o"), (None, None), (None, None)),
+]
+
+
+def _match_param(path_str: str):
+    for pats, spec, fspec in _PARAM_RULES:
+        if any(p in path_str for p in pats):
+            return spec, fspec
+    return (), ()          # replicate (norm scales, small biases, conv)
+
+
+def param_specs(cfg: ArchConfig, params_tree, mesh: Mesh):
+    """PartitionSpec pytree for a param tree (arrays or ShapeDtypeStructs)."""
+    fsdp = cfg.fsdp
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        spec, fspec = _match_param(pstr)
+        dims = fspec if fsdp else spec
+        # special-case: xLSTM wq/wk/wv act on d_inner; patterns above for
+        # attention already cover them (same layout).
+        nd = len(leaf.shape)
+        dims = tuple(dims[:nd])
+        # drop axes that don't divide the dim size
+        fixed = []
+        for size, ax in zip(leaf.shape[nd - len(dims):], dims):
+            if ax is None:
+                fixed.append(None)
+            else:
+                axes = (ax,) if isinstance(ax, str) else ax
+                n = int(np.prod([mesh.shape[a] for a in axes]))
+                fixed.append(ax if size % n == 0 else None)
+        return _pad(tuple(fixed), nd)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, specs: Dict[str, Any], mesh: Mesh):
+    """PartitionSpecs for the input batch dict (train/prefill/decode)."""
+    b = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in b]))
+    out = {}
+    for k, v in specs.items():
+        shp = v.shape
+        if k == "positions":                    # (3, B, S)
+            out[k] = P(None, b, None) if shp[1] % bsz == 0 else P()
+            continue
+        if len(shp) == 0:
+            out[k] = P()
+            continue
+        if shp[0] % bsz != 0:                   # tiny batch (long_500k B=1)
+            out[k] = P(*([None] * len(shp)))
+            continue
+        out[k] = P(b, *([None] * (len(shp) - 1)))
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cache_tree, mesh: Mesh):
+    """Decode-cache specs.  KV heads over model when divisible, else the
+    sequence axis (flash-decoding style); batch over the data axes."""
+    b = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in b]))
+    tp = mesh.shape["model"]
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shp = leaf.shape
+        nd = len(shp)
+        # strip a possible stacked-layer leading dim for rule purposes
+        def bspec(i):           # batch dim at index i
+            return b if shp[i] % bsz == 0 else None
+        if "enc_out" in pstr:   # (B, T, D)
+            return P(bspec(0), None, None)
+        if "'k'" in pstr or "'v'" in pstr:      # (..., B, S, Hkv, Dh)
+            off = nd - 4
+            lead = [None] * off
+            hs = "model" if shp[off + 2] % tp == 0 else None
+            ss = None if hs else ("model" if shp[off + 1] % tp == 0 else None)
+            return P(*lead, bspec(off), ss, hs, None)
+        if "c_kv" in pstr or "k_pe" in pstr:    # (..., B, S, r)
+            off = nd - 3
+            lead = [None] * off
+            ss = "model" if shp[off + 1] % tp == 0 else None
+            return P(*lead, bspec(off), ss, None)
+        if "conv" in pstr:                      # (..., B, K-1, D)
+            off = nd - 3
+            ds = "model" if shp[off + 2] % tp == 0 else None
+            return P(*([None] * off), bspec(off), None, ds)
+        if "'h'" in pstr:                       # (..., B, lru)
+            off = nd - 2
+            ds = "model" if shp[off + 1] % tp == 0 else None
+            return P(*([None] * off), bspec(off), ds)
+        # mlstm/slstm states (..., B, H, ...) — batch only
+        off = 0
+        for i, s in enumerate(shp):
+            if s % bsz == 0:
+                off = i
+                break
+        else:
+            return P(*([None] * nd))
+        return P(*([None] * off), b, *([None] * (nd - off - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,113 @@
+"""Euclidean distance transform as an IWPP `PropagationOp` (paper Alg. 3/6).
+
+State pytree: {"vr": (2, H, W) int32 Voronoi pointers, "valid": bool (H, W)}.
+vr[0] = row, vr[1] = col of the currently-nearest background pixel; the far
+sentinel marks "no background known yet".
+
+The per-round update replaces Algorithm 6's atomicCAS retry loop: each pixel
+q min-reduces the candidate distances offered by all frontier neighbors in
+one vector expression, so the read-modify-write race the GPU handles with
+CAS cannot occur (DESIGN.md §2).  The update is commutative and monotone
+(distance only decreases), satisfying the IWPP contract; the converged
+distance map equals the sequential reference (ties in VR may resolve
+differently — paper §3.4's argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pattern import PropagationOp, shift2d
+from repro.edt.ref import SENTINEL
+
+
+def _grids(H, W):
+    r = jax.lax.broadcasted_iota(jnp.int32, (H, W), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (H, W), 1)
+    return r, c
+
+
+@dataclasses.dataclass(frozen=True)
+class EdtOp(PropagationOp):
+    """Danielsson-style Voronoi-pointer propagation."""
+
+    @property
+    def static_leaves(self):
+        return ("valid", "row", "col")
+
+    def make_state(self, fg: jnp.ndarray, valid=None):
+        """fg: bool (H, W), True = foreground.
+
+        Coordinate grids are *state leaves* (not regenerated per-round) so
+        that tiled/sharded engines, which see local blocks, still compute
+        distances in global coordinates.
+        """
+        H, W = fg.shape
+        r, c = _grids(H, W)
+        s = jnp.int32(SENTINEL)
+        vr = jnp.stack([jnp.where(fg, s, r), jnp.where(fg, s, c)])
+        if valid is None:
+            valid = jnp.ones((H, W), dtype=bool)
+        return {"vr": vr, "valid": valid, "row": r, "col": c}
+
+    def pad_value(self, state):
+        return {"vr": jnp.int32(SENTINEL), "valid": False,
+                "row": jnp.int32(SENTINEL), "col": jnp.int32(SENTINEL)}
+
+    def init_frontier(self, state) -> jnp.ndarray:
+        """Background pixels with >=1 foreground neighbor (Alg. 3 lines 4-5)."""
+        vr = state["vr"]
+        r, c = state["row"], state["col"]
+        H, W = vr.shape[-2:]
+        is_bg = (vr[0] == r) & (vr[1] == c)
+        s = jnp.int32(SENTINEL)
+        any_fg_nbr = jnp.zeros((H, W), dtype=bool)
+        for dr, dc in self.offsets:
+            nbr_r = shift2d(vr[0], dr, dc, s)
+            # out-of-image neighbors (fill==SENTINEL) look like fg; exclude
+            # them by also requiring the neighbor be in-bounds via valid.
+            nbr_valid = shift2d(state["valid"], dr, dc, False)
+            any_fg_nbr = any_fg_nbr | ((nbr_r == s) & nbr_valid)
+        return is_bg & any_fg_nbr & state["valid"]
+
+    def _dist2(self, r, c, vr_r, vr_c):
+        dr = r - vr_r
+        dc = c - vr_c
+        return dr * dr + dc * dc
+
+    def round(self, state, frontier) -> Tuple[dict, jnp.ndarray]:
+        vr = state["vr"]
+        r, c = state["row"], state["col"]
+        s = jnp.int32(SENTINEL)
+        best_r, best_c = vr[0], vr[1]
+        best_d = self._dist2(r, c, best_r, best_c)
+        src_r = jnp.where(frontier, vr[0], s)
+        src_c = jnp.where(frontier, vr[1], s)
+        for dr, dc in self.offsets:
+            cand_r = shift2d(src_r, dr, dc, s)
+            cand_c = shift2d(src_c, dr, dc, s)
+            cand_d = self._dist2(r, c, cand_r, cand_c)
+            upd = cand_d < best_d
+            best_r = jnp.where(upd, cand_r, best_r)
+            best_c = jnp.where(upd, cand_c, best_c)
+            best_d = jnp.where(upd, cand_d, best_d)
+        changed = ((best_r != vr[0]) | (best_c != vr[1])) & state["valid"]
+        # Non-valid cells keep sentinel pointers so they can never propagate.
+        best_r = jnp.where(state["valid"], best_r, s)
+        best_c = jnp.where(state["valid"], best_c, s)
+        new_state = dict(state)
+        new_state["vr"] = jnp.stack([best_r, best_c])
+        return new_state, changed
+
+
+def distance_map(state) -> jnp.ndarray:
+    """Squared distance map from the converged Voronoi pointers (Alg. 3 l.13)."""
+    vr = state["vr"]
+    r, c = state["row"], state["col"]
+    dr = r - vr[0]
+    dc = c - vr[1]
+    return dr * dr + dc * dc

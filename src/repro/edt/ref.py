@@ -1,0 +1,93 @@
+"""Sequential references for the euclidean distance transform (EDT).
+
+* ``edt_bruteforce`` — exact EDT by exhaustive nearest-background search.
+  O(N_fg * N_bg); only for tiny test images.  Used to bound the
+  approximation error of the neighborhood algorithm (paper Fig. 3 shows the
+  8-neighborhood Danielsson scheme is not exact but tightly bounded).
+* ``edt_wavefront`` — the paper's Algorithm 3: queue-based Danielsson
+  propagation of Voronoi pointers.  This is the semantics every parallel
+  engine must reproduce (identical *distance map*; the Voronoi diagram may
+  differ on ties, paper §3.4).
+
+Convention: the input is a boolean image, True = foreground.  Distances are
+from each pixel to the nearest background (False) pixel; background pixels
+have distance 0.  Images with no background pixel get the far-sentinel
+distance everywhere.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.morph.ref import N4, N8
+
+# Far sentinel: coordinates such that any in-image pixel is closer to any
+# other in-image pixel than to the sentinel.  Grids must be < 8192 px so
+# squared distances stay within int32 (2*(8192+16384)^2 < 2^31).
+SENTINEL = -16384
+MAX_GRID = 8192
+
+
+def _check(shape):
+    if max(shape) > MAX_GRID:
+        raise ValueError(f"grid {shape} exceeds MAX_GRID={MAX_GRID} (int32 dist overflow)")
+
+
+def edt_bruteforce(fg: np.ndarray) -> np.ndarray:
+    """Exact squared EDT, O(N^2).  Tiny images only."""
+    _check(fg.shape)
+    H, W = fg.shape
+    bg = np.argwhere(~fg)
+    out = np.zeros((H, W), dtype=np.int64)
+    if len(bg) == 0:
+        out[:] = 2 * (SENTINEL - MAX_GRID) ** 2
+        return out
+    rr, cc = np.mgrid[0:H, 0:W]
+    for r in range(H):
+        d = (bg[:, 0][None, :] - r) ** 2 + (bg[:, 1][None, :] - cc[r][:, None]) ** 2
+        out[r] = d.min(axis=1)
+    return out
+
+
+def edt_wavefront(fg: np.ndarray, connectivity: int = 8):
+    """Paper Algorithm 3.  Returns (squared distance map, VR pointer array).
+
+    VR[r, c] = (row, col) of the currently nearest background pixel.
+    """
+    _check(fg.shape)
+    nbrs = N8 if connectivity == 8 else N4
+    H, W = fg.shape
+    VR = np.empty((H, W, 2), dtype=np.int32)
+    VR[..., 0], VR[..., 1] = np.mgrid[0:H, 0:W]
+    VR[fg] = (SENTINEL, SENTINEL)
+
+    def dist2(r, c, v):
+        return (r - int(v[0])) ** 2 + (c - int(v[1])) ** 2
+
+    # Initialization: background pixels adjacent to a foreground pixel.
+    q: deque = deque()
+    for r in range(H):
+        for c in range(W):
+            if not fg[r, c]:
+                for dr, dc in nbrs:
+                    rr, cc = r + dr, c + dc
+                    if 0 <= rr < H and 0 <= cc < W and fg[rr, cc]:
+                        q.append((r, c))
+                        break
+
+    # Wavefront propagation.
+    while q:
+        r, c = q.popleft()
+        vp = VR[r, c]
+        for dr, dc in nbrs:
+            rr, cc = r + dr, c + dc
+            if 0 <= rr < H and 0 <= cc < W:
+                if dist2(rr, cc, vp) < dist2(rr, cc, VR[rr, cc]):
+                    VR[rr, cc] = vp
+                    q.append((rr, cc))
+
+    rgrid, cgrid = np.mgrid[0:H, 0:W]
+    M = (rgrid - VR[..., 0].astype(np.int64)) ** 2 + (cgrid - VR[..., 1].astype(np.int64)) ** 2
+    return M, VR

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: drain one EDT (Voronoi-pointer) tile in VMEM.
+
+Same structure as morph_tile: the (T+2, T+2) halo block iterates the
+8-neighbor candidate min-reduction to local stability without leaving VMEM.
+Distances are int32 (exact for grids < 8192 with the far sentinel; see
+repro.edt.ref.SENTINEL).  This kernel replaces Algorithm 6's atomicCAS retry
+loop with a race-free vector reduction — the TPU-native adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pattern import offsets_for
+from repro.edt.ref import SENTINEL
+
+
+def _make_kernel(connectivity: int, max_iters: int):
+    offsets = offsets_for(connectivity)
+
+    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref, or_ref, oc_ref, iters_ref):
+        vr_r = vr_r_ref[...]
+        vr_c = vr_c_ref[...]
+        valid = valid_ref[...]
+        row = row_ref[...]
+        col = col_ref[...]
+        Hp, Wp = vr_r.shape
+        s = jnp.int32(SENTINEL)
+
+        def shifted(x, dr, dc):
+            xp = jnp.pad(x, 1, constant_values=s)
+            return jax.lax.slice(xp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
+
+        def dist2(rr, cc, pr, pc):
+            dr_ = rr - pr
+            dc_ = cc - pc
+            return dr_ * dr_ + dc_ * dc_
+
+        def cond(carry):
+            _, _, changed, it = carry
+            return changed & (it < max_iters)
+
+        def body(carry):
+            vr_r, vr_c, _, it = carry
+            br, bc = vr_r, vr_c
+            bd = dist2(row, col, br, bc)
+            for dr, dc in offsets:
+                cr, cc_ = shifted(vr_r, dr, dc), shifted(vr_c, dr, dc)
+                cd = dist2(row, col, cr, cc_)
+                upd = cd < bd
+                br = jnp.where(upd, cr, br)
+                bc = jnp.where(upd, cc_, bc)
+                bd = jnp.where(upd, cd, bd)
+            br = jnp.where(valid, br, s)
+            bc = jnp.where(valid, bc, s)
+            changed = jnp.any((br != vr_r) | (bc != vr_c))
+            return br, bc, changed, it + 1
+
+        vr_r, vr_c, _, iters = jax.lax.while_loop(
+            cond, body, (vr_r, vr_c, jnp.bool_(True), jnp.int32(0)))
+        or_ref[...] = vr_r
+        oc_ref[...] = vr_c
+        iters_ref[0, 0] = iters
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
+def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
+                   max_iters: int = 1024, interpret: bool = True):
+    """Drain one (T+2, T+2) EDT halo block.  Returns (vr_r, vr_c, iters)."""
+    kernel = _make_kernel(connectivity, max_iters)
+    shp = vr_r.shape
+    out_shape = (
+        jax.ShapeDtypeStruct(shp, vr_r.dtype),
+        jax.ShapeDtypeStruct(shp, vr_c.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    )
+    full = lambda s: pl.BlockSpec(s, lambda: (0, 0))
+    o_r, o_c, iters = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[full(shp)] * 5,
+        out_specs=(full(shp), full(shp), full((1, 1))),
+        interpret=interpret,
+    )(vr_r, vr_c, valid, row, col)
+    return o_r, o_c, iters[0, 0]

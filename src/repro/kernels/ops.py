@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+* dtype policy: TPU vector units want >=int16 payloads; uint8 images are
+  upcast to int32 for the kernel and cast back (exactness preserved — the
+  ops are min/max/compare).
+* `tile_solver_morph` / `tile_solver_edt` adapt the kernels to the tiled
+  engine's `tile_solver` interface (block pytree -> block pytree).
+* every directional raster pass is expressed through the single
+  `raster_down` kernel via flips/transposes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edt_tile import edt_tile_solve
+from repro.kernels.morph_tile import morph_tile_solve
+from repro.kernels.raster_scan import raster_down
+
+
+def _up(x):
+    if x.dtype in (jnp.uint8, jnp.int8, jnp.uint16, jnp.int16):
+        return x.astype(jnp.int32), x.dtype
+    return x, None
+
+
+def morph_tile_pallas(J, I, valid, connectivity: int = 8, interpret: bool = True):
+    Ju, orig = _up(J)
+    Iu, _ = _up(I)
+    out, iters = morph_tile_solve(Ju, Iu, valid, connectivity=connectivity,
+                                  interpret=interpret)
+    return (out.astype(orig) if orig is not None else out), iters
+
+
+def tile_solver_morph(connectivity: int = 8, interpret: bool = True):
+    """Adapter: tiled-engine `tile_solver` backed by the Pallas kernel."""
+    def solver(block):
+        J, iters = morph_tile_pallas(block["J"], block["I"], block["valid"],
+                                     connectivity, interpret)
+        out = dict(block)
+        out["J"] = J
+        return out
+    return solver
+
+
+def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True):
+    vr = state_block["vr"]
+    o_r, o_c, iters = edt_tile_solve(
+        vr[0], vr[1], state_block["valid"], state_block["row"], state_block["col"],
+        connectivity=connectivity, interpret=interpret)
+    out = dict(state_block)
+    out["vr"] = jnp.stack([o_r, o_c])
+    return out, iters
+
+
+def tile_solver_edt(connectivity: int = 8, interpret: bool = True):
+    def solver(block):
+        out, _ = edt_tile_pallas(block, connectivity, interpret)
+        return out
+    return solver
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def raster_pass_kernel(J, I, interpret: bool = True):
+    """Full raster half-pass (left->right then top->down) via the kernel.
+
+    Left->right is the same recurrence on the transpose.
+    """
+    Ju, orig = _up(J)
+    Iu, _ = _up(I)
+    Jt = raster_down(Ju.T, Iu.T, interpret=interpret).T     # row-wise forward
+    Jv = raster_down(Jt, Iu, interpret=interpret)           # column-wise forward
+    return Jv.astype(orig) if orig is not None else Jv
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def antiraster_pass_kernel(J, I, interpret: bool = True):
+    Ju, orig = _up(J)
+    Iu, _ = _up(I)
+    Jt = raster_down(Ju[:, ::-1].T, Iu[:, ::-1].T, interpret=interpret).T[:, ::-1]
+    Jv = raster_down(Jt[::-1], Iu[::-1], interpret=interpret)[::-1]
+    return Jv.astype(orig) if orig is not None else Jv

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiles import _tile_local_solve
+from repro.edt.ops import EdtOp
+from repro.morph.ops import MorphReconstructOp
+
+
+def morph_tile_ref(J, I, valid, connectivity: int = 8):
+    """Oracle for kernels.morph_tile: dense rounds to stability (interior)."""
+    op = MorphReconstructOp(connectivity=connectivity)
+    blk = _tile_local_solve(op, {"J": J, "I": I, "valid": valid},
+                            max_iters=4 * max(J.shape))
+    return blk["J"]
+
+
+def edt_tile_ref(vr_r, vr_c, valid, row, col, connectivity: int = 8):
+    """Oracle for kernels.edt_tile."""
+    op = EdtOp(connectivity=connectivity)
+    state = {"vr": jnp.stack([vr_r, vr_c]), "valid": valid, "row": row, "col": col}
+    blk = _tile_local_solve(op, state, max_iters=4 * max(vr_r.shape))
+    return blk["vr"][0], blk["vr"][1]
+
+
+def raster_down_ref(J, I):
+    """Oracle for kernels.raster_scan.raster_down: explicit row recurrence."""
+    def step(prev, rows):
+        j, i = rows
+        v = jnp.minimum(i, jnp.maximum(j, prev))
+        return v, v
+    neut = (jnp.iinfo(J.dtype).min if jnp.issubdtype(J.dtype, jnp.integer) else -jnp.inf)
+    init = jnp.full((J.shape[1],), neut, dtype=J.dtype)
+    _, out = jax.lax.scan(step, init, (J, I))
+    return out

@@ -1,0 +1,311 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+# (An explicit device-count in XLA_FLAGS — e.g. the 8-device test harness —
+# takes precedence; the production dry-run default is 512.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct inputs (no allocation), jits the
+train/prefill/serve step with production in_shardings, runs
+``.lower().compile()``, and records:
+
+  * ``compiled.memory_analysis()``   — proves the per-device footprint fits;
+  * ``compiled.cost_analysis()``     — HLO FLOPs / bytes for the roofline;
+  * collective statistics parsed from the post-SPMD HLO text — per-op-kind
+    wire-byte estimates (ring all-reduce counts 2x payload, all-gather /
+    reduce-scatter / all-to-all / collective-permute 1x), the roofline's
+    collective term;
+  * wall times for lowering and compile.
+
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every cell, both meshes
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, runnable_shapes
+from repro.configs.registry import ARCHS, get_config, input_specs
+from repro.distributed.context import ParallelCtx, parallel_ctx
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_decode_cache, init_params
+from repro.train.optim import init_opt_state
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all typed shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Per-kind (count, result bytes, wire-byte estimate) from HLO text."""
+    stats = {k: {"count": 0, "bytes": 0, "wire_bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) and f"{kind}-done" in hlo_text:
+            pass  # async pair: count the -start only
+        if re.match(r"%?[\w.\-]+\s*=\s*[^=]*" + kind + r"-done\(", s):
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += result_bytes
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        stats[kind]["wire_bytes"] += int(result_bytes * factor)
+    stats["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def _mem_analysis(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "host_argument_size_in_bytes",
+                  "host_output_size_in_bytes", "host_temp_size_in_bytes",
+                  "serialized_size_in_bytes"):
+            if hasattr(ma, f):
+                out[f] = int(getattr(ma, f))
+    except Exception as e:  # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 0):
+    """Returns (fn, args, in_shardings) ready for jit().lower().
+
+    microbatches=0 -> the arch's production default (cfg.train_microbatches).
+    """
+    cfg = get_config(arch)
+    if microbatches <= 0:
+        microbatches = cfg.train_microbatches
+    shape = SHAPES[shape_name]
+    baxes = shd.batch_axes(mesh)
+    ctx = ParallelCtx(mesh=mesh, dp_axes=baxes)
+
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params_s = jax.eval_shape(partial(init_params, cfg), key_s)
+    pspecs = shd.param_specs(cfg, params_s, mesh)
+    pshard = shd.named(mesh, pspecs)
+
+    bspecs_in = input_specs(cfg, shape)
+    bshard = shd.named(mesh, shd.batch_specs(cfg, bspecs_in, mesh))
+
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(init_opt_state, params_s)
+        # m/v shaped like params; step replicated
+        oshard = {"m": shd.named(mesh, shd.param_specs(cfg, params_s, mesh)),
+                  "v": shd.named(mesh, shd.param_specs(cfg, params_s, mesh)),
+                  "step": shd.named(mesh, jax.sharding.PartitionSpec())}
+        fn = make_train_step(cfg, microbatches=microbatches)
+        args = (params_s, opt_s, bspecs_in)
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        args = (params_s, bspecs_in)
+        in_sh = (pshard, bshard)
+        out_sh = None
+        donate = ()
+    else:  # decode
+        cache_s = jax.eval_shape(
+            partial(init_decode_cache, cfg, shape.global_batch, shape.seq_len))
+        cshard = shd.named(mesh, shd.cache_specs(cfg, cache_s, mesh))
+        tok_s = bspecs_in["tokens"]
+        tshard = shd.named(mesh, shd.batch_specs(cfg, {"tokens": tok_s}, mesh))["tokens"]
+        len_s = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = make_serve_step(cfg)
+        args = (params_s, cache_s, tok_s, len_s)
+        in_sh = (pshard, cshard, tshard,
+                 shd.named(mesh, jax.sharding.PartitionSpec()))
+        out_sh = (cshard, None)
+        donate = (1,)
+    return cfg, ctx, fn, args, in_sh, out_sh, donate
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, save_hlo: bool = False, tag: str = "",
+             microbatches: int = 0) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rec = {"arch": arch, "shape": shape_name, "mesh": list(mesh.shape.values()),
+           "mesh_axes": list(mesh.axis_names), "status": "ok", "tag": tag}
+    cfg = get_config(arch)
+    if shape_name not in runnable_shapes(cfg):
+        rec["status"] = "skip:full-attention-500k"
+        return _save(rec, out_dir, mesh_kind, arch, shape_name, tag)
+    try:
+        cfg, ctx, fn, args, in_sh, out_sh, donate = build_cell(
+            arch, shape_name, mesh, microbatches=microbatches)
+        with parallel_ctx(ctx), mesh:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            t0 = time.perf_counter()
+            lowered = jfn.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["memory_analysis"] = _mem_analysis(compiled)
+        rec["cost_analysis"] = _cost_analysis(compiled)
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        # loop-aware cost model (cost_analysis counts scan bodies once)
+        try:
+            from repro.launch import hlocost
+            hc = hlocost.analyze(hlo)
+            rec["hlo_cost"] = {"flops": hc["flops"], "bytes": hc["bytes"],
+                               "collectives": hc["coll"],
+                               "n_warnings": hc["n_warnings"],
+                               "warnings": hc["warnings"]}
+        except Exception as e:  # noqa: BLE001
+            rec["hlo_cost"] = {"error": repr(e)}
+        # persist the HLO (gzip) so analyses never need a recompile
+        import gzip
+        hdir = os.path.join(out_dir, mesh_kind)
+        os.makedirs(hdir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hdir, f"{arch}__{shape_name}{tag}.hlo.txt.gz"), "wt") as f:
+            f.write(hlo)
+        if save_hlo:
+            with open(os.path.join(hdir, f"{arch}__{shape_name}{tag}.hlo.txt"),
+                      "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _save(rec, out_dir, mesh_kind, arch, shape_name, tag)
+
+
+def _save(rec, out_dir, mesh_kind, arch, shape_name, tag=""):
+    d = os.path.join(out_dir, mesh_kind)
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{arch}__{shape_name}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    mem = rec.get("memory_analysis", {})
+    coll = rec.get("collectives", {})
+    print(f"[dryrun] {mesh_kind:6s} {arch:24s} {shape_name:12s} "
+          f"{rec['status']:8s} compile={rec.get('compile_s', 0):.1f}s "
+          f"temp={mem.get('temp_size_in_bytes', 0) / 2**30:.2f}GiB "
+          f"coll={coll.get('total_wire_bytes', 0) / 2**30:.3f}GiB",
+          flush=True)
+    return rec
+
+
+def reanalyze(out_dir: str):
+    """Recompute hlo_cost for every saved .hlo.txt.gz (no recompiles)."""
+    import glob
+    import gzip
+    from repro.launch import hlocost
+    for hpath in sorted(glob.glob(os.path.join(out_dir, "*", "*.hlo.txt.gz"))):
+        jpath = hpath.replace(".hlo.txt.gz", ".json")
+        if not os.path.exists(jpath):
+            continue
+        rec = json.load(open(jpath))
+        hc = hlocost.analyze(gzip.open(hpath, "rt").read())
+        rec["hlo_cost"] = {"flops": hc["flops"], "bytes": hc["bytes"],
+                           "collectives": hc["coll"],
+                           "n_warnings": hc["n_warnings"],
+                           "warnings": hc["warnings"]}
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[reanalyze] {jpath}", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = per-arch production default")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute hlo_cost from saved HLOs, no compiles")
+    args = ap.parse_args(argv)
+    if args.reanalyze:
+        reanalyze(args.out)
+        return 0
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+
+    n_err = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mk, args.out, save_hlo=args.save_hlo,
+                               tag=args.tag, microbatches=args.microbatches)
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Production meshes.  Functions, not module constants: importing this
+module never touches jax device state (required by the dry-run protocol)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over host CPU devices (tests / examples).
+
+    Requires XLA_FLAGS=--xla_force_host_platform_device_count>=data*model
+    to have been set before jax initialized.
+    """
+    return jax.make_mesh((data, model), ("data", "model"))

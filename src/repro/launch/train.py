@@ -1,0 +1,83 @@
+"""Training launcher: mesh + sharded params/opt + checkpoint/restart loop.
+
+CPU-scale entry point (the production mesh path is exercised by dryrun.py):
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Restart-from-latest is automatic: if --ckpt-dir holds a checkpoint, params,
+optimizer and the data-iterator step are restored and the run continues
+deterministically (the data pipeline is a pure function of the step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import get_config, smoke_config
+from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.data.pipeline import DataIterator
+from repro.models.transformer import init_params
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start, state, extra = restore(
+            args.ckpt_dir, like={"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] restored step {start} from {args.ckpt_dir}")
+
+    it = DataIterator(cfg, shape, start_step=start)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, args.microbatches))
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step + 1} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} ({dt:.1f}s)")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+        print(f"[train] final checkpoint at step {args.steps}")
+    return params, opt_state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Attention: GQA with RoPE / windows / softcap, chunked (flash-style)
+softmax, MLA (latent attention), and sequence-sharded flash decoding.
+
+Memory discipline: `chunked_attention` never materializes the (Sq, Skv)
+score matrix — it scans KV in blocks with an online-softmax carry (running
+max m, normalizer l, weighted accumulator acc), optionally also blocking the
+query axis.  This is the pure-JAX flash formulation; XLA fuses each block's
+QK^T / softmax / PV into an MXU-friendly pipeline on TPU.
+
+`flash_decode_sharded` merges per-shard partial attention (m, l, acc) across
+a KV cache sharded along *sequence* on the `model` mesh axis — the
+flash-decoding trick, needed for archs whose KV-head count does not divide
+the TP width (DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap is not None else x
+
+
+def _mask(qpos, kpos, causal, window):
+    """(..., Sq, Sk) boolean validity mask from position vectors."""
+    m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), dtype=bool)
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def full_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                   scale=None, q_offset=0, kv_offset=0):
+    """Naive reference: materializes scores.  Oracle for tests only.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, Dk/Dv).  window: int or traced
+    scalar; <= 0 means global.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = kv_offset + jnp.arange(k.shape[1])
+    valid = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        valid = valid & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        w = jnp.asarray(window)
+        valid = valid & ((kpos[None, :] > qpos[:, None] - w) | (w <= 0))
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      scale=None, q_offset=0, kv_offset=0,
+                      chunk_q=2048, chunk_kv=1024):
+    """Flash-style attention; O(Sq * chunk_kv) live memory.
+
+    window may be a traced scalar (per-layer value under scan-over-layers);
+    <= 0 disables the window.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Dv = v.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_kv, Sk)
+    if Sq % cq:                      # non-divisible (e.g. whisper's 1500
+        cq = Sq                      # frames): fall back to one block
+    if Sk % ck:
+        ck = Sk
+    nq, nk = Sq // cq, Sk // ck
+    w = jnp.asarray(window) if window is not None else jnp.asarray(0)
+
+    # Inputs stay in the compute dtype (bf16 in production): QK^T and PV
+    # accumulate in fp32 via preferred_element_type, probs are cast back to
+    # the compute dtype for the PV matmul (flash-attention convention).
+    # Keeping the blocks bf16 halves attention HBM/collective bytes vs the
+    # previous all-fp32 formulation (§Perf cell A).
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, Dv)
+
+    def q_block(_, qi):
+        qb = qg[:, qi]                                  # (B, cq, Hkv, G, D)
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kb = kc[:, ki]
+            vb = vc[:, ki]
+            kpos = kv_offset + ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            valid = jnp.ones((cq, ck), bool)
+            if causal:
+                valid = valid & (kpos[None, :] <= qpos[:, None])
+            valid = valid & ((kpos[None, :] > qpos[:, None] - w) | (w <= 0))
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, Hkv, G, cq, Dv)
+        return None, o.transpose(0, 3, 1, 2, 4)          # (B, cq, Hkv, G, Dv)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # blocks: (nq, B, cq, Hkv, G, Dv)
+    o = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, Dv)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     softcap=None, scale=None):
+    """Single-token decode against a (B, Smax, Hkv, D) cache.
+
+    cache_len: current valid length (the new token is at cache_len - 1).
+    """
+    B, _, Hq, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    Dv = v_cache.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(Smax)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    valid = kpos[None, :] < clen[:, None]                       # (B, Smax)
+    if window is not None:
+        w = jnp.asarray(window)
+        valid = valid & ((kpos[None, :] > clen[:, None] - 1 - w) | (w <= 0))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+def flash_decode_partial(q, k_shard, v_shard, valid_mask, *, softcap=None, scale=None):
+    """Per-shard partial attention for sequence-sharded KV caches.
+
+    Returns (m, l, acc) to be merged across shards with `flash_decode_merge`.
+    q: (B, 1, Hq, D); k_shard/v_shard: (B, Ss, Hkv, D); valid_mask: (B, Ss).
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_shard.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_shard.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                   # (B, Hkv, G)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p, v_shard.astype(jnp.float32))
+    return m, l, acc
+
+
+def flash_decode_merge(m, l, acc, axis_name):
+    """Merge per-shard (m, l, acc) over `axis_name` (log-sum-exp algebra)."""
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]

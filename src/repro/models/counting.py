@@ -1,0 +1,66 @@
+"""Parameter counting for MFU/roofline bookkeeping.
+
+Counts come from `jax.eval_shape(init_params, ...)` — exact by construction,
+no analytic formula to drift out of sync with the model code.
+
+Conventions (EXPERIMENTS.md §Roofline):
+  * N excludes the input embedding gather (not a matmul) but includes the
+    LM head; a tied table is counted once, on the head side.
+  * N_active (MoE): routed-expert params scaled by top_k / n_experts,
+    shared experts and everything else at 1x.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import init_params
+
+
+def _leaf_sizes(cfg: ArchConfig):
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    tree = jax.eval_shape(partial(init_params, cfg), key_s)
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append((jax.tree_util.keystr(path), int(np.prod(leaf.shape))))
+    return out
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Total parameters (including embedding table)."""
+    return sum(n for _, n in _leaf_sizes(cfg))
+
+
+def matmul_param_count(cfg: ArchConfig) -> int:
+    """N for the 2ND/6ND flop model: excludes the embedding gather unless
+    the table is tied (then it acts as the head matmul and counts once)."""
+    total = 0
+    for path, n in _leaf_sizes(cfg):
+        if "embed'" in path and not cfg.tie_embeddings:
+            continue
+        if "dec_pos" in path:
+            continue
+        total += n
+    return total
+
+
+def active_matmul_param_count(cfg: ArchConfig) -> int:
+    """MoE-aware: routed experts contribute top_k / n_experts of their size."""
+    if cfg.moe is None:
+        return matmul_param_count(cfg)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    total = 0
+    for path, n in _leaf_sizes(cfg):
+        if "embed'" in path and not cfg.tie_embeddings:
+            continue
+        if "dec_pos" in path:
+            continue
+        if "moe']['up" in path or "moe']['gate" in path or "moe']['down" in path:
+            total += int(n * frac)
+        else:
+            total += n
+    return total

@@ -1,0 +1,116 @@
+"""Shared layer primitives: norms, MLPs, RoPE / M-RoPE, embeddings.
+
+Everything is pure-functional: `init_*` builds param subtrees (plain dicts
+of jnp arrays), `apply` functions take (params, x).  Params are created in
+float32 and cast to the compute dtype at use (master-weight convention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def dense(p, x, dtype):
+    return x @ p["w"].astype(dtype)
+
+
+def make_norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * p["scale"]).astype(dt)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def make_mlp(key, d_model, d_ff, kind):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = kind in ("silu", "geglu")
+    p = {"down": make_dense(k2, d_ff, d_model)}
+    p["up"] = make_dense(k1, d_model, d_ff)
+    if gated:
+        p["gate"] = make_dense(k3, d_model, d_ff)
+    return p
+
+
+def mlp(p, x, kind, dtype):
+    if kind == "silu":
+        h = jax.nn.silu(dense(p["gate"], x, dtype)) * dense(p["up"], x, dtype)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x, dtype)) * dense(p["up"], x, dtype)
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x, dtype))
+    elif kind == "sqrelu":   # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(dense(p["up"], x, dtype)))
+    else:
+        raise ValueError(kind)
+    return dense(p["down"], h, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                    # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    ang = ang[..., None, :]                          # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, ..., S) — temporal / height / width position ids (the
+    vision-frontend stub provides these; text tokens have t=h=w).
+    sections: per-axis number of frequency pairs, sum == D/2.
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                     # (D/2,)
+    # ang per axis then stitch sections: (3, ..., S, D/2)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs
+    parts = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        parts.append(ang_all[axis, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)[..., None, :]   # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos, d_model):
+    """Whisper encoder positional embedding (fixed)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,489 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+Every cell has two forms that tests prove equivalent:
+  * a *parallel* training/prefill form over (B, S, ...) built on
+    `jax.lax.associative_scan` (linear and max-plus recurrences are both
+    associative, so the VPU computes them in O(log S) depth), or a chunked
+    state-passing form for the matrix-memory mLSTM;
+  * a *step* form carrying an O(1) state for decode (this is what makes the
+    `long_500k` cell runnable for these archs: state size is independent of
+    context length).
+
+Conventions: params are plain dicts of fp32 arrays cast to compute dtype at
+use; activations (B, S, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import make_dense, dense
+
+
+# ---------------------------------------------------------------------------
+# Shared: causal temporal conv1d (width K, depthwise), parallel + step forms.
+# ---------------------------------------------------------------------------
+
+def make_conv1d(key, d: int, width: int):
+    return {"w": jax.random.normal(key, (width, d), jnp.float32) * (width * d) ** -0.25,
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def conv1d_causal(p, x):
+    """x: (B, S, D) -> (B, S, D); causal depthwise conv of width K."""
+    K = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)
+    out = x * w[K - 1]
+    for i in range(K - 1):
+        shifted = jnp.pad(x, ((0, 0), (K - 1 - i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[i]
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p, window, x_t):
+    """window: (B, K-1, D) previous inputs; x_t: (B, D). Returns (y_t, window')."""
+    K = p["w"].shape[0]
+    w = p["w"].astype(x_t.dtype)
+    full = jnp.concatenate([window, x_t[:, None]], axis=1)       # (B, K, D)
+    y = jnp.einsum("bkd,kd->bd", full, w) + p["b"].astype(x_t.dtype)
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin eq. 1-4): h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t),
+# log a_t = -c * r_t * softplus(-Lambda).
+# ---------------------------------------------------------------------------
+
+def make_rglru(key, d: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so that a^c spans ~(0.9, 0.999) (Griffin appendix).
+    u = jax.random.uniform(k3, (d,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (-1.0 / 8.0) - 1.0)  # sigmoid(-lam)^8 ~ u... inverse below
+    return {
+        "wr": make_dense(k1, d, d), "br": jnp.zeros((d,), jnp.float32),
+        "wi": make_dense(k2, d, d), "bi": jnp.zeros((d,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _rglru_coeffs(p, x, c: float):
+    dt = x.dtype
+    r = jax.nn.sigmoid(dense(p["wr"], x, dt) + p["br"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(dense(p["wi"], x, dt) + p["bi"].astype(dt)).astype(jnp.float32)
+    log_a = -c * r * jax.nn.softplus(-p["lam"])          # (B, S, D) fp32, <= 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = mult * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def _linear_scan(a, b, axis: int):
+    """h_t = a_t h_{t-1} + b_t via associative scan ((a,b) composition)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return h
+
+
+def rglru_apply(p, x, c: float = 8.0):
+    """Parallel form. x: (B, S, D) -> (B, S, D)."""
+    a, b = _rglru_coeffs(p, x, c)
+    h = _linear_scan(a, b, axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, h_prev, x_t, c: float = 8.0):
+    """h_prev: (B, D) fp32; x_t: (B, D). Returns (y_t, h_new)."""
+    a, b = _rglru_coeffs(p, x_t[:, None], c)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block: two up-branches (gate: GeLU; main: conv1d+RG-LRU),
+# elementwise merge, down-projection.
+# ---------------------------------------------------------------------------
+
+def make_rec_block(key, d_model: int, lru_width: int, conv_width: int):
+    ks = jax.random.split(key, 5)
+    return {
+        "w_gate": make_dense(ks[0], d_model, lru_width),
+        "w_main": make_dense(ks[1], d_model, lru_width),
+        "conv": make_conv1d(ks[2], lru_width, conv_width),
+        "lru": make_rglru(ks[3], lru_width),
+        "w_out": make_dense(ks[4], lru_width, d_model),
+    }
+
+
+def rec_block_apply(p, x, c_exp: float = 8.0, return_state: bool = False):
+    gate = jax.nn.gelu(dense(p["w_gate"], x, x.dtype))
+    pre = dense(p["w_main"], x, x.dtype)
+    main = conv1d_causal(p["conv"], pre)
+    a, b = _rglru_coeffs(p["lru"], main, c_exp)
+    h = _linear_scan(a, b, axis=1)
+    out = dense(p["w_out"], h.astype(x.dtype) * gate, x.dtype)
+    if return_state:
+        K = p["conv"]["w"].shape[0]
+        return out, {"h": h[:, -1], "conv": pre[:, -(K - 1):]}
+    return out
+
+
+def rec_block_init_state(batch: int, lru_width: int, conv_width: int,
+                         dtype=jnp.bfloat16):
+    return {"h": jnp.zeros((batch, lru_width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, lru_width), dtype)}
+
+
+def rec_block_step(p, state, x_t, c_exp: float = 8.0):
+    gate = jax.nn.gelu(dense(p["w_gate"], x_t, x_t.dtype))
+    main = dense(p["w_main"], x_t, x_t.dtype)
+    main, conv_w = conv1d_step(p["conv"], state["conv"].astype(x_t.dtype), main)
+    y, h = rglru_step(p["lru"], state["h"], main, c_exp)
+    out = dense(p["w_out"], y * gate, x_t.dtype)
+    return out, {"h": h, "conv": conv_w.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T, read
+# h_t = C_t q_t / max(|n_t . q_t|, exp(-m_t)); log-space stabilized.
+# Chunked parallel form (intra-chunk quadratic, inter-chunk state passing).
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int = 256,
+                  return_state: bool = False):
+    """q,k,v: (B, S, H, D); i_gate/f_gate: (B, S, H) raw (pre-activation).
+
+    Returns h: (B, S, H, D), or (h, (C, n, m) final state) with
+    return_state=True — the prefill path MUST take the state from this
+    pass's carry; replaying the sequence step-by-step costs an S-trip
+    sequential loop (a 229k-collective bug caught in §Perf iteration C2).
+    """
+    B, S, H, D = q.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    N = S // C
+    scale = D ** -0.5
+    # Per-chunk work (fp32 casts, cumulative gates, the (C, C) decay matrix)
+    # happens INSIDE the scan body: materializing the (B, N, C, C, H) decay
+    # tensor up front costs O(S*C) fp32 HBM — at 32k prefill that was 268
+    # GB/device, the dominant roofline term of the whole cell (§Perf).
+    qc = q.reshape(B, N, C, H, D)
+    kc = k.reshape(B, N, C, H, D)
+    vc = v.reshape(B, N, C, H, D)
+    fgc = f_gate.reshape(B, N, C, H)
+    igc = i_gate.reshape(B, N, C, H)
+    tri = jnp.tril(jnp.ones((C, C), bool))
+
+    f32 = jnp.float32
+
+    def scan_fn(carry, blk):
+        Cm, n, m = carry                              # (B,H,D,D), (B,H,D), (B,H)
+        qb, kb, vb, fgb, igb = blk
+        # q/k/v stay in the compute dtype (bf16 in production) — the chunk
+        # gathers/partial-sum reduces then move half the bytes; accumulation
+        # is forced to fp32 via preferred_element_type.  Gate/stabilizer
+        # math is fp32 throughout.
+        qb = qb * jnp.asarray(scale, qb.dtype)        # (B,C,H,D)
+        logfb = jax.nn.log_sigmoid(fgb.astype(f32))   # (B,C,H)
+        logib = igb.astype(f32)
+        Fb = jnp.cumsum(logfb, axis=1)                # within-chunk cum log-f
+        Ftotb = Fb[:, -1]                             # (B,H)
+        # Intra-chunk decay: Db[t, s] = F_t - F_s + logi_s for s <= t.
+        Db = Fb[:, :, None, :] - Fb[:, None, :, :] + logib[:, None, :, :]
+        Db = jnp.where(tri[None, :, :, None], Db, -jnp.inf)
+        # inter-chunk: decayed query contribution
+        m_intra = jnp.max(Db, axis=2)                 # (B,C,H): max over s
+        m_inter = Fb + m[:, None, :]                  # (B,C,H)
+        m_new = jnp.maximum(m_intra, m_inter)         # per-position stabilizer
+        dt = qb.dtype
+        s = jnp.einsum("bthd,bshd->btsh", qb, kb,
+                       preferred_element_type=f32)    # (B,C,C,H) fp32
+        s = s * jnp.exp(Db - m_new[:, :, None, :])
+        # "probs" in compute dtype for the PV-style matmuls (flash-attention
+        # convention), fp32 accumulation via preferred_element_type
+        sp = s.astype(dt)
+        h_intra = jnp.einsum("btsh,bshd->bthd", sp, vb,
+                             preferred_element_type=f32)
+        l_intra = s.sum(axis=2)                       # (B,C,H)
+        w_inter = jnp.exp(m_inter - m_new)            # (B,C,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qb, Cm.astype(dt),
+                             preferred_element_type=f32) * w_inter[..., None]
+        l_inter = jnp.einsum("bthd,bhd->bth", qb, n.astype(dt),
+                             preferred_element_type=f32) * w_inter
+        denom = jnp.maximum(jnp.abs(l_intra + l_inter), jnp.exp(-m_new))
+        h = (h_intra + h_inter) / denom[..., None]
+        # state update to end of chunk
+        m_next = jnp.maximum(Ftotb + m, jnp.max(Db[:, -1], axis=1))
+        w_old = jnp.exp(Ftotb + m - m_next)           # (B,H)
+        wk = jnp.exp(Ftotb[:, None, :] - Fb + logib - m_next[:, None, :])  # (B,C,H)
+        C_new = Cm * w_old[:, :, None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", kb, wk.astype(dt), vb,
+            preferred_element_type=f32)
+        n_new = n * w_old[:, :, None] + jnp.einsum(
+            "bshd,bsh->bhd", kb, wk.astype(dt), preferred_element_type=f32)
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    blks = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+            vc.transpose(1, 0, 2, 3, 4), fgc.transpose(1, 0, 2, 3),
+            igc.transpose(1, 0, 2, 3))
+    state, hs = jax.lax.scan(scan_fn, (C0, n0, m0), blks)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    h = h.astype(q.dtype)
+    if return_state:
+        return h, state
+    return h
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate):
+    """Sequential stabilized reference (tests only)."""
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+
+    def step(carry, t):
+        Cm, n, m = carry
+        qt = q[:, t].astype(jnp.float32) * scale
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(f_gate[:, t].astype(jnp.float32))
+        logi = i_gate[:, t].astype(jnp.float32)
+        m_new = jnp.maximum(logf + m, logi)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(logi - m_new)
+        Cm = Cm * fw[:, :, None, None] + iw[:, :, None, None] * (
+            kt[:, :, :, None] * vt[:, :, None, :])
+        n = n * fw[:, :, None] + iw[:, :, None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, Cm)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m_new))
+        return (Cm, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype)
+
+
+def mlstm_step(state, q_t, k_t, v_t, i_t, f_t):
+    """One decode step.  state: {"C": (B,H,D,D), "n": (B,H,D), "m": (B,H)}."""
+    D = q_t.shape[-1]
+    qt = q_t.astype(jnp.float32) * D ** -0.5
+    kt = k_t.astype(jnp.float32)
+    vt = v_t.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    logi = i_t.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    iw = jnp.exp(logi - m_new)
+    Cm = state["C"] * fw[:, :, None, None] + iw[:, :, None, None] * (
+        kt[:, :, :, None] * vt[:, :, None, :])
+    n = state["n"] * fw[:, :, None] + iw[:, :, None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, Cm)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q_t.dtype)
+    return h, {"C": Cm, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with exponential gating; stabilizer m_t is a max-plus
+# linear recurrence -> associative scan, then (c, n) are gated linear scans.
+# ---------------------------------------------------------------------------
+
+def slstm_apply(z, i_gate, f_gate, o_gate, return_state: bool = False):
+    """z (cell input, tanh'd), gates: (B, S, H, D) raw pre-activations.
+
+    Returns h: (B, S, H, D), optionally with the final (c, n, m) state.
+    (No hidden-to-hidden recurrence in this simplified head-parallel form —
+    ASSUMED simplification recorded in DESIGN.md; the gating recurrence is
+    the xLSTM sLSTM one.)
+    """
+    zf = jnp.tanh(z.astype(jnp.float32))
+    logi = i_gate.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+
+    # m_t = max(logf_t + m_{t-1}, logi_t): max-plus scan over functions
+    # x -> max(x + a, b), composed as (a1+a2, max(b1 + a2, b2)).
+    def mp_combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al + ar, jnp.maximum(bl + ar, br)
+    _, m = jax.lax.associative_scan(mp_combine, (logf, logi), axis=1)
+
+    m_prev = jnp.concatenate([jnp.full_like(m[:, :1], -1e30), m[:, :-1]], axis=1)
+    fw = jnp.exp(logf + m_prev - m)        # stabilized forget weight
+    iw = jnp.exp(logi - m)                 # stabilized input weight
+
+    c = _linear_scan(fw, iw * zf, axis=1)
+    n = _linear_scan(fw, iw, axis=1)
+    h = jnp.tanh(c / jnp.maximum(n, 1e-6))  # ASSUMED: tanh readout stabilizer
+    out = (jax.nn.sigmoid(o_gate.astype(jnp.float32)) * h).astype(z.dtype)
+    if return_state:
+        return out, {"c": c[:, -1], "n": n[:, -1], "m": m[:, -1]}
+    return out
+
+
+def slstm_step(state, z_t, i_t, f_t, o_t):
+    """state: {"c": (B,H,D), "n": (B,H,D), "m": (B,H,D)} fp32."""
+    zf = jnp.tanh(z_t.astype(jnp.float32))
+    logi = i_t.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    iw = jnp.exp(logi - m_new)
+    c = state["c"] * fw + iw * zf
+    n = state["n"] * fw + iw
+    h = jnp.tanh(c / jnp.maximum(n, 1e-6))
+    out = (jax.nn.sigmoid(o_t.astype(jnp.float32)) * h).astype(z_t.dtype)
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks.
+# ---------------------------------------------------------------------------
+
+def make_mlstm_block(key, d_model: int, n_heads: int, proj_factor: float,
+                     conv_width: int):
+    d_in = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": make_dense(ks[0], d_model, d_in),
+        "w_gate": make_dense(ks[1], d_model, d_in),
+        "conv": make_conv1d(ks[2], d_in, conv_width),
+        "wq": make_dense(ks[3], d_in, d_in),
+        "wk": make_dense(ks[4], d_in, d_in),
+        "wv": make_dense(ks[5], d_in, d_in),
+        "w_if": make_dense(ks[6], d_in, 2 * n_heads),
+        "w_down": make_dense(ks[7], d_in, d_model),
+        "gn_scale": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _heads(x, h):
+    B, S, D = x.shape
+    return x.reshape(B, S, h, D // h)
+
+
+def _groupnorm_heads(x, scale, eps=1e-5):
+    """Per-head group norm over the head dim. x: (B, S, H, Dh)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, Dh = x.shape
+    return (xn.reshape(B, S, H * Dh) * scale).astype(x.dtype)
+
+
+def mlstm_block_apply(p, x, n_heads: int, chunk: int = 256,
+                      return_state: bool = False):
+    dt = x.dtype
+    up = dense(p["w_up"], x, dt)
+    gate = dense(p["w_gate"], x, dt)
+    c = jax.nn.silu(conv1d_causal(p["conv"], up))
+    q = _heads(dense(p["wq"], c, dt), n_heads)
+    k = _heads(dense(p["wk"], c, dt), n_heads)
+    v = _heads(dense(p["wv"], up, dt), n_heads)
+    if_g = dense(p["w_if"], up, dt)
+    i_g, f_g = jnp.split(if_g, 2, axis=-1)              # (B, S, H)
+    hs = mlstm_chunked(q, k, v, i_g, f_g, chunk=chunk,
+                       return_state=return_state)
+    if return_state:
+        hs, (Cm, n, m) = hs
+    h = _groupnorm_heads(hs, p["gn_scale"])
+    out = dense(p["w_down"], h * jax.nn.silu(gate), dt)
+    if return_state:
+        K = p["conv"]["w"].shape[0]
+        return out, {"conv": up[:, -(K - 1):], "C": Cm, "n": n, "m": m}
+    return out
+
+
+def mlstm_block_init_state(batch, d_model, n_heads, proj_factor, conv_width,
+                           dtype=jnp.bfloat16):
+    d_in = int(d_model * proj_factor)
+    dh = d_in // n_heads
+    return {"conv": jnp.zeros((batch, conv_width - 1, d_in), dtype),
+            "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32)}
+
+
+def mlstm_block_step(p, state, x_t, n_heads: int):
+    dt = x_t.dtype
+    up = dense(p["w_up"], x_t, dt)                      # (B, d_in)
+    gate = dense(p["w_gate"], x_t, dt)
+    c, conv_w = conv1d_step(p["conv"], state["conv"].astype(dt), up)
+    c = jax.nn.silu(c)
+    B, d_in = up.shape
+    hd = d_in // n_heads
+    q = dense(p["wq"], c, dt).reshape(B, n_heads, hd)
+    k = dense(p["wk"], c, dt).reshape(B, n_heads, hd)
+    v = dense(p["wv"], up, dt).reshape(B, n_heads, hd)
+    i_g, f_g = jnp.split(dense(p["w_if"], up, dt), 2, axis=-1)
+    h, cell = mlstm_step({"C": state["C"], "n": state["n"], "m": state["m"]},
+                         q, k, v, i_g, f_g)
+    h = _groupnorm_heads(h[:, None], p["gn_scale"])[:, 0]
+    out = dense(p["w_down"], h * jax.nn.silu(gate), dt)
+    return out, {"conv": conv_w.astype(state["conv"].dtype), **cell}
+
+
+def make_slstm_block(key, d_model: int, n_heads: int, conv_width: int,
+                     ffn_factor: float):
+    ks = jax.random.split(key, 7)
+    d_ff = int(d_model * ffn_factor)
+    return {
+        "conv": make_conv1d(ks[0], d_model, conv_width),
+        "w_z": make_dense(ks[1], d_model, d_model),
+        "w_i": make_dense(ks[2], d_model, d_model),
+        "w_f": make_dense(ks[3], d_model, d_model),
+        "w_o": make_dense(ks[4], d_model, d_model),
+        "gn_scale": jnp.ones((d_model,), jnp.float32),
+        "ffn_up": make_dense(ks[5], d_model, d_ff),
+        "ffn_down": make_dense(ks[6], d_ff, d_model),
+    }
+
+
+def slstm_block_apply(p, x, n_heads: int, return_state: bool = False):
+    dt = x.dtype
+    c = jax.nn.silu(conv1d_causal(p["conv"], x))
+    z = _heads(dense(p["w_z"], c, dt), n_heads)
+    i = _heads(dense(p["w_i"], c, dt), n_heads)
+    f = _heads(dense(p["w_f"], c, dt), n_heads)
+    o = _heads(dense(p["w_o"], x, dt), n_heads)
+    hs = slstm_apply(z, i, f, o, return_state=return_state)
+    if return_state:
+        hs, state = hs
+    h = _groupnorm_heads(hs, p["gn_scale"])
+    h = dense(p["ffn_down"], jax.nn.gelu(dense(p["ffn_up"], h, dt)), dt)
+    if return_state:
+        K = p["conv"]["w"].shape[0]
+        return h, {"conv": x[:, -(K - 1):], **state}
+    return h
+
+
+def slstm_block_init_state(batch, d_model, n_heads, conv_width,
+                           dtype=jnp.bfloat16):
+    dh = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"conv": jnp.zeros((batch, conv_width - 1, d_model), dtype),
+            "c": z, "n": z, "m": jnp.full((batch, n_heads, dh), -1e30, jnp.float32)}
+
+
+def slstm_block_step(p, state, x_t, n_heads: int):
+    dt = x_t.dtype
+    c_in, conv_w = conv1d_step(p["conv"], state["conv"].astype(dt), x_t)
+    c_in = jax.nn.silu(c_in)
+    B, D = x_t.shape
+    hd = D // n_heads
+    z = dense(p["w_z"], c_in, dt).reshape(B, n_heads, hd)
+    i = dense(p["w_i"], c_in, dt).reshape(B, n_heads, hd)
+    f = dense(p["w_f"], c_in, dt).reshape(B, n_heads, hd)
+    o = dense(p["w_o"], x_t, dt).reshape(B, n_heads, hd)
+    h, cell = slstm_step({"c": state["c"], "n": state["n"], "m": state["m"]},
+                         z, i, f, o)
+    h = _groupnorm_heads(h[:, None], p["gn_scale"])[:, 0]
+    h = dense(p["ffn_down"], jax.nn.gelu(dense(p["ffn_up"], h, dt)), dt)
+    return h, {"conv": conv_w.astype(state["conv"].dtype), **cell}

@@ -1,0 +1,689 @@
+"""Unified model: one parameterized block family covers all 10 assigned archs.
+
+Layer kinds: "attn" (GQA + RoPE/M-RoPE/window/softcap), "mla" (DeepSeek-style
+latent attention, absorbed-matrix decode), "rec" (Griffin RG-LRU block),
+"mlstm"/"slstm" (xLSTM), "xattn" (whisper decoder: self + cross attention).
+MLP-ness per layer: dense MLP, MoE, or MoE + dense residual (arctic).
+
+Three entry points (all pure functions of (params, cfg, batch)):
+  * ``forward``      — teacher-forced training forward -> final hidden (B,S,D)
+  * ``prefill``      — forward + KV/recurrent cache construction
+  * ``decode_step``  — one token against the cache
+
+Layer stacking: consecutive layers with identical structure are grouped and
+scanned (`lax.scan` over stacked params; per-layer window sizes ride along as
+scanned data), so a 96-layer uniform stack compiles as one body.  Groups of
+size < 2 are unrolled.  `jax.checkpoint` (remat) wraps the per-layer body
+according to cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import recurrent as rec_mod
+from repro.models.layers import (apply_mrope, apply_rope, dense, make_dense,
+                                 make_mlp, make_norm, mlp, rmsnorm,
+                                 sinusoidal_positions, softcap)
+from repro.models.moe import make_moe, moe_apply_auto as moe_apply
+
+
+# ---------------------------------------------------------------------------
+# Layer plan / grouping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSig:
+    kind: str          # attn | mla | rec | mlstm | slstm | xattn
+    mlp: str           # dense | moe | moe+dense | none
+
+
+def layer_plan(cfg: ArchConfig) -> List[Tuple[LayerSig, int]]:
+    """Per-layer (signature, window)."""
+    plan = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn" and cfg.mla is not None:
+            kind = "mla"
+        if kind in ("rec", "mlstm", "slstm"):
+            m = "none"
+        elif cfg.moe is not None and i >= cfg.moe_layer_start:
+            m = "moe+dense" if cfg.dense_ff_residual else "moe"
+        else:
+            m = "dense"
+        plan.append((LayerSig(kind, m), cfg.window_for_layer(i)))
+    return plan
+
+
+def layer_groups(cfg: ArchConfig) -> List[Tuple[LayerSig, List[int], List[int]]]:
+    """Consecutive runs of identical structure: (sig, layer_ids, windows)."""
+    groups = []
+    for i, (sig, w) in enumerate(layer_plan(cfg)):
+        if groups and groups[-1][0] == sig:
+            groups[-1][1].append(i)
+            groups[-1][2].append(w)
+        else:
+            groups.append((sig, [i], [w]))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Per-layer param init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": make_dense(ks[0], D, H * Dh),
+            "wk": make_dense(ks[1], D, Hkv * Dh),
+            "wv": make_dense(ks[2], D, Hkv * Dh),
+            "wo": make_dense(ks[3], H * Dh, D)}
+
+
+def _init_mla(key, cfg: ArchConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    dq = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {"wkv_a": make_dense(ks[0], D, m.kv_lora_rank + m.qk_rope_head_dim),
+         "kv_norm": make_norm(m.kv_lora_rank),
+         "wkv_b": make_dense(ks[1], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim)),
+         "wo": make_dense(ks[2], H * m.v_head_dim, D)}
+    if m.q_lora_rank:
+        p["wq_a"] = make_dense(ks[3], D, m.q_lora_rank)
+        p["q_norm"] = make_norm(m.q_lora_rank)
+        p["wq_b"] = make_dense(ks[4], m.q_lora_rank, H * dq)
+    else:
+        p["wq"] = make_dense(ks[5], D, H * dq)
+    return p
+
+
+def _init_xattn(key, cfg: ArchConfig):
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {"xnorm": make_norm(D),
+            "xwq": make_dense(ks[0], D, H * Dh),
+            "xwk": make_dense(ks[1], D, H * Dh),
+            "xwv": make_dense(ks[2], D, H * Dh),
+            "xwo": make_dense(ks[3], H * Dh, D)}
+
+
+def _init_layer(key, cfg: ArchConfig, sig: LayerSig):
+    ks = jax.random.split(key, 6)
+    D = cfg.d_model
+    p: Dict[str, Any] = {"norm": make_norm(D)}
+    if sig.kind in ("attn", "xattn"):
+        p["attn"] = _init_attn(ks[0], cfg)
+        if sig.kind == "xattn":
+            p.update(_init_xattn(ks[4], cfg))
+    elif sig.kind == "mla":
+        p["attn"] = _init_mla(ks[0], cfg)
+    elif sig.kind == "rec":
+        p["rec"] = rec_mod.make_rec_block(ks[0], D, cfg.rglru.lru_width,
+                                          cfg.rglru.conv_width)
+    elif sig.kind == "mlstm":
+        p["mlstm"] = rec_mod.make_mlstm_block(ks[0], D, cfg.n_heads,
+                                              cfg.xlstm.proj_factor_m,
+                                              cfg.xlstm.conv_width)
+    elif sig.kind == "slstm":
+        p["slstm"] = rec_mod.make_slstm_block(ks[0], D, cfg.n_heads,
+                                              cfg.xlstm.conv_width,
+                                              cfg.xlstm.ffn_factor_s)
+    else:
+        raise ValueError(sig.kind)
+    if cfg.post_norm:
+        p["post_norm"] = make_norm(D)
+    if sig.mlp != "none" and not cfg.parallel_block:
+        p["norm2"] = make_norm(D)
+    if sig.mlp in ("dense",) or (sig.mlp == "moe+dense"):
+        p["mlp"] = make_mlp(ks[1], D, cfg.d_ff, cfg.mlp)
+    if sig.mlp in ("moe", "moe+dense"):
+        p["moe"] = make_moe(ks[2], D, cfg.moe, cfg.mlp)
+    if cfg.post_norm and sig.mlp != "none":
+        p["post_norm2"] = make_norm(D)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.padded_vocab
+    params: Dict[str, Any] = {
+        "embed": {"w": jax.random.normal(ks[0], (V, D), jnp.float32) * 0.01},
+        "final_norm": make_norm(D),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_dense(ks[1], D, V)
+
+    def stacked_group(key, sig, n):
+        keys = jax.random.split(key, n)
+        return jax.vmap(lambda k: _init_layer(k, cfg, sig))(keys)
+
+    groups = {}
+    gkeys = jax.random.split(ks[2], max(len(layer_groups(cfg)), 1))
+    for gi, (sig, ids, _) in enumerate(layer_groups(cfg)):
+        if len(ids) >= 2:
+            groups[f"g{gi}"] = stacked_group(gkeys[gi], sig, len(ids))
+        else:
+            groups[f"g{gi}"] = _init_layer(gkeys[gi], cfg, sig)
+    params["groups"] = groups
+
+    if cfg.encdec is not None:
+        ne = cfg.encdec.n_enc_layers
+        ekeys = jax.random.split(ks[3], 2)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_layer(k, cfg, LayerSig("attn", "dense")))(
+                jax.random.split(ekeys[0], ne)),
+            "final_norm": make_norm(D),
+        }
+        params["dec_pos"] = {"w": jax.random.normal(ks[4], (32768, D), jnp.float32) * 0.01}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layers (train/prefill path)
+# ---------------------------------------------------------------------------
+
+def _rope_qk(cfg, q, k, positions):
+    if cfg.mrope_sections is not None:
+        # positions: (3, B, S)
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attn_apply(p, cfg: ArchConfig, x, window, positions, *, causal=True,
+                use_rope=True, return_kv=False):
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = dense(p["wq"], x, dt).reshape(B, S, H, Dh)
+    k = dense(p["wk"], x, dt).reshape(B, S, Hkv, Dh)
+    v = dense(p["wv"], x, dt).reshape(B, S, Hkv, Dh)
+    if use_rope:
+        q, k = _rope_qk(cfg, q, k, positions)
+    o = attn_mod.chunked_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_logit_softcap,
+        scale=cfg.attn_scale)
+    out = dense(p["wo"], o.reshape(B, S, H * Dh), dt)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _mla_expand_qkv(p, cfg: ArchConfig, x, positions):
+    """Expanded (training/prefill) MLA: returns q, k, v and the latent cache."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    dt = x.dtype
+    if m.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], dense(p["wq_a"], x, dt), cfg.norm_eps)
+        q = dense(p["wq_b"], cq, dt).reshape(B, S, H, dn + dr)
+    else:
+        q = dense(p["wq"], x, dt).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    kv_a = dense(p["wkv_a"], x, dt)
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_pe = kv_a[..., m.kv_lora_rank:].reshape(B, S, 1, dr)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)
+    kv = dense(p["wkv_b"], c_kv, dt).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    return q, k, v, (c_kv, k_pe[:, :, 0])
+
+
+def _mla_apply(p, cfg: ArchConfig, x, window, positions, *, return_kv=False):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    q, k, v, cache = _mla_expand_qkv(p, cfg, x, positions)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = attn_mod.chunked_attention(q, k, v, causal=True, window=window,
+                                   softcap=cfg.attn_logit_softcap, scale=scale)
+    out = dense(p["wo"], o.reshape(B, S, H * m.v_head_dim), dt)
+    if return_kv:
+        return out, cache
+    return out
+
+
+def _mlp_apply(p, cfg: ArchConfig, sig: LayerSig, h, *, dropless=False):
+    aux = jnp.float32(0.0)
+    if sig.mlp == "dense":
+        y = mlp(p["mlp"], h, cfg.mlp, h.dtype)
+    elif sig.mlp == "moe":
+        y, aux = moe_apply(p["moe"], h, cfg.moe, cfg.mlp, dropless=dropless)
+    elif sig.mlp == "moe+dense":
+        y, aux = moe_apply(p["moe"], h, cfg.moe, cfg.mlp, dropless=dropless)
+        y = y + mlp(p["mlp"], h, cfg.mlp, h.dtype)
+    else:
+        y = jnp.zeros_like(h)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# One layer (train/prefill path).  Returns (x, aux_loss, cache_entry).
+# ---------------------------------------------------------------------------
+
+def layer_apply(p, cfg: ArchConfig, sig: LayerSig, x, window, positions,
+                *, enc_out=None, want_cache=False):
+    dt = x.dtype
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    cache_entry = None
+    if sig.kind in ("attn", "xattn"):
+        use_rope = cfg.encdec is None   # whisper: absolute positions, no rope
+        if want_cache:
+            a, (k, v) = _attn_apply(p["attn"], cfg, h, window, positions,
+                                    use_rope=use_rope, return_kv=True)
+            cache_entry = {"k": k, "v": v}
+        else:
+            a = _attn_apply(p["attn"], cfg, h, window, positions, use_rope=use_rope)
+    elif sig.kind == "mla":
+        if want_cache:
+            a, (c_kv, k_pe) = _mla_apply(p["attn"], cfg, h, window, positions,
+                                         return_kv=True)
+            cache_entry = {"c_kv": c_kv, "k_pe": k_pe}
+        else:
+            a = _mla_apply(p["attn"], cfg, h, window, positions)
+    elif sig.kind == "rec":
+        a = rec_mod.rec_block_apply(p["rec"], h, cfg.rglru.c_exponent,
+                                    return_state=want_cache)
+        if want_cache:
+            a, cache_entry = a
+    elif sig.kind == "mlstm":
+        a = rec_mod.mlstm_block_apply(p["mlstm"], h, cfg.n_heads,
+                                      return_state=want_cache)
+        if want_cache:
+            a, cache_entry = a
+    elif sig.kind == "slstm":
+        a = rec_mod.slstm_block_apply(p["slstm"], h, cfg.n_heads,
+                                      return_state=want_cache)
+        if want_cache:
+            a, cache_entry = a
+    else:
+        raise ValueError(sig.kind)
+
+    if cfg.post_norm:
+        a = rmsnorm(p["post_norm"], a, cfg.norm_eps)
+
+    if cfg.parallel_block and sig.mlp != "none":
+        y, aux = _mlp_apply(p, cfg, sig, h)
+        x = x + a + y
+    else:
+        x = x + a
+        if sig.kind == "xattn":
+            hx = rmsnorm(p["xnorm"], x, cfg.norm_eps)
+            B, S, D = hx.shape
+            H, Dh = cfg.n_heads, cfg.head_dim
+            q = dense(p["xwq"], hx, dt).reshape(B, S, H, Dh)
+            k = dense(p["xwk"], enc_out, dt).reshape(B, enc_out.shape[1], H, Dh)
+            v = dense(p["xwv"], enc_out, dt).reshape(B, enc_out.shape[1], H, Dh)
+            o = attn_mod.chunked_attention(q, k, v, causal=False, window=None)
+            x = x + dense(p["xwo"], o.reshape(B, S, H * Dh), dt)
+        if sig.mlp != "none":
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            y, aux = _mlp_apply(p, cfg, sig, h2)
+            if cfg.post_norm:
+                y = rmsnorm(p["post_norm2"], y, cfg.norm_eps)
+            x = x + y
+    return x, aux, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _pin_batch_sharding(x):
+    """Pin the residual stream to batch-over-data sharding.
+
+    Without this, GSPMD may redistribute activations inside the FSDP layer
+    loop (observed on nemotron-340b: fp32 all-reduces of batch-REPLICATED
+    activation tensors, 21 TiB of wire per step — §Perf cell B).  A
+    constraint at every layer boundary makes batch sharding a fixed point
+    of the propagation.
+    """
+    from repro.distributed.context import get_parallel
+    ctx = get_parallel()
+    if ctx is None or x.shape[0] % ctx.mesh.shape[ctx.dp_axes[0]]:
+        return x
+    spec = jax.sharding.PartitionSpec(ctx.dp_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
+def run_stack(params, cfg: ArchConfig, x, positions, *, enc_out=None,
+              want_cache=False):
+    """Run all layer groups.  Returns (x, total_aux, cache dict)."""
+    total_aux = jnp.float32(0.0)
+    cache: Dict[str, Any] = {}
+    for gi, (sig, ids, windows) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{gi}"]
+        warr = jnp.array(windows, jnp.int32)
+        if len(ids) >= 2:
+            def body(xc, scanned, sig=sig):
+                lp, w = scanned
+                xo, aux, ce = layer_apply(lp, cfg, sig, xc, w, positions,
+                                          enc_out=enc_out, want_cache=want_cache)
+                return _pin_batch_sharding(xo), (aux, ce)
+            body = _maybe_remat(body, cfg)
+            x, (auxs, ces) = jax.lax.scan(body, x, (gp, warr))
+            total_aux = total_aux + auxs.sum()
+            if want_cache and ces is not None:
+                cache[f"g{gi}"] = ces
+        else:
+            def body1(xc, lp, sig=sig, w=windows[0]):
+                return layer_apply(lp, cfg, sig, xc, jnp.int32(w), positions,
+                                   enc_out=enc_out, want_cache=want_cache)
+            body1 = _maybe_remat(body1, cfg)
+            x, aux, ce = body1(x, gp)
+            total_aux = total_aux + aux
+            if want_cache and ce is not None:
+                cache[f"g{gi}"] = ce
+    return x, total_aux, cache
+
+
+def _embed_in(params, cfg: ArchConfig, batch):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs == "embeds":
+        x = batch["embeds"].astype(dt)
+        positions = batch["positions"]          # (3, B, S) for M-RoPE
+    else:
+        tokens = batch["tokens"]
+        x = params["embed"]["w"].astype(dt)[tokens]
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x, positions
+
+
+def _encoder_out(params, cfg: ArchConfig, frames):
+    """Whisper encoder over stub frame embeddings (B, T, D)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + sinusoidal_positions(frames.shape[1],
+                                                 cfg.d_model).astype(dt)[None]
+    sig = LayerSig("attn", "dense")
+
+    def body(xc, lp):
+        h = rmsnorm(lp["norm"], xc, cfg.norm_eps)
+        a = _attn_apply(lp["attn"], cfg, h, None, None, causal=False,
+                        use_rope=False)
+        xc = xc + a
+        h2 = rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        y = mlp(lp["mlp"], h2, cfg.mlp, dt)
+        return xc + y, None
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, batch):
+    """Training forward: final hidden states (B, S, D) + aux loss."""
+    x, positions = _embed_in(params, cfg, batch)
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = _encoder_out(params, cfg, batch["frames"])
+        S = batch["tokens"].shape[1]
+        x = x + params["dec_pos"]["w"].astype(x.dtype)[:S][None]
+        positions = None
+    x, aux, _ = run_stack(params, cfg, x, positions, enc_out=enc_out)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_from_hidden(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"].astype(x.dtype).T
+        logits = x @ w
+    else:
+        logits = dense(params["lm_head"], x, x.dtype)
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ArchConfig, batch):
+    """Returns (cache, last-token logits).
+
+    The cache holds per-group KV (padded to max_len via decode-side concat —
+    here exact-length; the serve engine pre-pads) or recurrent state.
+    """
+    x, positions = _embed_in(params, cfg, batch)
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = _encoder_out(params, cfg, batch["frames"])
+        S = batch["tokens"].shape[1]
+        x = x + params["dec_pos"]["w"].astype(x.dtype)[:S][None]
+        positions = None
+    x, _, cache = run_stack(params, cfg, x, positions, enc_out=enc_out,
+                            want_cache=True)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    if cfg.encdec is not None:
+        cache["enc_out"] = enc_out
+    return cache, logits
+
+
+def init_decode_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Shape-only cache initializer (used by serve_step dry-runs and engine)."""
+    cache: Dict[str, Any] = {}
+    for gi, (sig, ids, _) in enumerate(layer_groups(cfg)):
+        n = len(ids)
+
+        def stack(tree):
+            if n >= 2:
+                return jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree)
+            return tree
+        if sig.kind in ("attn", "xattn"):
+            ent = {"k": jnp.zeros((batch_size, max_len, cfg.n_kv_heads,
+                                   cfg.head_dim), dtype),
+                   "v": jnp.zeros((batch_size, max_len, cfg.n_kv_heads,
+                                   cfg.head_dim), dtype)}
+        elif sig.kind == "mla":
+            m = cfg.mla
+            ent = {"c_kv": jnp.zeros((batch_size, max_len, m.kv_lora_rank), dtype),
+                   "k_pe": jnp.zeros((batch_size, max_len, m.qk_rope_head_dim),
+                                     dtype)}
+        elif sig.kind == "rec":
+            ent = rec_mod.rec_block_init_state(batch_size, cfg.rglru.lru_width,
+                                               cfg.rglru.conv_width, dtype)
+        elif sig.kind == "mlstm":
+            ent = rec_mod.mlstm_block_init_state(
+                batch_size, cfg.d_model, cfg.n_heads,
+                cfg.xlstm.proj_factor_m, cfg.xlstm.conv_width, dtype)
+        elif sig.kind == "slstm":
+            ent = rec_mod.slstm_block_init_state(batch_size, cfg.d_model,
+                                                 cfg.n_heads, cfg.xlstm.conv_width,
+                                                 dtype)
+        cache[f"g{gi}"] = stack(ent)
+    if cfg.encdec is not None:
+        cache["enc_out"] = jnp.zeros(
+            (batch_size, cfg.encdec.n_frames, cfg.d_model), dtype)
+    return cache
+
+
+def _decode_attn(p, cfg: ArchConfig, h, ce, cache_len, window, position):
+    """One-token GQA attention against the cache; updates cache in place."""
+    B = h.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = h.dtype
+    q = dense(p["wq"], h, dt).reshape(B, 1, H, Dh)
+    k = dense(p["wk"], h, dt).reshape(B, 1, Hkv, Dh)
+    v = dense(p["wv"], h, dt).reshape(B, 1, Hkv, Dh)
+    if cfg.encdec is None:
+        pos = jnp.broadcast_to(jnp.asarray(position), (B,))[:, None]
+        if cfg.mrope_sections is not None:
+            pos3 = jnp.broadcast_to(pos[None], (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+    bidx = jnp.arange(B)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    k_cache = ce["k"].at[bidx, lens].set(k[:, 0].astype(ce["k"].dtype))
+    v_cache = ce["v"].at[bidx, lens].set(v[:, 0].astype(ce["v"].dtype))
+    o = attn_mod.decode_attention(q, k_cache, v_cache, lens + 1,
+                                  window=window, softcap=cfg.attn_logit_softcap,
+                                  scale=cfg.attn_scale)
+    out = dense(p["wo"], o.reshape(B, 1, H * Dh)[:, 0], dt)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_mla(p, cfg: ArchConfig, h, ce, cache_len, position):
+    """Absorbed-matrix MLA decode: scores and context in the latent space.
+
+    Never expands the per-head K/V for cached positions — the cache stays
+    (B, S, r) + (B, S, dr), the MLA serving advantage.
+    """
+    m = cfg.mla
+    B = h.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    dt = h.dtype
+    if m.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], dense(p["wq_a"], h, dt), cfg.norm_eps)
+        q = dense(p["wq_b"], cq, dt).reshape(B, H, dn + dr)
+    else:
+        q = dense(p["wq"], h, dt).reshape(B, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    pos = jnp.broadcast_to(jnp.asarray(position), (B,))[:, None]
+    q_pe = apply_rope(q_pe[:, None], pos, cfg.rope_theta)[:, 0]      # (B,H,dr)
+
+    kv_a = dense(p["wkv_a"], h, dt)
+    c_kv_new = rmsnorm(p["kv_norm"], kv_a[..., :r], cfg.norm_eps)
+    k_pe_new = apply_rope(kv_a[..., r:][:, None, None], pos,
+                          cfg.rope_theta)[:, 0, 0]                    # (B,dr)
+    bidx = jnp.arange(B)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    c_cache = ce["c_kv"].at[bidx, lens].set(c_kv_new.astype(ce["c_kv"].dtype))
+    pe_cache = ce["k_pe"].at[bidx, lens].set(k_pe_new.astype(ce["k_pe"].dtype))
+
+    # Absorb W_UK into the query: q_lat[b,h,r] = sum_dn q_nope * W_uk[r,h,dn]
+    wkv_b = p["wkv_b"]["w"].astype(jnp.float32).reshape(r, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), w_uk)
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_pe.astype(jnp.float32),
+                      pe_cache.astype(jnp.float32))) * scale
+    s = softcap(s, cfg.attn_logit_softcap)
+    Smax = c_cache.shape[1]
+    valid = jnp.arange(Smax)[None, :] < (lens + 1)[:, None]
+    s = jnp.where(valid[:, None, :], s, attn_mod.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", pr, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv)                    # (B,H,dv)
+    out = dense(p["wo"], o.reshape(B, H * dv).astype(dt), dt)
+    return out, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def decode_layer(p, cfg: ArchConfig, sig: LayerSig, x, ce, cache_len, window,
+                 *, enc_cache=None):
+    """x: (B, D) one token.  Returns (x', cache_entry')."""
+    dt = x.dtype
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    if sig.kind in ("attn", "xattn"):
+        a, ce_new = _decode_attn(p["attn"], cfg, h[:, None], ce, cache_len,
+                                 window, cache_len)
+    elif sig.kind == "mla":
+        a, ce_new = _decode_mla(p["attn"], cfg, h, ce, cache_len, cache_len)
+    elif sig.kind == "rec":
+        a, ce_new = rec_mod.rec_block_step(p["rec"], ce, h, cfg.rglru.c_exponent)
+    elif sig.kind == "mlstm":
+        a, ce_new = rec_mod.mlstm_block_step(p["mlstm"], ce, h, cfg.n_heads)
+    elif sig.kind == "slstm":
+        a, ce_new = rec_mod.slstm_block_step(p["slstm"], ce, h, cfg.n_heads)
+    else:
+        raise ValueError(sig.kind)
+    if cfg.post_norm:
+        a = rmsnorm(p["post_norm"], a, cfg.norm_eps)
+
+    if cfg.parallel_block and sig.mlp != "none":
+        y, _ = _mlp_apply(p, cfg, sig, h, dropless=True)
+        x = x + a + y
+    else:
+        x = x + a
+        if sig.kind == "xattn":
+            hx = rmsnorm(p["xnorm"], x, cfg.norm_eps)
+            B = hx.shape[0]
+            H, Dh = cfg.n_heads, cfg.head_dim
+            T = enc_cache.shape[1]
+            q = dense(p["xwq"], hx, dt).reshape(B, 1, H, Dh)
+            k = dense(p["xwk"], enc_cache, dt).reshape(B, T, H, Dh)
+            v = dense(p["xwv"], enc_cache, dt).reshape(B, T, H, Dh)
+            o = attn_mod.decode_attention(q, k, v, jnp.full((B,), T))
+            x = x + dense(p["xwo"], o.reshape(B, H * Dh), dt)
+        if sig.mlp != "none":
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            y, _ = _mlp_apply(p, cfg, sig, h2, dropless=True)
+            if cfg.post_norm:
+                y = rmsnorm(p["post_norm2"], y, cfg.norm_eps)
+            x = x + y
+    return x, ce_new
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, cache_len):
+    """One decode step.  tokens: (B,) int32 (or embeds (B, D) for vlm stub).
+
+    Returns (new_cache, logits (B, V)).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs == "embeds":
+        x = tokens.astype(dt)
+    else:
+        x = params["embed"]["w"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.encdec is not None:
+        pos = jnp.broadcast_to(jnp.asarray(cache_len), (x.shape[0],))
+        x = x + params["dec_pos"]["w"].astype(dt)[pos]
+    enc_cache = cache.get("enc_out")
+    new_cache = dict(cache)
+    for gi, (sig, ids, windows) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{gi}"]
+        ce = cache[f"g{gi}"]
+        if len(ids) >= 2:
+            warr = jnp.array(windows, jnp.int32)
+
+            def body(xc, scanned, sig=sig):
+                lp, ce_l, w = scanned
+                xo, ce_new = decode_layer(lp, cfg, sig, xc, ce_l, cache_len, w,
+                                          enc_cache=enc_cache)
+                return xo, ce_new
+            x, ce_out = jax.lax.scan(body, x, (gp, ce, warr))
+        else:
+            x, ce_out = decode_layer(gp, cfg, sig, x, ce, cache_len,
+                                     jnp.int32(windows[0]), enc_cache=enc_cache)
+        new_cache[f"g{gi}"] = ce_out
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)
+    return new_cache, logits

@@ -1,0 +1,126 @@
+"""Morphological reconstruction as an IWPP `PropagationOp`, plus the FH
+initialization (raster/anti-raster) passes in two formulations:
+
+* ``raster_pass_scan``  — the GPU decomposition of paper Algorithm 5 (four
+  directional passes), each computed as an O(log n)-depth *associative
+  clamp-scan*: the FH row update  v_i = min(I_i, max(J_i, v_{i-1}))  is the
+  map x -> min(B, max(A, x)), and such clamps are closed under composition:
+      (A1,B1) then (A2,B2)  ==  (max(A1,A2), min(B2, max(A2,B1)))
+  This replaces the GPU's sequential per-row loop with a vectorizable scan —
+  the TPU-native adaptation described in DESIGN.md §2.
+* a dense full-sweep fallback used by the E0 engine (SR_GPU analogue).
+
+State pytree: {"J": marker (mutable), "I": mask (static), "valid": bool}.
+Updates only ever *increase* J toward min-with-I — commutative + monotone,
+satisfying the IWPP contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pattern import PropagationOp, shift2d
+
+
+def _neutral_min(dtype):
+    return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class MorphReconstructOp(PropagationOp):
+    """Grayscale reconstruction-by-dilation under mask I (paper §2.1)."""
+
+    @property
+    def static_leaves(self):
+        return ("I", "valid")
+
+    def make_state(self, marker: jnp.ndarray, mask: jnp.ndarray, valid=None):
+        J = jnp.minimum(marker, mask)
+        if valid is None:
+            valid = jnp.ones(J.shape, dtype=bool)
+        return {"J": J, "I": mask, "valid": valid}
+
+    def pad_value(self, state):
+        neut = _neutral_min(state["J"].dtype)
+        return {"J": neut, "I": neut, "valid": False}
+
+    def init_frontier(self, state) -> jnp.ndarray:
+        """FH queue condition (Algorithm 2 line 8, extended to full N_G as in
+        the GPU version, Algorithm 5 lines 16-18): p is queued iff it can
+        still propagate to some neighbor q: J(q) < J(p) and J(q) < I(q)."""
+        J, I = state["J"], state["I"]
+        neut = _neutral_min(J.dtype)
+        can = jnp.zeros(J.shape, dtype=bool)
+        for dr, dc in self.offsets:
+            Jq = shift2d(J, dr, dc, neut)
+            Iq = shift2d(I, dr, dc, neut)
+            can = can | ((Jq < J) & (Jq < Iq))
+        return can & state["valid"]
+
+    def round(self, state, frontier) -> Tuple[dict, jnp.ndarray]:
+        """One bulk round: every frontier pixel propagates to all neighbors.
+
+        J'(q) = min(I(q), max(J(q), max_{p in N(q) & frontier} J(p))).
+        The max-reduction over shifted neighbor planes computes, race-free,
+        what the GPU does with atomicMax (paper Algorithm 5 line 24).
+        """
+        J, I = state["J"], state["I"]
+        neut = _neutral_min(J.dtype)
+        src = jnp.where(frontier, J, neut)
+        cand = jnp.full_like(J, neut)
+        for dr, dc in self.offsets:
+            cand = jnp.maximum(cand, shift2d(src, dr, dc, neut))
+        Jn = jnp.minimum(I, jnp.maximum(J, cand))
+        new_frontier = (Jn > J) & state["valid"]
+        return {"J": Jn, "I": I, "valid": state["valid"]}, new_frontier
+
+
+# ---------------------------------------------------------------------------
+# FH initialization phase: directional raster passes.
+# ---------------------------------------------------------------------------
+
+def _clamp_compose(left, right):
+    """Compose two clamps x -> min(B, max(A, x)); `left` is applied first."""
+    A1, B1 = left
+    A2, B2 = right
+    return jnp.maximum(A1, A2), jnp.minimum(B2, jnp.maximum(A2, B1))
+
+
+def _directional_scan(J, I, axis: int, reverse: bool):
+    """One directional FH pass via associative clamp-scan along `axis`."""
+    A, B = jax.lax.associative_scan(
+        lambda l, r: _clamp_compose(l, r), (J, I), axis=axis, reverse=reverse)
+    # v_i = g_i(-inf) = min(B_i, A_i)
+    return jnp.minimum(B, A)
+
+
+def raster_pass_scan(J, I):
+    """Raster half-pass (row-wise then column-wise forward), Algorithm 5 l.2-8."""
+    J = _directional_scan(J, I, axis=1, reverse=False)
+    J = _directional_scan(J, I, axis=0, reverse=False)
+    return J
+
+
+def antiraster_pass_scan(J, I):
+    """Anti-raster half-pass (row/col backward), Algorithm 5 l.9-15."""
+    J = _directional_scan(J, I, axis=1, reverse=True)
+    J = _directional_scan(J, I, axis=0, reverse=True)
+    return J
+
+
+def fh_init(marker, mask, n_sweeps: int = 1):
+    """FH initialization: n_sweeps x (raster + anti-raster).  Returns J.
+
+    ``n_sweeps`` is the knob the paper uses (Table 1) to vary the initial
+    queue size: more sweeps resolve more propagation regularly, leaving a
+    smaller irregular wavefront.
+    """
+    J = jnp.minimum(marker, mask)
+    for _ in range(n_sweeps):
+        J = raster_pass_scan(J, mask)
+        J = antiraster_pass_scan(J, mask)
+    return J

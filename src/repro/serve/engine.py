@@ -1,0 +1,128 @@
+"""Slot-based serving engine (continuous-batching-lite).
+
+A fixed pool of B slots shares one decode cache; requests are admitted into
+free slots (prefill writes the slot's cache region), every engine step runs
+one batched `decode_step` for all active slots with per-slot cache lengths,
+and finished slots are recycled without stalling the others — the
+continuous-batching idea at its smallest useful size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (decode_step, init_decode_cache, prefill)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, n_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len = n_slots, max_len
+        self.temperature = temperature
+        self.cache = init_decode_cache(cfg, n_slots, max_len)
+        self.lens = np.zeros(n_slots, np.int32)        # valid cache length
+        self.remaining = np.zeros(n_slots, np.int32)   # tokens left to emit
+        self.active: Dict[int, Request] = {}           # slot -> request
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, l: decode_step(p, cfg, c, t, l))
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+
+    # -- admission -----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.B) if s not in self.active]
+
+    def add_request(self, req: Request) -> bool:
+        slots = self.free_slots()
+        if not slots:
+            return False
+        s = slots[0]
+        S = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if self.cfg.encdec is not None:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encdec.n_frames, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        pcache, logits = self._prefill(self.params, batch)
+        self._write_slot(s, pcache, S)
+        self.lens[s] = S
+        self.remaining[s] = req.max_new
+        req.out = []
+        self.active[s] = req
+        self.last_tok[s] = int(jnp.argmax(logits[0, -1]))
+        req.out.append(int(self.last_tok[s]))
+        return True
+
+    def _write_slot(self, slot: int, pcache, S: int):
+        """Copy a prefill cache (batch 1, exact length S) into slot's region.
+
+        Prefill entries mirror the decode-cache structure; kv-like leaves
+        differ in the sequence dim (S vs max_len), recurrent state leaves
+        differ only in the batch dim (1 vs B).
+        """
+        new_cache = {}
+        for gname, ent in self.cache.items():
+            if gname == "enc_out":
+                new_cache[gname] = ent.at[slot].set(
+                    pcache[gname][0].astype(ent.dtype))
+                continue
+            src = pcache[gname]
+            out_ent = {}
+            for k, dst in ent.items():
+                s_ = src[k]
+                # batch axis: where dst has B and src has 1
+                bax = next(i for i in range(dst.ndim)
+                           if dst.shape[i] == self.B and s_.shape[i] == 1)
+                idx = [slice(None)] * dst.ndim
+                idx[bax] = slice(slot, slot + 1)
+                if k in ("k", "v", "c_kv", "k_pe"):   # seq dim follows batch
+                    idx[bax + 1] = slice(0, s_.shape[bax + 1])
+                out_ent[k] = dst.at[tuple(idx)].set(s_.astype(dst.dtype))
+            new_cache[gname] = out_ent
+        self.cache = new_cache
+
+    # -- one decode step for all active slots ---------------------------------
+    def step(self) -> List[Request]:
+        if not self.active:
+            return []
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        lens = jnp.asarray(self.lens, jnp.int32)
+        self.cache, logits = self._decode(self.params, self.cache, toks, lens)
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            nxt = jax.random.categorical(k, logits / self.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt, np.int32)
+        done = []
+        for s in list(self.active):
+            self.lens[s] += 1
+            self.remaining[s] -= 1
+            self.last_tok[s] = nxt[s]
+            self.active[s].out.append(int(nxt[s]))
+            full = self.lens[s] >= self.max_len - 1
+            if self.remaining[s] <= 0 or full:
+                done.append(self.active.pop(s))
+        return done
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.active:
+                return
+            self.step()

@@ -1,0 +1,43 @@
+"""LM loss.  `xent_from_hidden` never materializes the full (B, S, V) fp32
+logit tensor: the sequence is scanned in chunks, each chunk's logits are
+formed in compute dtype and reduced to fp32 log-probs immediately.  For the
+roofline this trades nothing in FLOPs but caps the live-memory term of the
+loss layer at (B, chunk, V)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import logits_from_hidden
+
+IGNORE = -1   # label value excluded from the loss
+
+
+def _chunk_xent(params, cfg, h_chunk, labels_chunk):
+    logits = logits_from_hidden(params, cfg, h_chunk).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels_chunk, 0)[..., None], axis=-1)[..., 0]
+    valid = labels_chunk != IGNORE
+    return jnp.where(valid, lse - ll, 0.0).sum(), valid.sum()
+
+
+def xent_from_hidden(params, cfg, hidden, labels, seq_chunk: int = 1024):
+    """Mean cross entropy over valid tokens.  hidden: (B, S, D)."""
+    B, S, D = hidden.shape
+    c = min(seq_chunk, S)
+    if S % c:
+        c = S
+    n = S // c
+    hc = hidden.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, l = xs
+        t, k = _chunk_xent(params, cfg, h, l)
+        return (tot + t, cnt + k), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,114 @@
+"""Train / serve step factories.
+
+`make_train_step` builds the jit-able step: microbatched gradient
+accumulation (scan over microbatches keeps one live activation set),
+AdamW update, metrics.  `make_serve_step` builds the one-token decode step
+used by the decode_* dry-run cells and the serving engine.
+
+Both are pure (params, state, batch) -> ... functions; sharding comes from
+in_shardings at jit time (launch/dryrun.py, launch/train.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import decode_step, forward, prefill
+from repro.train.loss import xent_from_hidden
+from repro.train.optim import OptConfig, adamw_update
+
+
+def _stack_microbatches(batch, k: int):
+    """Reshape the batch to a leading (k, ...) microbatch axis for lax.scan.
+
+    A *static* reshape, not a dynamic slice: slicing a sharded batch dim at
+    a traced offset defeats GSPMD (it replicates the whole batch on every
+    data shard — a 16x compute bug caught by the HLO cost model; see
+    EXPERIMENTS.md §Perf).  The split is *strided* (microbatch i takes rows
+    i, i+k, i+2k, ...): reshaping (B,) -> (B/k, k) keeps each device's
+    contiguous row block aligned to the leading dim, so after the transpose
+    every microbatch is still sharded across the FULL data axis (a
+    contiguous split would land each microbatch on 1/k of the devices).
+    Gradient accumulation is permutation-invariant, so the assignment does
+    not change the update.
+    """
+    def one(key, x):
+        if key == "positions":                 # (3, B, S) -> (k, 3, B/k, S)
+            B = x.shape[1]
+            return x.reshape(x.shape[0], B // k, k, *x.shape[2:]) \
+                    .transpose(2, 0, 1, *range(3, x.ndim + 1))
+        B = x.shape[0]
+        return x.reshape(B // k, k, *x.shape[1:]).swapaxes(0, 1)
+    return {key: one(key, v) for key, v in batch.items()}
+
+
+def _cast_params(params, dtype):
+    """Cast fp32 master weights to the compute dtype BEFORE the layer scan.
+
+    Under FSDP the per-layer weights are all-gathered at use; casting the
+    stacked arrays first means the gathers move bf16, not fp32 — half the
+    collective bytes (§Perf cell B).  Norm scales and other small vectors
+    stay fp32 (their consumers upcast anyway).
+    """
+    dt = jnp.dtype(dtype)
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dt) if (p.dtype == jnp.float32 and p.ndim >= 2)
+        else p, params)
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss_fn(params, batch):
+        params = _cast_params(params, cfg.dtype)
+        hidden, aux = forward(params, cfg, batch)
+        loss = xent_from_hidden(params, cfg, hidden, batch["labels"])
+        return loss + aux, {"xent": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[OptConfig] = None,
+                    microbatches: int = 1):
+    opt_cfg = opt_cfg or OptConfig()
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            stacked = _stack_microbatches(batch, microbatches)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc, (g0, jnp.float32(0.0)), stacked)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {}
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om, **parts}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode: (params, cache, tokens, cache_len) -> (cache, logits)."""
+    def serve_step(params, cache, tokens, cache_len):
+        return decode_step(params, cfg, cache, tokens, cache_len)
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+    return prefill_step

@@ -1,0 +1,80 @@
+"""Euclidean distance transform: engines vs the paper's Algorithm 3 reference
+and the exact brute force (Danielsson 8-neighborhood is near-exact; paper
+Fig. 3 bounds the rare approximation error)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.frontier import run_dense
+from repro.core.tiles import run_tiled
+from repro.data.images import binary_blobs
+from repro.edt.ops import EdtOp, distance_map
+from repro.edt.ref import edt_bruteforce, edt_wavefront
+from repro.kernels.ops import tile_solver_edt
+
+
+def _assert_edt_close(d2, exact2):
+    """Danielsson bound: sqrt distances may deviate by a small fraction of a
+    pixel in rare configurations (paper Fig. 3: sqrt(170) vs sqrt(169))."""
+    d = np.sqrt(d2.astype(np.float64))
+    e = np.sqrt(exact2.astype(np.float64))
+    assert (d >= e - 1e-9).all(), "computed distance below exact minimum"
+    err = d - e
+    assert err.max() <= 0.5, f"max error {err.max()}"
+    assert (err > 1e-9).mean() <= 0.01, "too many approximate pixels"
+
+
+@pytest.mark.parametrize("conn", [8])
+@pytest.mark.parametrize("coverage", [0.3, 0.6, 0.9])
+def test_ref_wavefront_vs_bruteforce(conn, coverage):
+    fg = binary_blobs(40, 40, coverage, seed=0)
+    M, _ = edt_wavefront(fg, conn)
+    exact = edt_bruteforce(fg)
+    _assert_edt_close(M, exact)
+
+
+@pytest.mark.parametrize("engine", ["frontier", "sweep"])
+def test_dense_engine_matches_ref(engine):
+    fg = binary_blobs(48, 48, 0.55, seed=1)
+    ref_M, _ = edt_wavefront(fg, 8)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    out, _ = run_dense(op, state, engine)
+    M = np.asarray(distance_map(out))
+    np.testing.assert_array_equal(M, ref_M)
+
+
+@pytest.mark.parametrize("tile,cap", [(16, 64), (32, 8)])
+def test_tiled_engine_matches_ref(tile, cap):
+    fg = binary_blobs(64, 64, 0.5, seed=2)
+    ref_M, _ = edt_wavefront(fg, 8)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    out, stats = run_tiled(op, state, tile=tile, queue_capacity=cap)
+    M = np.asarray(distance_map(out))
+    np.testing.assert_array_equal(M, ref_M)
+
+
+def test_tiled_with_pallas_solver():
+    fg = binary_blobs(64, 64, 0.5, seed=3)
+    ref_M, _ = edt_wavefront(fg, 8)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    out, _ = run_tiled(op, state, tile=32, queue_capacity=32,
+                       tile_solver=tile_solver_edt(8, interpret=True))
+    M = np.asarray(distance_map(out))
+    np.testing.assert_array_equal(M, ref_M)
+
+
+def test_no_background_and_all_background():
+    op = EdtOp(connectivity=8)
+    # all background -> all distances zero
+    state = op.make_state(jnp.zeros((16, 16), bool))
+    out, _ = run_dense(op, state, "frontier")
+    assert np.asarray(distance_map(out)).max() == 0
+    # all foreground -> sentinel distances everywhere (no propagation source)
+    state = op.make_state(jnp.ones((16, 16), bool))
+    out, stats = run_dense(op, state, "frontier")
+    assert int(stats.rounds) == 0
+    assert (np.asarray(distance_map(out)) > 16 * 16).all()

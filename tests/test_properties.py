@@ -1,0 +1,116 @@
+"""Hypothesis property tests for the system's invariants.
+
+The IWPP contract (paper §3.1): updates are commutative + monotone, so any
+processing order / tiling / schedule reaches the same fixed point.  These
+tests generate adversarial small images and check the invariants the
+engines rely on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frontier import run_dense
+from repro.core.tiles import run_tiled
+from repro.distributed.compression import compress, decompress
+from repro.edt.ops import EdtOp, distance_map
+from repro.edt.ref import edt_wavefront
+from repro.morph.ops import MorphReconstructOp, _clamp_compose
+from repro.morph.ref import reconstruct_fh
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def image_pair(draw, max_h=24, max_w=24):
+    h = draw(st.integers(4, max_h))
+    w = draw(st.integers(4, max_w))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mask = rng.integers(0, 256, (h, w), dtype=np.int32)
+    marker = np.minimum(rng.integers(0, 256, (h, w), dtype=np.int32), mask)
+    return marker, mask
+
+
+@given(image_pair())
+@settings(**SETTINGS)
+def test_morph_fixed_point_unique_across_engines(pair):
+    marker, mask = pair
+    ref = reconstruct_fh(marker.copy(), mask, 8)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+    dense_out, _ = run_dense(op, state, "frontier")
+    tiled_out, _ = run_tiled(op, state, tile=8, queue_capacity=4)
+    np.testing.assert_array_equal(np.asarray(dense_out["J"]), ref)
+    np.testing.assert_array_equal(np.asarray(tiled_out["J"]), ref)
+
+
+@given(image_pair())
+@settings(**SETTINGS)
+def test_morph_bounds_and_idempotence(pair):
+    marker, mask = pair
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+    out, _ = run_dense(op, state, "frontier")
+    J = np.asarray(out["J"])
+    assert (J >= np.minimum(marker, mask)).all()    # monotone: only grows
+    assert (J <= mask).all()                        # clamped by the mask
+    # idempotence: a second run changes nothing and does zero rounds
+    out2, stats2 = run_dense(op, dict(out), "frontier")
+    np.testing.assert_array_equal(np.asarray(out2["J"]), J)
+    assert int(stats2.rounds) == 0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 24), st.integers(4, 24))
+@settings(**SETTINGS)
+def test_edt_lipschitz_and_zero_background(seed, h, w):
+    rng = np.random.default_rng(seed)
+    fg = rng.random((h, w)) < 0.6
+    op = EdtOp(connectivity=8)
+    out, _ = run_dense(op, op.make_state(jnp.asarray(fg)), "frontier")
+    M = np.sqrt(np.asarray(distance_map(out)).astype(np.float64))
+    if (~fg).any():
+        assert (M[~fg] == 0).all()                  # background distance 0
+        # neighbor Lipschitz: |d(p) - d(q)| <= sqrt(2) for 8-neighbors
+        for dr, dc in ((0, 1), (1, 0), (1, 1), (1, -1)):
+            a = M[max(0, -dr):h - max(0, dr), max(0, -dc):w - max(0, dc)]
+            b = M[max(0, dr):h - max(0, -dr), max(0, dc):w - max(0, -dc)]
+            assert (np.abs(a - b) <= np.sqrt(2) + 1e-9).all()
+        ref_M, _ = edt_wavefront(fg, 8)
+        np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_clamp_compose_is_associative(seed):
+    """The FH directional scan relies on clamp composition associativity."""
+    rng = np.random.default_rng(seed)
+    trips = [tuple(jnp.asarray(rng.normal(size=7).astype(np.float32))
+                   for _ in range(2)) for _ in range(3)]
+    f, g, h = trips
+    left = _clamp_compose(_clamp_compose(f, g), h)
+    right = _clamp_compose(f, _clamp_compose(g, h))
+    for l, r in zip(left, right):
+        np.testing.assert_allclose(np.asarray(l), np.asarray(r), rtol=1e-6)
+    # and it encodes function application: apply composed == apply seq
+    x = jnp.asarray(rng.normal(size=7).astype(np.float32))
+    seq = x
+    for A, B in trips:
+        seq = jnp.minimum(B, jnp.maximum(A, seq))
+    A, B = _clamp_compose(_clamp_compose(f, g), h)
+    np.testing.assert_allclose(np.asarray(jnp.minimum(B, jnp.maximum(A, x))),
+                               np.asarray(seq), rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2048))
+@settings(**SETTINGS)
+def test_compression_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32) * 10)
+    ef = jnp.zeros_like(g)
+    q, scale, new_ef = compress(g, ef)
+    err = np.abs(np.asarray(decompress(q, scale) - g))
+    assert err.max() <= float(scale) / 2 + 1e-6
+    np.testing.assert_allclose(np.asarray(decompress(q, scale) + new_ef),
+                               np.asarray(g), rtol=1e-5, atol=1e-5)

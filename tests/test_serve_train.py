@@ -1,0 +1,107 @@
+"""Serving engine behaviour + end-to-end training integration."""
+
+import dataclasses
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import smoke_config
+from repro.data.pipeline import DataIterator
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      logits_from_hidden)
+from repro.serve.engine import Request, ServeEngine
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import make_train_step
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    """Naive greedy decoding via repeated teacher-forced forward."""
+    toks = list(map(int, prompt))
+    for _ in range(n_new):
+        h, _ = forward(params, cfg, {"tokens": jnp.asarray([toks], jnp.int32)})
+        lg = logits_from_hidden(params, cfg, h)
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_naive_greedy():
+    cfg = dataclasses.replace(smoke_config("gemma2-27b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.array([5, 9, 2, 7, 11, 3], np.int32)
+    n_new = 6
+    ref = _greedy_reference(params, cfg, prompt, n_new)
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=64)
+    req = Request(rid=0, prompt=prompt, max_new=n_new)
+    assert eng.add_request(req)
+    eng.run_to_completion()
+    assert req.out[:n_new] == ref
+
+
+def test_engine_continuous_batching():
+    """Slots recycle: more requests than slots all finish."""
+    cfg = dataclasses.replace(smoke_config("xlstm-350m"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(2, 100, 5).astype(np.int32),
+                    max_new=3 + i) for i in range(5)]
+    pending = list(reqs)
+    done = []
+    for _ in range(200):
+        while pending and eng.add_request(pending[0]):
+            pending.pop(0)
+        done.extend(eng.step())
+        if not pending and not eng.active:
+            break
+    assert len(done) == 5
+    for r in reqs:
+        assert len(r.out) >= r.max_new
+
+
+def test_training_loss_decreases():
+    """A tiny model memorizes a repeating synthetic stream."""
+    cfg = dataclasses.replace(smoke_config("qwen2-vl-2b"), n_layers=2)
+    # token-input variant of the vlm backbone for a pure-LM fit test
+    cfg = dataclasses.replace(cfg, embed_inputs="tokens", mrope_sections=None,
+                              vocab_size=64, dtype="float32")
+    shape = ShapeSpec("t", 32, 8, "train")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(
+        cfg, OptConfig(lr=3e-3, warmup_steps=5, total_steps=60)))
+    it = DataIterator(cfg, shape)
+    first = None
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        batch = {k: (v % 64 if v.dtype == jnp.int32 else v)
+                 for k, v in batch.items()}
+        params, opt, m = step_fn(params, opt, batch)
+        if first is None:
+            first = float(m["loss"])
+    last = float(m["loss"])
+    assert last < first - 0.3, (first, last)
+
+
+def test_train_cli_checkpoint_restart(tmp_path):
+    """launch/train.py restarts from the latest checkpoint."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-350m",
+            "--smoke", "--batch", "2", "--seq", "32", "--ckpt-dir",
+            str(tmp_path), "--ckpt-every", "5", "--log-every", "5"]
+    r1 = subprocess.run(args + ["--steps", "5"], capture_output=True,
+                        text=True, timeout=560, env=env)
+    assert r1.returncode == 0, r1.stderr
+    r2 = subprocess.run(args + ["--steps", "10"], capture_output=True,
+                        text=True, timeout=560, env=env)
+    assert r2.returncode == 0, r2.stderr
+    assert "restored step 5" in r2.stdout
+    assert "step 10" in r2.stdout
