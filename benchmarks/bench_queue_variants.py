@@ -11,10 +11,14 @@ GPU queue designs.  Our TPU analogues of increasing locality:
   E2 tiled    — hierarchical: active-tile queue + VMEM-local drain (the
                 paper's TQ/BQ/GBQ multi-level design).
 
-Reported: initial frontier population, total queued work, and wall time
-per engine.  The paper's trend to reproduce: deeper init -> smaller queue
--> faster wavefront phase; hierarchical queueing wins and its advantage
-grows as the wavefront sparsifies.
+All runs go through ``repro.solve.solve``, so each row reports the same
+normalized SolveStats record (rounds / sources / tile drains / overflow
+events) — the uniform comparison EXPERIMENTS.md is built on.  A final row
+shows what the cost model would pick for each init depth (engine="auto").
+
+The paper's trend to reproduce: deeper init -> smaller queue -> faster
+wavefront phase; hierarchical queueing wins and its advantage grows as the
+wavefront sparsifies.
 """
 
 from __future__ import annotations
@@ -23,25 +27,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, morph_state, timeit
-from repro.core.frontier import run_dense
-from repro.core.tiles import run_tiled
+from repro.solve import solve
 
 
 def main(size: int = 512):
     for n_sweeps in (1, 2, 3, 4):
         op, state = morph_state(size, coverage=1.0, seed=0, n_sweeps=n_sweeps)
         init_q = int(jnp.sum(op.init_frontier(state)))
-        _, st = run_dense(op, state, "frontier")
-        total = int(st.sources_processed)
-        t0 = timeit(lambda: run_dense(op, state, "sweep"))
-        t1 = timeit(lambda: run_dense(op, state, "frontier"))
-        t2 = timeit(lambda: run_tiled(op, state, tile=128, queue_capacity=64))
+        _, st = solve(op, state, engine="frontier")
+        total = st.sources_processed
+        t0 = timeit(lambda: solve(op, state, engine="sweep")[0])
+        t1 = timeit(lambda: solve(op, state, engine="frontier")[0])
+        t2 = timeit(lambda: solve(op, state, engine="tiled",
+                                  tile=128, queue_capacity=64)[0])
+        _, s2 = solve(op, state, engine="tiled", tile=128, queue_capacity=64)
         emit(f"table1/sweeps={n_sweeps}/E0_sweep", t0,
              f"init_q={init_q};total_q={total}")
         emit(f"table1/sweeps={n_sweeps}/E1_frontier", t1,
-             f"speedup_vs_E0={t0 / t1:.2f}")
+             f"rounds={st.rounds};speedup_vs_E0={t0 / t1:.2f}")
         emit(f"table1/sweeps={n_sweeps}/E2_tiled", t2,
+             f"drains={s2.tiles_processed};overflows={s2.overflow_events};"
              f"speedup_vs_E0={t0 / t2:.2f};vs_E1={t1 / t2:.2f}")
+        _, sa = solve(op, state, engine="auto")
+        emit(f"table1/sweeps={n_sweeps}/auto", 0.0,
+             f"picked={sa.engine};tile={sa.tile};"
+             f"predicted_cost={sa.predicted_cost:.0f}")
 
 
 if __name__ == "__main__":

@@ -1,61 +1,62 @@
-"""Quickstart: the IWPP core API in 60 lines.
+"""Quickstart: the IWPP `solve()` API in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a synthetic tissue image, runs morphological reconstruction and the
-euclidean distance transform through three IWPP engines (dense frontier,
-tiled active-set, Pallas-kernel tiles), and checks them against the paper's
-sequential algorithms.
+euclidean distance transform through the unified ``solve()`` dispatcher —
+named engines plus cost-model ``engine="auto"`` — and checks every result
+against the paper's sequential algorithms.  README.md has the engine
+matrix; DESIGN.md §4 the dispatch architecture.
 """
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.frontier import run_dense
-from repro.core.tiles import run_tiled
 from repro.data.images import bg_disks, seeded_marker, tissue_image
 from repro.edt.ops import EdtOp, distance_map
 from repro.edt.ref import edt_wavefront
-from repro.kernels.ops import tile_solver_morph
 from repro.morph.ops import MorphReconstructOp
 from repro.morph.ref import reconstruct_fh
+from repro.solve import solve
 
 
 def main():
     # --- morphological reconstruction (paper Algorithm 2 / 5) -------------
     _, mask = tissue_image(256, 256, coverage=0.8, seed=0)
     marker = seeded_marker(mask, n_seeds=12, seed=0)
-    ref = reconstruct_fh(marker.copy(), mask, connectivity=8)
+    ref = reconstruct_fh(marker.copy(), mask, connectivity=8).astype(np.int32)
 
     op = MorphReconstructOp(connectivity=8)
     state = op.make_state(jnp.asarray(marker.astype(np.int32)),
                           jnp.asarray(mask.astype(np.int32)))
 
-    out, stats = run_dense(op, state, "frontier")
-    assert np.array_equal(np.asarray(out["J"]), ref.astype(np.int32))
-    print(f"morph / dense frontier : {int(stats.rounds)} rounds, "
-          f"{int(stats.sources_processed)} queued sources — matches FH ref")
+    for engine, kw in [("frontier", {}),
+                       ("tiled", dict(tile=64, queue_capacity=16)),
+                       ("tiled-pallas", dict(tile=64, queue_capacity=16)),
+                       ("scheduler", dict(tile=64, n_workers=2))]:
+        out, s = solve(op, state, engine=engine, **kw)
+        assert np.array_equal(np.asarray(out["J"]), ref)
+        print(f"morph / {engine:13s}: rounds={s.rounds} "
+              f"sources={s.sources_processed} tile_drains={s.tiles_processed} "
+              f"overflows={s.overflow_events} — matches FH ref")
 
-    out, tstats = run_tiled(op, state, tile=64, queue_capacity=16)
-    assert np.array_equal(np.asarray(out["J"]), ref.astype(np.int32))
-    print(f"morph / tiled queue    : {int(tstats.outer_rounds)} outer rounds, "
-          f"{int(tstats.tiles_processed)} tile drains — matches FH ref")
-
-    out, _ = run_tiled(op, state, tile=64, queue_capacity=16,
-                       tile_solver=tile_solver_morph(8, interpret=True))
-    assert np.array_equal(np.asarray(out["J"]), ref.astype(np.int32))
-    print("morph / Pallas kernel  : interpret-mode tile drain — matches FH ref")
+    # engine="auto": the cost model sees sparse seeds -> tiled hierarchy.
+    out, s = solve(op, state, engine="auto")
+    assert np.array_equal(np.asarray(out["J"]), ref)
+    print(f"morph / auto         -> picked {s.engine!r} (tile={s.tile}, "
+          f"predicted cost {s.predicted_cost:.0f}) — matches FH ref")
 
     # --- euclidean distance transform (paper Algorithm 3 / 6) -------------
     fg = bg_disks(256, 256, coverage=0.9, n_disks=3, seed=1)
     ref_M, _ = edt_wavefront(fg, connectivity=8)
     eop = EdtOp(connectivity=8)
     est = eop.make_state(jnp.asarray(fg))
-    out, stats = run_dense(eop, est, "frontier")
-    M = np.asarray(distance_map(out))
-    assert np.array_equal(M, ref_M)
-    print(f"edt   / dense frontier : {int(stats.rounds)} rounds, max dist "
-          f"{np.sqrt(M.max()):.1f}px — matches Algorithm 3 ref")
+    for engine in ("frontier", "auto"):
+        out, s = solve(eop, est, engine=engine)
+        M = np.asarray(distance_map(out))
+        assert np.array_equal(M, ref_M)
+        print(f"edt   / {engine:13s}: ran {s.engine!r}, rounds={s.rounds}, "
+              f"max dist {np.sqrt(M.max()):.1f}px — matches Algorithm 3 ref")
     print("OK")
 
 

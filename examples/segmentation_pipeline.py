@@ -22,11 +22,11 @@ import numpy as np
 
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import smoke_config
-from repro.core.tiles import run_tiled
 from repro.data.images import tissue_image
 from repro.edt.ops import EdtOp, distance_map
 from repro.models.transformer import forward, init_params
 from repro.morph.ops import MorphReconstructOp
+from repro.solve import solve
 
 
 def main():
@@ -39,18 +39,20 @@ def main():
     op = MorphReconstructOp(connectivity=8)
     st = op.make_state(jnp.asarray(marker.astype(np.int32)),
                        jnp.asarray(mask.astype(np.int32)))
-    out, stats = run_tiled(op, st, tile=64, queue_capacity=32)
+    out, stats = solve(op, st, engine="auto")
     recon = np.asarray(out["J"])
     domes = mask.astype(np.int32) - recon
-    print(f"[2] reconstruction: {int(stats.tiles_processed)} tile drains; "
+    print(f"[2] reconstruction via {stats.engine!r}: rounds={stats.rounds}, "
+          f"tile drains={stats.tiles_processed}; "
           f"h-dome pixels: {(domes > 5).sum()}")
 
     # 3. EDT on the cleaned foreground
     fg = jnp.asarray(domes > 5)
     eop = EdtOp(connectivity=8)
-    eout, _ = run_tiled(eop, eop.make_state(~fg), tile=64, queue_capacity=32)
+    eout, estats = solve(eop, eop.make_state(~fg), engine="auto")
     dist = np.sqrt(np.asarray(distance_map(eout), np.float64))
-    print(f"[3] EDT: max interior distance {dist.max():.1f}px")
+    print(f"[3] EDT via {estats.engine!r}: max interior distance "
+          f"{dist.max():.1f}px")
 
     # 4. object markers = local maxima of the distance map (3x3)
     pad = np.pad(dist, 1, constant_values=-1)

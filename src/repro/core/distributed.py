@@ -33,6 +33,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.pattern import PropagationOp, tree_shape
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-compat wrapper: jax.shard_map (new) vs jax.experimental (old)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def _shift_axis(x, axis_name: str, direction: int, fill, mesh_axis_size: int):
     """ppermute x to the neighbor `direction` steps along `axis_name`.
 
@@ -127,8 +137,6 @@ def run_sharded(op: PropagationOp, state, mesh: Mesh,
         block, _, rounds = jax.lax.while_loop(cond, body, (block, jnp.bool_(True), jnp.int32(0)))
         return block, rounds
 
-    fn = jax.shard_map(
-        device_fn, mesh=mesh, in_specs=(spec,),
-        out_specs=(spec, P()), check_vma=False)
+    fn = shard_map_compat(device_fn, mesh, (spec,), (spec, P()))
     out, rounds = jax.jit(fn)(state)
     return out, rounds

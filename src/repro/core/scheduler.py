@@ -46,12 +46,19 @@ class TileScheduler:
         Drains one (T+2, T+2) halo block to local stability.  ``border_changed``
         is a dict with keys 'top','bottom','left','right' of python bools.
     init_active : boolean (nty, ntx) array of initially-active tiles.
+    merge_block_fn : optional coordinate-aware merge: called as
+        ``merge_block_fn((r0, c0), old_inner, new_inner) -> merged`` with
+        dicts of all mutable leaves' tile interiors and the interior's
+        global origin.  Needed when the commutative merge couples leaves or
+        depends on pixel coordinates (e.g. EDT's Voronoi-pointer distance
+        compare); overrides ``merge_fn`` when given.
     """
 
     def __init__(self, state: Dict[str, np.ndarray], tile: int,
                  tile_fn: Callable, init_active: np.ndarray,
                  n_workers: int = 4, mutable=("J",),
                  merge_fn: Optional[Callable] = None,
+                 merge_block_fn: Optional[Callable] = None,
                  fail_worker: Optional[int] = None, fail_after: int = 3):
         H, W = next(iter(state.values())).shape[-2:]
         assert H % tile == 0 and W % tile == 0, "host scheduler expects tile-aligned grids"
@@ -65,6 +72,7 @@ class TileScheduler:
         # paper's atomicMax/atomicCAS: a worker that raced with a fresher
         # update must not regress it.  Default: elementwise max (morph).
         self.merge_fn = merge_fn or (lambda key, old, new: np.maximum(old, new))
+        self.merge_block_fn = merge_block_fn
         self.fail_worker = fail_worker
         self.fail_after = fail_after
         self._lock = threading.Lock()
@@ -104,10 +112,18 @@ class TileScheduler:
         T = self.tile
         r0, c0 = ty * T, tx * T
         changed_edges = {"top": False, "bottom": False, "left": False, "right": False}
+        merged_all = None
+        if self.merge_block_fn is not None:
+            old_all = {k: self.state[k][..., r0:r0 + T, c0:c0 + T]
+                       for k in self.mutable}
+            new_all = {k: np.asarray(block[k])[..., 1:-1, 1:-1]
+                       for k in self.mutable}
+            merged_all = self.merge_block_fn((r0, c0), old_all, new_all)
         for k in self.mutable:
             new_inner = np.asarray(block[k])[..., 1:-1, 1:-1]
             old_inner = self.state[k][..., r0:r0 + T, c0:c0 + T]
-            merged = self.merge_fn(k, old_inner, new_inner)
+            merged = (merged_all[k] if merged_all is not None
+                      else self.merge_fn(k, old_inner, new_inner))
             diff = merged != old_inner
             if diff.any():
                 changed_edges["top"] |= bool(diff[..., 0, :].any())

@@ -101,7 +101,10 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
               max_outer_rounds: int = 100_000,
               tile_solver: Optional[Callable] = None):
     """Run `op` to the global fixed point with the tiled active-set engine."""
-    solver = tile_solver or (lambda blk: _tile_local_solve(op, blk, max_iters=4 * tile))
+    # (T+2)^2 bounds the longest geodesic inside one halo block (a spiral
+    # path); the while_loop exits at stability so the bound is free normally.
+    solver = tile_solver or (lambda blk: _tile_local_solve(op, blk,
+                                                           max_iters=(tile + 2) ** 2))
     padded, (H, W, nty, ntx) = _pad_state(op, state, tile)
     # a queue longer than the tile grid only adds dead scan slots
     queue_capacity = min(queue_capacity, nty * ntx)

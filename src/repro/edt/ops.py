@@ -104,6 +104,20 @@ class EdtOp(PropagationOp):
         return new_state, changed
 
 
+def edt(fg, *, connectivity: int = 8, engine: str = "auto", **solve_kw):
+    """One-call squared EDT through the solve() dispatcher.
+
+    ``fg``: bool (H, W), True = foreground; distances are to the nearest
+    background pixel.  Returns (squared distance map, SolveStats); see
+    repro.solve.ENGINES for the engine names.
+    """
+    from repro.solve import solve
+    op = EdtOp(connectivity=connectivity)
+    out, stats = solve(op, op.make_state(jnp.asarray(fg)), engine=engine,
+                       **solve_kw)
+    return distance_map(out), stats
+
+
 def distance_map(state) -> jnp.ndarray:
     """Squared distance map from the converged Voronoi pointers (Alg. 3 l.13)."""
     vr = state["vr"]

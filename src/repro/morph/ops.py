@@ -79,6 +79,25 @@ class MorphReconstructOp(PropagationOp):
         return {"J": Jn, "I": I, "valid": state["valid"]}, new_frontier
 
 
+def reconstruct(marker, mask, *, connectivity: int = 8, engine: str = "auto",
+                n_sweeps: int = 0, **solve_kw):
+    """One-call morphological reconstruction through the solve() dispatcher.
+
+    Optionally runs ``n_sweeps`` FH raster/anti-raster init passes first
+    (paper Table 1's knob: deeper init -> smaller irregular wavefront), then
+    dispatches to the engine picked by ``engine`` (see repro.solve.ENGINES).
+    Returns (reconstructed J, SolveStats).
+    """
+    from repro.solve import solve
+    op = MorphReconstructOp(connectivity=connectivity)
+    J = jnp.asarray(marker)
+    I = jnp.asarray(mask)
+    if n_sweeps:
+        J = fh_init(J, I, n_sweeps=n_sweeps)
+    out, stats = solve(op, op.make_state(J, I), engine=engine, **solve_kw)
+    return out["J"], stats
+
+
 # ---------------------------------------------------------------------------
 # FH initialization phase: directional raster passes.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,585 @@
+"""Unified entry point for every IWPP engine: ``solve(op, state, ...)``.
+
+The paper's central claim (§3-§4) is that the *right* execution strategy for
+the irregular wavefront propagation pattern depends on the input: wavefront
+density, grid size, and the devices available.  The repo implements the
+strategies as separate engines; this module is the seam that picks among
+them:
+
+  engine name     implementation                        paper analogue
+  -------------   -----------------------------------   -------------------
+  "sweep"         core.frontier.run_dense  (E0)         SR_GPU full sweeps
+  "frontier"      core.frontier.run_dense  (E1)         Naive/PF queue
+  "tiled"         core.tiles.run_tiled     (E2)         TQ/BQ/GBQ hierarchy
+  "tiled-pallas"  run_tiled + kernels.ops tile solver   BQ drain in VMEM
+  "shard_map"     core.distributed.run_sharded (E3)     §4 TP/BP multi-GPU
+  "scheduler"     core.scheduler.TileScheduler          §4 Fig. 8 host FCFS
+  "auto"          CostModel ranking (+ autotune)        §4 demand-driven map
+
+``engine="auto"`` ranks candidate ``(engine, tile, queue_capacity)``
+configurations with a pluggable :class:`CostModel` — transfer cost plus
+per-tile drain cost, in the style of MATCH's ZigZag cost model — fed by
+cheap input statistics (seed-pixel density from ``op.init_frontier``, grid
+size, device count).  ``autotune=True`` additionally micro-benchmarks the
+model's top candidates on the real input and caches the winner keyed by an
+input signature, so repeated solves of same-shaped inputs pay nothing.
+
+Every engine returns the same normalized :class:`SolveStats` record so
+benchmarks and docs can compare engines uniformly.  See DESIGN.md §4 for
+the architecture and README.md for the engine-selection matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import run_sharded
+from repro.core.frontier import run_dense
+from repro.core.pattern import PropagationOp, tree_shape
+from repro.core.scheduler import TileScheduler
+from repro.core.tiles import _tile_local_solve, initial_active_tiles, run_tiled
+
+ENGINES = ("sweep", "frontier", "tiled", "tiled-pallas", "shard_map",
+           "scheduler", "auto")
+
+DEFAULT_TILES = (32, 64, 128)
+DEFAULT_QUEUE_CAPACITY = 64
+
+
+# ---------------------------------------------------------------------------
+# Normalized stats — the uniform record every engine reports.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolveStats:
+    """Engine-independent work record (rounds / sources / tiles / overflow).
+
+    ``rounds`` counts the engine's outermost convergence loop: dense rounds
+    for E0/E1, outer queue rounds for E2, BP rounds for E3, and FCFS
+    passes (always reported as 1) for the host scheduler.
+    """
+
+    engine: str
+    rounds: int = 0
+    sources_processed: int = 0     # frontier pixels acted on (dense engines)
+    tiles_processed: int = 0       # tile drains (tiled/scheduler engines)
+    overflow_events: int = 0       # rounds where active tiles > queue capacity
+    requeues: int = 0              # scheduler fault-tolerance requeues
+    tile: Optional[int] = None
+    queue_capacity: Optional[int] = None
+    n_devices: int = 1
+    predicted_cost: Optional[float] = None   # CostModel units (auto only)
+    autotuned: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Engine registries: per-op plug points for the non-generic engines.
+# ---------------------------------------------------------------------------
+
+# op class -> factory(op, interpret) -> tile_solver for run_tiled
+_PALLAS_SOLVERS: Dict[type, Callable] = {}
+# op class -> factory(op) -> merge_block_fn for TileScheduler (None = default
+# elementwise-max merge, valid for any single-plane monotone-max op)
+_SCHEDULER_MERGES: Dict[type, Callable] = {}
+
+
+def register_pallas_solver(op_cls: type, factory: Callable) -> None:
+    """Register ``factory(op, interpret) -> tile_solver`` for an op class."""
+    _PALLAS_SOLVERS[op_cls] = factory
+
+
+def register_scheduler_merge(op_cls: type, factory: Callable) -> None:
+    """Register ``factory(op) -> merge_block_fn`` for the host scheduler."""
+    _SCHEDULER_MERGES[op_cls] = factory
+
+
+def _registry_lookup(registry: Dict[type, Callable], op: PropagationOp):
+    for cls in type(op).__mro__:
+        if cls in registry:
+            return registry[cls]
+    return None
+
+
+def _register_builtin_ops():
+    from repro.edt.ops import EdtOp
+    from repro.kernels.ops import tile_solver_edt, tile_solver_morph
+    from repro.morph.ops import MorphReconstructOp
+
+    register_pallas_solver(
+        MorphReconstructOp,
+        lambda op, interpret: tile_solver_morph(op.connectivity, interpret))
+    register_pallas_solver(
+        EdtOp, lambda op, interpret: tile_solver_edt(op.connectivity, interpret))
+
+    # Morph: default elementwise max on "J" is the correct commutative merge.
+    register_scheduler_merge(MorphReconstructOp, lambda op: None)
+
+    def _edt_merge_factory(op):
+        def merge(origin, old_inner, new_inner):
+            # Keep, per pixel, whichever Voronoi pointer is closer; the
+            # host-scheduler analogue of Algorithm 6's atomicCAS retry.
+            r0, c0 = origin
+            vo = old_inner["vr"].astype(np.int64)
+            vn = new_inner["vr"].astype(np.int64)
+            T_h, T_w = vo.shape[-2:]
+            rr = (r0 + np.arange(T_h))[:, None]
+            cc = (c0 + np.arange(T_w))[None, :]
+            d_old = (rr - vo[0]) ** 2 + (cc - vo[1]) ** 2
+            d_new = (rr - vn[0]) ** 2 + (cc - vn[1]) ** 2
+            take = d_new < d_old
+            return {"vr": np.where(take[None], new_inner["vr"], old_inner["vr"])}
+        return merge
+
+    register_scheduler_merge(EdtOp, _edt_merge_factory)
+
+
+# ---------------------------------------------------------------------------
+# Input statistics — the cheap probes that feed the cost model.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputStats:
+    """What the cost model knows about one input (all O(N) probes)."""
+
+    height: int
+    width: int
+    n_sources: int                      # initial frontier population
+    active_tiles: Dict[int, int]        # tile size -> initially-active tiles
+    n_devices: int
+
+    @property
+    def area(self) -> int:
+        return self.height * self.width
+
+    @property
+    def density(self) -> float:
+        return self.n_sources / max(self.area, 1)
+
+    @property
+    def depth_est(self) -> float:
+        """Expected propagation depth (rounds to the fixed point).
+
+        Mean inter-source spacing: sparse seeds must sweep waves across
+        O(sqrt(area / n_sources)) pixels; a near-full frontier converges in
+        O(1) rounds.  This single number is what separates the dense and
+        tiled regimes (paper Table 1 / Fig. 12).
+        """
+        return max(1.0, math.sqrt(self.area / max(self.n_sources, 1)))
+
+    def n_tiles(self, tile: int) -> int:
+        return (-(-self.height // tile)) * (-(-self.width // tile))
+
+
+def collect_input_stats(op: PropagationOp, state, n_devices: int = 1,
+                        tiles: Sequence[int] = DEFAULT_TILES) -> InputStats:
+    H, W = tree_shape(state)
+    f0 = op.init_frontier(state)
+    n_sources = int(jnp.sum(f0))
+    active = {t: int(jnp.sum(initial_active_tiles(op, state, t)))
+              for t in tiles}
+    return InputStats(H, W, n_sources, active, n_devices)
+
+
+# ---------------------------------------------------------------------------
+# Cost model — MATCH-style: transfer cost + innermost (drain) cost.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    engine: str
+    tile: Optional[int] = None
+    queue_capacity: Optional[int] = None
+
+
+class CostModel:
+    """Relative-cost model for engine selection (unit: one HBM pixel touch).
+
+    Follows the MATCH/ZigZag split: ``transfer_cost`` charges the data an
+    engine moves through the slow memory level, ``drain_cost`` charges the
+    compute of the innermost propagation loops.  Subclass and override the
+    two methods (and/or the constants) to retarget the model — e.g. measured
+    HBM/VMEM bandwidths of a specific TPU generation.
+
+    The qualitative shape mirrors the paper's findings: dense engines pay
+    the full grid every round, so they win when the wavefront covers the
+    grid and converges in few rounds; the tiled hierarchy pays only active
+    tiles plus a per-drain dispatch overhead, so it wins as the wavefront
+    sparsifies (paper Fig. 12: speedups grow with wave sparsity).
+    """
+
+    # Relative VMEM:HBM bandwidth — inner drain iterations stay on-chip, so
+    # a tile's local rounds are discounted by this factor (the paper's BQ
+    # amortization argument).
+    vmem_discount = 1.0 / 16.0
+    # Fixed cost of dispatching one tile drain (lax.scan step / host call).
+    tile_dispatch = 500.0
+    # E0 recomputes every valid pixel with no tracking: constant-factor
+    # penalty over E1 plus the extra settle rounds.
+    sweep_penalty = 1.25
+    # Per-BP-round collective latency on a mesh, per device.
+    collective_latency = 5_000.0
+    # Host (numpy/threading) path: slower per-pixel than the XLA path, plus
+    # Python dispatch per drain.
+    host_penalty = 20.0
+    host_dispatch = 20_000.0
+    # Pallas interpret mode executes the kernel body in Python — only ever
+    # competitive when compiled for a real TPU.
+    interpret_penalty = 50.0
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    # -- helpers -----------------------------------------------------------
+    def _drains(self, stats: InputStats, tile: int) -> float:
+        """Expected tile drains: initially-active tiles, re-drained once per
+        tile-layer the wavefront crosses."""
+        active0 = max(1, stats.active_tiles.get(tile, stats.n_tiles(tile)))
+        return active0 * max(1.0, stats.depth_est / tile)
+
+    # -- the two MATCH-style plug points -----------------------------------
+    def transfer_cost(self, stats: InputStats, cfg: EngineConfig) -> float:
+        """Slow-memory traffic (pixels moved between rounds)."""
+        e = cfg.engine
+        if e == "frontier":
+            return stats.depth_est * stats.area
+        if e == "sweep":
+            return (stats.depth_est + 2) * stats.area * self.sweep_penalty
+        if e in ("tiled", "tiled-pallas", "scheduler"):
+            block = (cfg.tile + 2) ** 2
+            return self._drains(stats, cfg.tile) * block
+        if e == "shard_map":
+            bp_rounds = self._bp_rounds(stats)
+            halo = 2 * (stats.height + stats.width)
+            return (stats.depth_est * stats.area / stats.n_devices
+                    + bp_rounds * halo)
+        raise ValueError(f"unknown engine {e!r}")
+
+    def drain_cost(self, stats: InputStats, cfg: EngineConfig) -> float:
+        """Innermost-loop compute (discounted when resident on-chip)."""
+        e = cfg.engine
+        if e in ("frontier", "sweep"):
+            return 0.0  # dense engines are bandwidth-bound; folded above
+        if e in ("tiled", "tiled-pallas"):
+            block = (cfg.tile + 2) ** 2
+            inner = block * cfg.tile * self.vmem_discount
+            if e == "tiled-pallas" and self.interpret:
+                inner *= self.interpret_penalty
+            drains = self._drains(stats, cfg.tile)
+            return drains * inner + drains * self.tile_dispatch
+        if e == "scheduler":
+            block = (cfg.tile + 2) ** 2
+            drains = self._drains(stats, cfg.tile)
+            return (drains * block * cfg.tile * self.vmem_discount
+                    * self.host_penalty + drains * self.host_dispatch)
+        if e == "shard_map":
+            return self._bp_rounds(stats) * self.collective_latency * stats.n_devices
+        raise ValueError(f"unknown engine {e!r}")
+
+    def _bp_rounds(self, stats: InputStats) -> float:
+        side = max(1.0, math.sqrt(stats.n_devices))
+        block_side = min(stats.height, stats.width) / side
+        return max(1.0, stats.depth_est / max(block_side, 1.0))
+
+    # -- ranking -----------------------------------------------------------
+    def cost(self, stats: InputStats, cfg: EngineConfig) -> float:
+        return self.transfer_cost(stats, cfg) + self.drain_cost(stats, cfg)
+
+    def candidates(self, stats: InputStats,
+                   tiles: Sequence[int] = DEFAULT_TILES) -> List[EngineConfig]:
+        out = [EngineConfig("frontier"), EngineConfig("sweep")]
+        usable = [t for t in tiles if t <= 2 * max(stats.height, stats.width)]
+        for t in usable or [min(tiles)]:
+            cap = min(max(4, stats.n_tiles(t)), 256)
+            out.append(EngineConfig("tiled", t, cap))
+            out.append(EngineConfig("tiled-pallas", t, cap))
+            out.append(EngineConfig("scheduler", t, cap))
+        if stats.n_devices > 1:
+            out.append(EngineConfig("shard_map"))
+        return out
+
+    def rank(self, stats: InputStats,
+             candidates: Optional[Sequence[EngineConfig]] = None
+             ) -> List[Tuple[float, EngineConfig]]:
+        cands = candidates if candidates is not None else self.candidates(stats)
+        scored = [(self.cost(stats, c), c) for c in cands]
+        scored.sort(key=lambda sc: sc[0])
+        return scored
+
+
+# ---------------------------------------------------------------------------
+# Autotune — micro-benchmark the model's top candidates, cache winners.
+# ---------------------------------------------------------------------------
+
+# signature -> (EngineConfig, measured seconds)
+_AUTOTUNE_CACHE: Dict[tuple, Tuple[EngineConfig, float]] = {}
+
+
+def autotune_signature(op: PropagationOp, stats: InputStats,
+                       restrictions: tuple = ()) -> tuple:
+    """Cache key: op identity + shape + density bucket + device count, plus
+    any caller restrictions on the candidate set (tile / queue_capacity) so
+    a restricted solve never reuses an unrestricted winner.
+
+    The density bucket (decade of the seed-pixel density) is what the cost
+    regimes actually depend on; exact pixel values don't matter.
+    """
+    bucket = (-99 if stats.n_sources == 0
+              else int(math.floor(math.log10(max(stats.density, 1e-9)))))
+    return (type(op).__name__, op.connectivity, stats.height, stats.width,
+            bucket, stats.n_devices) + tuple(restrictions)
+
+
+def clear_autotune_cache() -> None:
+    _AUTOTUNE_CACHE.clear()
+
+
+def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
+              top_k: int, repeats: int, **run_kw) -> EngineConfig:
+    sig = autotune_signature(op, stats, restrictions)
+    if sig in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[sig][0]
+    ranked = model.rank(stats, candidates)
+    best_cfg, best_t = None, float("inf")
+    for _, cfg in ranked[:top_k]:
+        try:
+            runner = lambda: _run_engine(op, state, cfg, **run_kw)
+            jax.block_until_ready(runner()[0])       # warm/compile
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(runner()[0])
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+        except Exception:
+            continue
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    if best_cfg is None:                              # all candidates failed
+        best_cfg, best_t = ranked[0][1], float("nan")
+    _AUTOTUNE_CACHE[sig] = (best_cfg, best_t)
+    return best_cfg
+
+
+# ---------------------------------------------------------------------------
+# Engine adapters.
+# ---------------------------------------------------------------------------
+
+def _pad_to_multiple(op, state, mult_h: int, mult_w: int):
+    """Bottom/right-pad every leaf to a grid multiple with neutral values.
+
+    Padded cells are invalid and hold ``op.pad_value`` fills, so they can
+    never source a propagation; cropping afterwards restores the domain.
+    """
+    H, W = tree_shape(state)
+    Hp, Wp = -(-H // mult_h) * mult_h, -(-W // mult_w) * mult_w
+    if (Hp, Wp) == (H, W):
+        return state, (H, W)
+    pv = op.pad_value(state)
+    padded = jax.tree_util.tree_map(
+        lambda x, v: jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, Hp - H), (0, Wp - W)],
+                             constant_values=v),
+        state, pv)
+    return padded, (H, W)
+
+
+def _crop(state, H: int, W: int):
+    return jax.tree_util.tree_map(lambda x: x[..., :H, :W], state)
+
+
+def _mesh_shape(n: int) -> Tuple[int, int]:
+    """Most-square factorization of the device count."""
+    r = int(math.sqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def _run_dense_engine(op, state, cfg, max_rounds, **_):
+    out, st = run_dense(op, state, cfg.engine, max_rounds)
+    return out, SolveStats(cfg.engine, rounds=int(st.rounds),
+                           sources_processed=int(st.sources_processed))
+
+
+# Memoized per (op identity, interpret) so run_tiled's static tile_solver
+# argument stays hash-stable across solve() calls (avoids recompiles).
+_SOLVER_MEMO: Dict[tuple, Callable] = {}
+
+
+def _pallas_solver_for(op, interpret: bool):
+    key = (type(op), op.connectivity, interpret)
+    if key not in _SOLVER_MEMO:
+        factory = _registry_lookup(_PALLAS_SOLVERS, op)
+        if factory is None:
+            raise ValueError(
+                f"no Pallas tile solver registered for {type(op).__name__}; "
+                "use register_pallas_solver() or engine='tiled'")
+        _SOLVER_MEMO[key] = factory(op, interpret)
+    return _SOLVER_MEMO[key]
+
+
+def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
+    solver = None
+    if cfg.engine == "tiled-pallas":
+        solver = _pallas_solver_for(op, interpret)
+    tile = cfg.tile or DEFAULT_TILES[1]
+    cap = cfg.queue_capacity or DEFAULT_QUEUE_CAPACITY
+    out, st = run_tiled(op, state, tile=tile, queue_capacity=cap,
+                        max_outer_rounds=max_rounds, tile_solver=solver)
+    return out, SolveStats(cfg.engine, rounds=int(st.outer_rounds),
+                           tiles_processed=int(st.tiles_processed),
+                           overflow_events=int(st.overflow_events),
+                           tile=tile, queue_capacity=cap)
+
+
+def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
+    devices = list(devices) if devices is not None else jax.devices()
+    nr, nc = _mesh_shape(len(devices))
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(devices).reshape(nr, nc), ("data", "model"))
+    padded, (H, W) = _pad_to_multiple(op, state, nr, nc)
+    out, rounds = run_sharded(op, padded, mesh)
+    return _crop(out, H, W), SolveStats("shard_map", rounds=int(rounds),
+                                        n_devices=len(devices))
+
+
+# Memoized per (op identity, tile) so the jitted drain isn't retraced on
+# every solve() call (same pattern as _SOLVER_MEMO).
+_DRAIN_MEMO: Dict[tuple, Callable] = {}
+
+
+def _scheduler_drain_for(op, tile: int):
+    key = (type(op), op.connectivity, tile)
+    if key not in _DRAIN_MEMO:
+        @jax.jit
+        def _drain(blk):
+            # Sanitize: the scheduler's halo slices fill out-of-array cells
+            # with dtype-min, not the op's neutral value; force every invalid
+            # cell to the neutral fill so it can never source a propagation.
+            blk = dict(blk)
+            pv = op.pad_value(blk)
+            v = blk["valid"]
+            for k in blk:
+                if k != "valid":
+                    blk[k] = jnp.where(v, blk[k], jnp.asarray(pv[k], blk[k].dtype))
+            # (T+2)^2 iterations bound the longest geodesic inside one block
+            # (e.g. a spiral mask); the while_loop exits at stability, so the
+            # generous bound costs nothing in the common case.
+            return _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
+        _DRAIN_MEMO[key] = _drain
+    return _DRAIN_MEMO[key]
+
+
+def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
+    tile = cfg.tile or DEFAULT_TILES[1]
+    padded, (H, W) = _pad_to_multiple(op, state, tile, tile)
+    # np.array (not asarray): JAX buffers give read-only numpy views, and the
+    # scheduler writes tile interiors back into this state in place.
+    np_state = {k: np.array(v) for k, v in padded.items()}
+    active = np.asarray(initial_active_tiles(op, padded, tile))
+    _drain = _scheduler_drain_for(op, tile)
+
+    def tile_fn(block):
+        out = _drain({k: jnp.asarray(b) for k, b in block.items()})
+        return {k: np.asarray(b) for k, b in out.items()}, None
+
+    merge_factory = _registry_lookup(_SCHEDULER_MERGES, op)
+    merge_block_fn = merge_factory(op) if merge_factory is not None else None
+    mutable = tuple(k for k in np_state if k not in op.static_leaves)
+    sched = TileScheduler(np_state, tile, tile_fn, active,
+                          n_workers=n_workers, mutable=mutable,
+                          merge_block_fn=merge_block_fn)
+    st = sched.run()
+    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
+    return out, SolveStats("scheduler", rounds=1,
+                           tiles_processed=st.tiles_processed,
+                           requeues=st.requeues_from_failures,
+                           tile=tile)
+
+
+_ENGINE_RUNNERS = {
+    "sweep": _run_dense_engine,
+    "frontier": _run_dense_engine,
+    "tiled": _run_tiled_engine,
+    "tiled-pallas": _run_tiled_engine,
+    "shard_map": _run_shard_map_engine,
+    "scheduler": _run_scheduler_engine,
+}
+
+
+def _run_engine(op, state, cfg: EngineConfig, **kw):
+    return _ENGINE_RUNNERS[cfg.engine](op, state, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Public API.
+# ---------------------------------------------------------------------------
+
+def solve(op: PropagationOp, state, *, engine: str = "auto",
+          devices: Optional[Sequence] = None,
+          tile: Optional[int] = None,
+          queue_capacity: Optional[int] = None,
+          max_rounds: int = 1_000_000,
+          cost_model: Optional[CostModel] = None,
+          autotune: bool = False,
+          autotune_top_k: int = 3,
+          autotune_repeats: int = 2,
+          interpret: bool = True,
+          n_workers: int = 4) -> Tuple[Any, SolveStats]:
+    """Run ``op`` on ``state`` to its fixed point; return (state, SolveStats).
+
+    Parameters
+    ----------
+    engine : one of :data:`ENGINES`.  ``"auto"`` ranks candidates with
+        ``cost_model`` (default :class:`CostModel`) and runs the cheapest.
+    devices : device list for ``"shard_map"`` (default: ``jax.devices()``);
+        also sets the device count the cost model sees.
+    tile, queue_capacity : override the tiled engines' blocking; under
+        ``"auto"`` they restrict the candidate set instead.
+    autotune : with ``engine="auto"``, micro-benchmark the model's top
+        ``autotune_top_k`` candidates on this input (``autotune_repeats``
+        timed runs each after a warm-up) and cache the winner keyed by
+        :func:`autotune_signature`.
+    interpret : run Pallas kernels in interpret mode (required off-TPU).
+    n_workers : host threads for the ``"scheduler"`` engine.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    run_kw = dict(max_rounds=max_rounds, devices=devices,
+                  interpret=interpret, n_workers=n_workers)
+
+    if engine != "auto":
+        cfg = EngineConfig(engine, tile, queue_capacity)
+        return _run_engine(op, state, cfg, **run_kw)
+
+    n_devices = len(devices) if devices is not None else len(jax.devices())
+    tiles = (tile,) if tile is not None else DEFAULT_TILES
+    stats_in = collect_input_stats(op, state, n_devices, tiles)
+    model = cost_model if cost_model is not None else CostModel(interpret=interpret)
+
+    cands = model.candidates(stats_in, tiles)
+    if queue_capacity is not None:
+        cands = [dataclasses.replace(c, queue_capacity=queue_capacity)
+                 if c.queue_capacity is not None else c for c in cands]
+
+    if autotune:
+        cfg = _autotune(op, state, stats_in, model, cands,
+                        (tile, queue_capacity),
+                        autotune_top_k, autotune_repeats, **run_kw)
+        out, st = _run_engine(op, state, cfg, **run_kw)
+        return out, dataclasses.replace(
+            st, autotuned=True, predicted_cost=model.cost(stats_in, cfg),
+            n_devices=max(st.n_devices, 1))
+
+    cost, cfg = model.rank(stats_in, cands)[0]
+    out, st = _run_engine(op, state, cfg, **run_kw)
+    return out, dataclasses.replace(st, predicted_cost=cost)
+
+
+_register_builtin_ops()

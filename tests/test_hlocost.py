@@ -37,8 +37,10 @@ def test_scanned_matmul_trip_weighted():
     dot_flops = T * 2 * 32 * 64 * 64
     assert r["flops"] >= dot_flops                    # dots fully counted
     assert r["flops"] <= 1.5 * dot_flops              # no runaway overcount
-    xla = c.cost_analysis()["flops"]
-    assert xla < dot_flops / 2                        # the bug being fixed
+    xla = c.cost_analysis()
+    if isinstance(xla, (list, tuple)):  # older jax: one dict per program
+        xla = xla[0]
+    assert xla["flops"] < dot_flops / 2               # the bug being fixed
 
 
 def test_nested_scan_multiplies():

@@ -9,6 +9,9 @@ engines rely on.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.frontier import run_dense

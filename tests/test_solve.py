@@ -1,0 +1,181 @@
+"""The solve() dispatch layer: every named engine must reach the reference
+fixed point on shared fixtures, and the cost model must route sparse-seed
+inputs to the tiled hierarchy and near-full frontiers to a dense engine."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.solve as solve_mod
+from repro.data.images import bg_disks, seeded_marker, tissue_image
+from repro.edt.ops import EdtOp, distance_map, edt
+from repro.edt.ref import edt_wavefront
+from repro.morph.ops import MorphReconstructOp, reconstruct
+from repro.morph.ref import reconstruct_fh
+from repro.solve import (CostModel, ENGINES, EngineConfig, SolveStats,
+                         autotune_signature, clear_autotune_cache,
+                         collect_input_stats, solve)
+
+NAMED_ENGINES = [e for e in ENGINES if e != "auto"]
+# Small tiles keep the per-engine runtime (incl. Pallas interpret) test-sized.
+ENGINE_KW = dict(tile=16, queue_capacity=8, n_workers=2)
+
+
+@pytest.fixture(scope="module")
+def morph_case():
+    _, mask = tissue_image(48, 56, coverage=0.8, seed=0)
+    marker = seeded_marker(mask, n_seeds=4, seed=0)
+    ref = reconstruct_fh(marker.copy(), mask, connectivity=8).astype(np.int32)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker.astype(np.int32)),
+                          jnp.asarray(mask.astype(np.int32)))
+    return op, state, ref
+
+
+@pytest.fixture(scope="module")
+def edt_case():
+    fg = bg_disks(48, 48, coverage=0.9, n_disks=2, seed=1)
+    ref_M, _ = edt_wavefront(fg, connectivity=8)
+    op = EdtOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(fg)), ref_M
+
+
+@pytest.mark.parametrize("engine", NAMED_ENGINES)
+def test_every_engine_matches_morph_ref(morph_case, engine):
+    op, state, ref = morph_case
+    out, stats = solve(op, state, engine=engine, **ENGINE_KW)
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+    assert stats.engine == engine
+
+
+@pytest.mark.parametrize("engine", NAMED_ENGINES)
+def test_every_engine_matches_edt_ref(edt_case, engine):
+    op, state, ref_M = edt_case
+    out, stats = solve(op, state, engine=engine, **ENGINE_KW)
+    np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+    assert stats.engine == engine
+
+
+def test_auto_matches_ref_and_records_cost(morph_case):
+    op, state, ref = morph_case
+    out, stats = solve(op, state, engine="auto")
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+    assert stats.engine in NAMED_ENGINES
+    assert stats.predicted_cost is not None and stats.predicted_cost > 0
+
+
+def test_stats_are_normalized(morph_case):
+    """Every engine reports the same SolveStats record (comparable rows)."""
+    op, state, _ = morph_case
+    for engine in NAMED_ENGINES:
+        _, stats = solve(op, state, engine=engine, **ENGINE_KW)
+        assert isinstance(stats, SolveStats)
+        assert stats.rounds >= 1
+        if engine in ("tiled", "tiled-pallas", "scheduler"):
+            assert stats.tiles_processed > 0
+        if engine in ("sweep", "frontier"):
+            assert stats.sources_processed > 0
+
+
+def test_auto_picks_tiled_for_sparse_seeds():
+    _, mask = tissue_image(64, 64, coverage=1.0, seed=0)
+    marker = seeded_marker(mask, n_seeds=2, seed=0)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker.astype(np.int32)),
+                          jnp.asarray(mask.astype(np.int32)))
+    stats_in = collect_input_stats(op, state)
+    assert stats_in.density < 0.05            # the premise: sparse wavefront
+    _, stats = solve(op, state, engine="auto")
+    assert stats.engine in ("tiled", "tiled-pallas", "scheduler")
+
+
+def test_auto_picks_dense_for_near_full_frontier():
+    marker, mask = tissue_image(64, 64, coverage=1.0, seed=0)  # mask - h marker
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker.astype(np.int32)),
+                          jnp.asarray(mask.astype(np.int32)))
+    stats_in = collect_input_stats(op, state)
+    assert stats_in.density > 0.5             # the premise: near-full frontier
+    _, stats = solve(op, state, engine="auto")
+    assert stats.engine in ("sweep", "frontier", "shard_map")
+
+
+def test_cost_model_is_pluggable(morph_case):
+    """A subclassed model (MATCH-style override) steers the selection."""
+    op, state, ref = morph_case
+
+    class FrontierAlways(CostModel):
+        def cost(self, stats, cfg):
+            return 0.0 if cfg.engine == "frontier" else 1e18
+
+    out, stats = solve(op, state, engine="auto", cost_model=FrontierAlways())
+    assert stats.engine == "frontier"
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+
+
+def test_autotune_caches_winner(morph_case):
+    op, state, ref = morph_case
+    clear_autotune_cache()
+    out, s1 = solve(op, state, engine="auto", autotune=True,
+                    autotune_top_k=2, autotune_repeats=1)
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+    assert s1.autotuned
+    assert len(solve_mod._AUTOTUNE_CACHE) == 1
+    _, s2 = solve(op, state, engine="auto", autotune=True)
+    assert len(solve_mod._AUTOTUNE_CACHE) == 1          # cache hit, no growth
+    assert s2.engine == s1.engine
+    sig = autotune_signature(op, collect_input_stats(op, state),
+                             restrictions=(None, None))
+    assert sig in solve_mod._AUTOTUNE_CACHE
+    # a caller restriction is a different cache row, never a stale hit
+    _, s3 = solve(op, state, engine="auto", autotune=True,
+                  autotune_top_k=1, autotune_repeats=1, tile=16)
+    assert s3.tile in (None, 16)
+    assert len(solve_mod._AUTOTUNE_CACHE) == 2
+    clear_autotune_cache()
+
+
+def test_unknown_engine_raises(morph_case):
+    op, state, _ = morph_case
+    with pytest.raises(ValueError, match="engine"):
+        solve(op, state, engine="warp-drive")
+
+
+def test_non_tile_aligned_grids(edt_case):
+    """Padding adapters: scheduler/shard_map on a grid no tile divides."""
+    fg = bg_disks(37, 51, coverage=0.9, n_disks=2, seed=3)
+    ref_M, _ = edt_wavefront(fg, connectivity=8)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    for engine in ("scheduler", "shard_map", "tiled"):
+        out, _ = solve(op, state, engine=engine, tile=16, n_workers=2)
+        np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+
+
+def test_convenience_wrappers_match_refs():
+    _, mask = tissue_image(40, 40, coverage=0.8, seed=2)
+    marker = seeded_marker(mask, n_seeds=3, seed=2)
+    ref = reconstruct_fh(marker.copy(), mask, connectivity=8).astype(np.int32)
+    J, stats = reconstruct(marker.astype(np.int32), mask.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(J), ref)
+    assert stats.engine in NAMED_ENGINES
+
+    fg = bg_disks(40, 40, coverage=0.9, n_disks=2, seed=2)
+    ref_M, _ = edt_wavefront(fg, connectivity=8)
+    M, _ = edt(fg)
+    np.testing.assert_array_equal(np.asarray(M), ref_M)
+
+
+def test_candidates_respect_devices_and_tiles():
+    _, mask = tissue_image(32, 32, coverage=0.9, seed=0)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(mask.astype(np.int32)) // 2,
+                          jnp.asarray(mask.astype(np.int32)))
+    stats1 = collect_input_stats(op, state, n_devices=1)
+    cands1 = CostModel().candidates(stats1)
+    assert all(c.engine != "shard_map" for c in cands1)
+    stats8 = dataclasses.replace(stats1, n_devices=8)
+    cands8 = CostModel().candidates(stats8)
+    assert any(c.engine == "shard_map" for c in cands8)
