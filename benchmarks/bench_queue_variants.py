@@ -1,4 +1,5 @@
-"""Paper Table 1: queue design vs initialization depth.
+"""Paper Table 1: queue design vs initialization depth — plus the §3.2
+sequential-vs-batched global-queue drain comparison.
 
 The paper varies the number of FH init raster scans (7..19) to shrink the
 initial queue, then compares Naive / prefix-sum (PF) / +thread-queue (TQ)
@@ -16,21 +17,38 @@ normalized SolveStats record (rounds / sources / tile drains / overflow
 events) — the uniform comparison EXPERIMENTS.md is built on.  A final row
 shows what the cost model would pick for each init depth (engine="auto").
 
+The drain section reproduces the paper's central parallelism claim at the
+queue level: popping the compacted active-tile queue in concurrent batches
+(``drain_batch`` > 1) versus one tile at a time.  ``--json`` (or
+``main(json_path=...)``) writes every record to ``BENCH_tiled.json`` so the
+perf trajectory is tracked across PRs.
+
 The paper's trend to reproduce: deeper init -> smaller queue -> faster
 wavefront phase; hierarchical queueing wins and its advantage grows as the
-wavefront sparsifies.
+wavefront sparsifies; batch-draining the queue wins once occupancy covers
+the batch (K >= 4).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, morph_state, timeit
+from repro.core.tiles import initial_active_tiles
 from repro.solve import solve
 
+DEFAULT_JSON = "BENCH_tiled.json"
 
-def main(size: int = 512):
+
+def _record(records, name, seconds, **derived):
+    emit(name, seconds, ";".join(f"{k}={v}" for k, v in derived.items()))
+    records.append({"name": name, "seconds": seconds, **derived})
+
+
+def table1(size: int, records: list):
     for n_sweeps in (1, 2, 3, 4):
         op, state = morph_state(size, coverage=1.0, seed=0, n_sweeps=n_sweeps)
         init_q = int(jnp.sum(op.init_frontier(state)))
@@ -41,18 +59,72 @@ def main(size: int = 512):
         t2 = timeit(lambda: solve(op, state, engine="tiled",
                                   tile=128, queue_capacity=64)[0])
         _, s2 = solve(op, state, engine="tiled", tile=128, queue_capacity=64)
-        emit(f"table1/sweeps={n_sweeps}/E0_sweep", t0,
-             f"init_q={init_q};total_q={total}")
-        emit(f"table1/sweeps={n_sweeps}/E1_frontier", t1,
-             f"rounds={st.rounds};speedup_vs_E0={t0 / t1:.2f}")
-        emit(f"table1/sweeps={n_sweeps}/E2_tiled", t2,
-             f"drains={s2.tiles_processed};overflows={s2.overflow_events};"
-             f"speedup_vs_E0={t0 / t2:.2f};vs_E1={t1 / t2:.2f}")
+        _record(records, f"table1/sweeps={n_sweeps}/E0_sweep", t0,
+                init_q=init_q, total_q=total)
+        _record(records, f"table1/sweeps={n_sweeps}/E1_frontier", t1,
+                rounds=st.rounds, speedup_vs_E0=round(t0 / t1, 2))
+        _record(records, f"table1/sweeps={n_sweeps}/E2_tiled", t2,
+                drains=s2.tiles_processed, overflows=s2.overflow_events,
+                speedup_vs_E0=round(t0 / t2, 2), vs_E1=round(t1 / t2, 2))
         _, sa = solve(op, state, engine="auto")
-        emit(f"table1/sweeps={n_sweeps}/auto", 0.0,
-             f"picked={sa.engine};tile={sa.tile};"
-             f"predicted_cost={sa.predicted_cost:.0f}")
+        _record(records, f"table1/sweeps={n_sweeps}/auto", 0.0,
+                picked=sa.engine, tile=sa.tile,
+                predicted_cost=round(sa.predicted_cost))
+
+
+def drain_comparison(size: int, records: list, tile: int = 32,
+                     queue_capacity: int = 64):
+    """§3.2 parallel queue consumption: sequential scan vs batched drain.
+
+    Sparse seeded markers on a ``size``² grid keep the wavefront thin, so
+    the active-tile queue stays well occupied (K >= 4) for many rounds —
+    the regime where draining the queue in concurrent batches pays.
+    """
+    op, state = morph_state(size, coverage=1.0, seed=0, n_sweeps=0,
+                            marker_kind="seeded")
+    active0 = int(jnp.sum(initial_active_tiles(op, state, tile)))
+    t_seq = timeit(lambda: solve(op, state, engine="tiled", tile=tile,
+                                 queue_capacity=queue_capacity,
+                                 drain_batch=1)[0])
+    _, s_seq = solve(op, state, engine="tiled", tile=tile,
+                     queue_capacity=queue_capacity, drain_batch=1)
+    occupancy = s_seq.tiles_processed / max(s_seq.rounds, 1)
+    _record(records, f"drain/size={size}/tile={tile}/sequential", t_seq,
+            drain_batch=1, rounds=s_seq.rounds, drains=s_seq.tiles_processed,
+            active0=active0, occupancy=round(occupancy, 1))
+    for db in (4, 8, 16):
+        t_b = timeit(lambda: solve(op, state, engine="tiled", tile=tile,
+                                   queue_capacity=queue_capacity,
+                                   drain_batch=db)[0])
+        _, s_b = solve(op, state, engine="tiled", tile=tile,
+                       queue_capacity=queue_capacity, drain_batch=db)
+        _record(records, f"drain/size={size}/tile={tile}/batched", t_b,
+                drain_batch=db, rounds=s_b.rounds, drains=s_b.tiles_processed,
+                occupancy=round(s_b.tiles_processed / max(s_b.rounds, 1), 1),
+                speedup_vs_seq=round(t_seq / t_b, 2))
+
+
+def main(size: int = 512, json_path: str | None = None,
+         drain_size: int | None = None):
+    records: list = []
+    table1(size, records)
+    drain_comparison(drain_size if drain_size is not None else max(size, 1024),
+                     records)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} records to {json_path}", flush=True)
+    return records
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=512)
+    ap.add_argument("--drain-size", type=int, default=None,
+                    help="grid side for the drain comparison (default: "
+                         "max(size, 1024))")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"write records as JSON (default path {DEFAULT_JSON})")
+    a = ap.parse_args()
+    main(a.size, json_path=a.json, drain_size=a.drain_size)

@@ -8,13 +8,16 @@ mask.  Both run under one `lax.while_loop` to the fixed point.
 
 Both also report *work counters* (rounds, source-pixels processed) so the
 benchmarks can reproduce the paper's queue-size/work analysis (Table 1)
-without GPU timers.
+without GPU timers.  The source counter is an exact 64-bit total kept as a
+(lo, hi) pair of uint32 words — float32 (the obvious x64-off fallback)
+silently rounds past 2^24 sources, which a long run on a large grid reaches
+easily.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,9 +25,28 @@ import jax.numpy as jnp
 from repro.core.pattern import PropagationOp
 
 
+def accumulate_u64(lo: jnp.ndarray, hi: jnp.ndarray,
+                   n: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact 64-bit accumulate in two uint32 words (x64-off safe).
+
+    ``n`` must be < 2^32 (one round can at most touch every pixel); uint32
+    addition wraps mod 2^32, and a wrapped sum is detectable as lo' < lo.
+    """
+    n = n.astype(jnp.uint32)
+    new_lo = lo + n
+    new_hi = hi + (new_lo < lo).astype(jnp.uint32)
+    return new_lo, new_hi
+
+
 class RunStats(NamedTuple):
-    rounds: jnp.ndarray          # int32
-    sources_processed: jnp.ndarray  # int64-ish float to avoid overflow
+    rounds: jnp.ndarray       # int32
+    sources_lo: jnp.ndarray   # uint32 — low word of the exact source count
+    sources_hi: jnp.ndarray   # uint32 — high word
+
+    @property
+    def sources_processed(self) -> int:
+        """Exact total frontier pixels acted on (host-side int)."""
+        return (int(self.sources_hi) << 32) | int(self.sources_lo)
 
 
 @partial(jax.jit, static_argnums=(0, 2, 3))
@@ -37,8 +59,7 @@ def run_dense(op: PropagationOp, state, engine: str = "frontier",
     Returns (state, RunStats).
     """
     frontier0 = op.init_frontier(state)
-    stats0 = RunStats(jnp.int32(0), jnp.float64(0.0) if jax.config.jax_enable_x64
-                      else jnp.float32(0.0))
+    stats0 = RunStats(jnp.int32(0), jnp.uint32(0), jnp.uint32(0))
 
     def cond(carry):
         _, frontier, stats = carry
@@ -49,9 +70,10 @@ def run_dense(op: PropagationOp, state, engine: str = "frontier",
         if engine == "sweep":
             # E0: ignore tracking; every valid pixel is a source.
             frontier = state["valid"]
-        n_src = jnp.sum(frontier).astype(stats.sources_processed.dtype)
+        n_src = jnp.sum(frontier, dtype=jnp.uint32)
         state, new_frontier = op.round(state, frontier)
-        stats = RunStats(stats.rounds + 1, stats.sources_processed + n_src)
+        lo, hi = accumulate_u64(stats.sources_lo, stats.sources_hi, n_src)
+        stats = RunStats(stats.rounds + 1, lo, hi)
         if engine == "sweep":
             # Terminate on no-change rather than frontier emptiness.
             new_frontier = jnp.broadcast_to(jnp.any(new_frontier), new_frontier.shape) & state["valid"]

@@ -52,6 +52,11 @@ class TileScheduler:
         global origin.  Needed when the commutative merge couples leaves or
         depends on pixel coordinates (e.g. EDT's Voronoi-pointer distance
         compare); overrides ``merge_fn`` when given.
+    pad_values : optional per-leaf scalars for out-of-array halo cells (the
+        op's *neutral* fills, ``PropagationOp.pad_value``).  Without them the
+        scheduler falls back to dtype-min/``-inf`` (False for bool), which is
+        only correct for max-propagating payloads — EDT's coordinate planes,
+        for instance, need their far-sentinel fill instead.
     """
 
     def __init__(self, state: Dict[str, np.ndarray], tile: int,
@@ -59,6 +64,7 @@ class TileScheduler:
                  n_workers: int = 4, mutable=("J",),
                  merge_fn: Optional[Callable] = None,
                  merge_block_fn: Optional[Callable] = None,
+                 pad_values: Optional[Dict[str, object]] = None,
                  fail_worker: Optional[int] = None, fail_after: int = 3):
         H, W = next(iter(state.values())).shape[-2:]
         assert H % tile == 0 and W % tile == 0, "host scheduler expects tile-aligned grids"
@@ -73,6 +79,7 @@ class TileScheduler:
         # update must not regress it.  Default: elementwise max (morph).
         self.merge_fn = merge_fn or (lambda key, old, new: np.maximum(old, new))
         self.merge_block_fn = merge_block_fn
+        self.pad_values = pad_values or {}
         self.fail_worker = fail_worker
         self.fail_after = fail_after
         self._lock = threading.Lock()
@@ -98,8 +105,10 @@ class TileScheduler:
         r0, c0 = ty * T, tx * T
         out = {}
         for k, arr in self.state.items():
-            pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
-                                                   if arr.dtype.kind in "iu" else -np.inf)
+            pad_val = self.pad_values.get(k)
+            if pad_val is None:
+                pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
+                                                       if arr.dtype.kind in "iu" else -np.inf)
             blk = np.full(arr.shape[:-2] + (T + 2, T + 2), pad_val, dtype=arr.dtype)
             rs, re = max(0, r0 - 1), min(H, r0 + T + 1)
             cs, ce = max(0, c0 - 1), min(W, c0 + T + 1)

@@ -9,15 +9,21 @@ Hierarchy mapping (DESIGN.md §2):
   * across tiles, a fixed-capacity **active-tile queue** lives at the outer
     level (GBQ analogue).  Each outer round compacts the active bitmap into
     at most ``queue_capacity`` tile ids (`jnp.where(..., size=)` — the
-    prefix-sum of the paper, done by XLA), processes them sequentially under
-    `lax.scan` (monotone commutative updates make any order valid), and
-    marks neighbor tiles whose halo became stale.
+    prefix-sum of the paper, done by XLA) and drains them — **in parallel
+    batches of ``drain_batch`` blocks** (the paper's concurrent consumption
+    of the global queue across SMs, §3.2) or sequentially under `lax.scan`
+    when ``drain_batch <= 1`` — then marks neighbor tiles whose halo became
+    stale.  Monotone commutative updates make any order (and any degree of
+    concurrency) reach the same fixed point; interior writes of distinct
+    tiles are disjoint, and a stale halo read at worst re-queues a tile via
+    the dirty-neighbor marks.
   * overflow: tiles beyond capacity are simply *retained* in the bitmap for
     the next round — the same re-execution-from-partial-output semantics as
     the paper's §5.2.4 GBQ overflow, without ever dropping information.
 
 The engine is fully jittable; the per-tile inner solver can be swapped for
-the Pallas kernel (`repro.kernels.ops`) via ``tile_solver``.
+the Pallas kernel (`repro.kernels.ops`) via ``tile_solver`` (and its
+grid-over-batch form via ``batched_tile_solver``).
 """
 
 from __future__ import annotations
@@ -57,10 +63,15 @@ def _pad_state(op, state, tile: int):
 def _tile_local_solve(op: PropagationOp, block, max_iters: int):
     """Drain one tile: dense rounds on the (T+2, T+2) halo block until stable.
 
-    Seeded with an all-true frontier (halo included) so incoming halo values
-    propagate inward on the first round.
+    Seeded with an all-*valid* frontier (halo included) so incoming halo
+    values propagate inward on the first round.  Invalid cells are excluded
+    from the seed: `op.round` masks sources by the frontier, so seeding them
+    would let invalid pixels (non-rectangular masks, engine padding) source
+    one round of propagation.
     """
     frontier0 = jnp.ones(tree_shape(block), dtype=bool)
+    if "valid" in block:
+        frontier0 = frontier0 & block["valid"]
 
     def cond(c):
         _, f, it = c
@@ -96,11 +107,73 @@ def initial_active_tiles(op: PropagationOp, state, tile: int,
     return fp.reshape(nty, tile, ntx, tile).any(axis=(1, 3))
 
 
-@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5))
+def _gather_block(padded, ty, tx, tile: int):
+    start = (ty * tile, tx * tile)
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_slice(
+            x, (0,) * (x.ndim - 2) + start,
+            x.shape[:-2] + (tile + 2, tile + 2)),
+        padded)
+
+
+def _interior_writeback(padded, block, ty, tx, tile: int, mutable):
+    """Write one block's interior back into the padded state (disjoint)."""
+    def wb(x, b):
+        inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
+                              b.shape[:-2] + (tile + 1, tile + 1))
+        return jax.lax.dynamic_update_slice(
+            x, inner, (0,) * (x.ndim - 2) + (ty * tile + 1, tx * tile + 1))
+    new_padded = dict(padded)
+    for k in mutable:
+        new_padded[k] = wb(padded[k], block[k])
+    return new_padded
+
+
+def _edges_changed(pre, post, tile: int, mutable):
+    """Did the block's interior edge rows/cols change?  (drives marking)"""
+    i0, i1 = 1, tile + 1
+    def ch(sel):
+        return jnp.array([jnp.any(pre[k][sel] != post[k][sel]) for k in mutable]).any()
+    top = ch((Ellipsis, slice(i0, i0 + 1), slice(i0, i1)))
+    bot = ch((Ellipsis, slice(i1 - 1, i1), slice(i0, i1)))
+    lef = ch((Ellipsis, slice(i0, i1), slice(i0, i0 + 1)))
+    rig = ch((Ellipsis, slice(i0, i1), slice(i1 - 1, i1)))
+    return top, bot, lef, rig
+
+
+def _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty: int, ntx: int):
+    """Scatter-max dirty marks onto the 8 neighbors.  ``ty``/``tx`` and the
+    edge flags may be scalars (sequential path) or (K,) vectors (batched)."""
+    def mark(m, dy, dx, flag):
+        yy = jnp.clip(ty + dy, 0, nty - 1)
+        xx = jnp.clip(tx + dx, 0, ntx - 1)
+        inb = ((ty + dy) >= 0) & ((ty + dy) < nty) & ((tx + dx) >= 0) & ((tx + dx) < ntx)
+        return m.at[yy, xx].max(flag & inb)
+    marks = mark(marks, -1, 0, top); marks = mark(marks, -1, -1, top | lef)
+    marks = mark(marks, -1, 1, top | rig); marks = mark(marks, 1, 0, bot)
+    marks = mark(marks, 1, -1, bot | lef); marks = mark(marks, 1, 1, bot | rig)
+    marks = mark(marks, 0, -1, lef); marks = mark(marks, 0, 1, rig)
+    return marks
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6, 7))
 def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 256,
               max_outer_rounds: int = 100_000,
-              tile_solver: Optional[Callable] = None):
-    """Run `op` to the global fixed point with the tiled active-set engine."""
+              tile_solver: Optional[Callable] = None,
+              drain_batch: int = 1,
+              batched_tile_solver: Optional[Callable] = None):
+    """Run `op` to the global fixed point with the tiled active-set engine.
+
+    ``drain_batch`` > 1 drains the compacted queue in parallel batches of
+    (up to) that many (T+2, T+2) halo blocks per dispatch: blocks are
+    gathered into a (K, T+2, T+2) batch, drained concurrently by
+    ``batched_tile_solver`` (default: ``jax.vmap`` of the per-tile solver),
+    and their interiors scattered back.  Interior writes are disjoint;
+    halo values a concurrent neighbor would have refreshed are handled by
+    the dirty-neighbor re-marking, and monotone-commutative updates make
+    the result exact either way.  ``drain_batch <= 1`` keeps the sequential
+    ``lax.scan`` drain.
+    """
     # (T+2)^2 bounds the longest geodesic inside one halo block (a spiral
     # path); the while_loop exits at stability so the bound is free normally.
     solver = tile_solver or (lambda blk: _tile_local_solve(op, blk,
@@ -108,6 +181,11 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     padded, (H, W, nty, ntx) = _pad_state(op, state, tile)
     # a queue longer than the tile grid only adds dead scan slots
     queue_capacity = min(queue_capacity, nty * ntx)
+    K = max(1, min(drain_batch, queue_capacity))
+    # queue slots rounded up to whole batches (a dead slot drains a
+    # neutralized block — cheap, and its writeback is skipped)
+    n_chunks = -(-queue_capacity // K)
+    n_slots = n_chunks * K
 
     active0 = initial_active_tiles(op, state, tile, nty, ntx)
 
@@ -119,48 +197,57 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
         tx = tid % ntx
 
         def do(padded):
-            start = (ty * tile, tx * tile)
-            block = jax.tree_util.tree_map(
-                lambda x: jax.lax.dynamic_slice(
-                    x, (0,) * (x.ndim - 2) + start,
-                    x.shape[:-2] + (tile + 2, tile + 2)),
-                padded)
+            block = _gather_block(padded, ty, tx, tile)
             pre = {k: block[k] for k in mutable}
             block = solver(block)
-            # Write back interior only.
-            def wb(x, b):
-                inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
-                                      b.shape[:-2] + (tile + 1, tile + 1))
-                return jax.lax.dynamic_update_slice(
-                    x, inner, (0,) * (x.ndim - 2) + (start[0] + 1, start[1] + 1))
-            new_padded = dict(padded)
-            for k in mutable:
-                new_padded[k] = wb(padded[k], block[k])
-
-            # Which edges of the interior changed?  (drives neighbor marking)
-            def edge_changed(sel):
-                return jnp.array([jnp.any(pre[k][sel] != block[k][sel]) for k in mutable]).any()
-            i0, i1 = 1, tile + 1
-            top = edge_changed((Ellipsis, slice(i0, i0 + 1), slice(i0, i1)))
-            bot = edge_changed((Ellipsis, slice(i1 - 1, i1), slice(i0, i1)))
-            lef = edge_changed((Ellipsis, slice(i0, i1), slice(i0, i0 + 1)))
-            rig = edge_changed((Ellipsis, slice(i0, i1), slice(i1 - 1, i1)))
+            new_padded = _interior_writeback(padded, block, ty, tx, tile, mutable)
+            top, bot, lef, rig = _edges_changed(pre, block, tile, mutable)
             marks = jnp.zeros((nty, ntx), dtype=bool)
-            def mark(m, dy, dx, flag):
-                yy = jnp.clip(ty + dy, 0, nty - 1)
-                xx = jnp.clip(tx + dx, 0, ntx - 1)
-                inb = ((ty + dy) >= 0) & ((ty + dy) < nty) & ((tx + dx) >= 0) & ((tx + dx) < ntx)
-                return m.at[yy, xx].max(flag & inb)
-            marks = mark(marks, -1, 0, top); marks = mark(marks, -1, -1, top | lef)
-            marks = mark(marks, -1, 1, top | rig); marks = mark(marks, 1, 0, bot)
-            marks = mark(marks, 1, -1, bot | lef); marks = mark(marks, 1, 1, bot | rig)
-            marks = mark(marks, 0, -1, lef); marks = mark(marks, 0, 1, rig)
+            marks = _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty, ntx)
             return new_padded, marks
 
         def skip(padded):
             return padded, jnp.zeros((nty, ntx), dtype=bool)
 
         padded, marks = jax.lax.cond(tid >= 0, do, skip, padded)
+        return padded, marks
+
+    if K > 1:
+        batched_solver = batched_tile_solver or jax.vmap(solver)
+        pv = op.pad_value(state)
+
+    def process_chunk(carry, ids_k):
+        """Drain one (K,)-batch of queue slots concurrently."""
+        padded = carry
+        live = ids_k >= 0
+        safe = jnp.maximum(ids_k, 0)
+        tys, txs = safe // ntx, safe % ntx
+        blocks = jax.vmap(lambda ty, tx: _gather_block(padded, ty, tx, tile))(tys, txs)
+        # Dead slots (queue shorter than a whole batch) alias tile 0;
+        # neutralize them so they converge immediately and mark nothing.
+        blocks = jax.tree_util.tree_map(
+            lambda x, v: jnp.where(
+                live.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.asarray(v, x.dtype)),
+            blocks, pv)
+        pre = {k: blocks[k] for k in mutable}
+        post = batched_solver(blocks)
+        top, bot, lef, rig = jax.vmap(
+            lambda p, q: _edges_changed(p, q, tile, mutable)
+        )(pre, {k: post[k] for k in mutable})
+        marks = jnp.zeros((nty, ntx), dtype=bool)
+        marks = _mark_neighbors(marks, tys, txs, top & live, bot & live,
+                                lef & live, rig & live, nty, ntx)
+
+        def scatter(padded, slot):
+            tid, ty, tx, block = slot
+            new_padded = jax.lax.cond(
+                tid >= 0,
+                lambda p: _interior_writeback(p, block, ty, tx, tile, mutable),
+                lambda p: p, padded)
+            return new_padded, None
+
+        padded, _ = jax.lax.scan(
+            scatter, padded, (ids_k, tys, txs, {k: post[k] for k in mutable}))
         return padded, marks
 
     def outer_cond(carry):
@@ -170,17 +257,20 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     def outer_body(carry):
         padded, active, stats = carry
         flat = active.reshape(-1)
-        (ids,) = jnp.where(flat, size=queue_capacity, fill_value=-1)
+        (ids,) = jnp.where(flat, size=n_slots, fill_value=-1)
         n_active = jnp.sum(flat)
         processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
-        padded, marks = jax.lax.scan(process_tile, padded, ids)
+        if K > 1:
+            padded, marks = jax.lax.scan(process_chunk, padded, ids.reshape(n_chunks, K))
+        else:
+            padded, marks = jax.lax.scan(process_tile, padded, ids)
         dirty = jnp.any(marks, axis=0)
         # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones.
         active = (active & ~processed) | dirty
         stats = TileStats(
             stats.outer_rounds + 1,
             stats.tiles_processed + jnp.sum(ids >= 0),
-            stats.overflow_events + (n_active > queue_capacity).astype(jnp.int32))
+            stats.overflow_events + (n_active > n_slots).astype(jnp.int32))
         return padded, active, stats
 
     stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))

@@ -49,9 +49,12 @@ class EdtOp(PropagationOp):
         H, W = fg.shape
         r, c = _grids(H, W)
         s = jnp.int32(SENTINEL)
-        vr = jnp.stack([jnp.where(fg, s, r), jnp.where(fg, s, c)])
         if valid is None:
             valid = jnp.ones((H, W), dtype=bool)
+        # Invalid cells start (and stay — see round()) at the sentinel: a
+        # non-valid background pixel must never offer distance 0.
+        bg = ~fg & valid
+        vr = jnp.stack([jnp.where(bg, r, s), jnp.where(bg, c, s)])
         return {"vr": vr, "valid": valid, "row": r, "col": c}
 
     def pad_value(self, state):

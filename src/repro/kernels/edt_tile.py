@@ -5,6 +5,10 @@ Same structure as morph_tile: the (T+2, T+2) halo block iterates the
 Distances are int32 (exact for grids < 8192 with the far sentinel; see
 repro.edt.ref.SENTINEL).  This kernel replaces Algorithm 6's atomicCAS retry
 loop with a race-free vector reduction — the TPU-native adaptation.
+
+:func:`edt_tile_solve_batched` drains a (K, T+2, T+2) batch with a
+``pallas_call`` grid over the batch dimension (DESIGN.md §2 "batched queue
+drain"); each grid step converges independently.
 """
 
 from __future__ import annotations
@@ -19,17 +23,24 @@ from repro.core.pattern import offsets_for
 from repro.edt.ref import SENTINEL
 
 
-def _make_kernel(connectivity: int, max_iters: int):
+def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
     offsets = offsets_for(connectivity)
 
     def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref, or_ref, oc_ref, iters_ref):
-        vr_r = vr_r_ref[...]
-        vr_c = vr_c_ref[...]
-        valid = valid_ref[...]
-        row = row_ref[...]
-        col = col_ref[...]
+        if batched:  # refs carry a leading (1,)-block batch dim under the grid
+            vr_r, vr_c = vr_r_ref[0], vr_c_ref[0]
+            valid = valid_ref[0]
+            row, col = row_ref[0], col_ref[0]
+        else:
+            vr_r, vr_c = vr_r_ref[...], vr_c_ref[...]
+            valid = valid_ref[...]
+            row, col = row_ref[...], col_ref[...]
         Hp, Wp = vr_r.shape
         s = jnp.int32(SENTINEL)
+        # Invalid in-block pixels must never source propagation: pin them to
+        # the sentinel before the first iteration reads them as neighbors.
+        vr_r = jnp.where(valid, vr_r, s)
+        vr_c = jnp.where(valid, vr_c, s)
 
         def shifted(x, dr, dc):
             xp = jnp.pad(x, 1, constant_values=s)
@@ -62,9 +73,14 @@ def _make_kernel(connectivity: int, max_iters: int):
 
         vr_r, vr_c, _, iters = jax.lax.while_loop(
             cond, body, (vr_r, vr_c, jnp.bool_(True), jnp.int32(0)))
-        or_ref[...] = vr_r
-        oc_ref[...] = vr_c
-        iters_ref[0, 0] = iters
+        if batched:
+            or_ref[0] = vr_r
+            oc_ref[0] = vr_c
+            iters_ref[0, 0, 0] = iters
+        else:
+            or_ref[...] = vr_r
+            oc_ref[...] = vr_c
+            iters_ref[0, 0] = iters
 
     return kernel
 
@@ -89,3 +105,30 @@ def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
         interpret=interpret,
     )(vr_r, vr_c, valid, row, col)
     return o_r, o_c, iters[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
+def edt_tile_solve_batched(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
+                           max_iters: int = 1024, interpret: bool = True):
+    """Drain a (K, T+2, T+2) batch of EDT halo blocks concurrently.
+
+    Returns (vr_r, vr_c, iters) with iters shaped (K,); each grid step
+    iterates its own block to stability independently.
+    """
+    K, Hp, Wp = vr_r.shape
+    kernel = _make_kernel(connectivity, max_iters, batched=True)
+    out_shape = (
+        jax.ShapeDtypeStruct((K, Hp, Wp), vr_r.dtype),
+        jax.ShapeDtypeStruct((K, Hp, Wp), vr_c.dtype),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+    )
+    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    o_r, o_c, iters = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        out_shape=out_shape,
+        in_specs=[blk] * 5,
+        out_specs=(blk, blk, pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))),
+        interpret=interpret,
+    )(vr_r, vr_c, valid, row, col)
+    return o_r, o_c, iters[:, 0, 0]

@@ -7,6 +7,15 @@ max-propagate + min-clamp to local stability *inside the kernel* — zero HBM
 traffic between iterations (the BQ analogue; DESIGN.md §2).  The neighbor
 combine is 8 statically-shifted VREG planes (TQ analogue).
 
+Two entry points:
+
+* :func:`morph_tile_solve`          — one (T+2, T+2) block;
+* :func:`morph_tile_solve_batched`  — a (K, T+2, T+2) batch of blocks,
+  drained concurrently with a ``pl.pallas_call`` grid over the batch
+  dimension (the paper's parallel consumption of the global queue,
+  DESIGN.md §2 "batched queue drain"); each grid step iterates its own
+  block to stability independently.
+
 Block shapes should keep the (8, 128) vector layout: T in {64, 128, 256} and
 int32/float32 payloads (wrappers upcast uint8 — TPU-native dtype policy).
 """
@@ -26,14 +35,24 @@ def _neutral(dtype):
     return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf
 
 
-def _make_kernel(connectivity: int, max_iters: int):
+def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
     offsets = offsets_for(connectivity)
 
     def kernel(j_ref, i_ref, valid_ref, o_ref, iters_ref):
-        J = j_ref[...]
-        I = i_ref[...]
+        if batched:  # refs carry a leading (1,)-block batch dim under the grid
+            J = j_ref[0]
+            I = i_ref[0]
+            valid = valid_ref[0]
+        else:
+            J = j_ref[...]
+            I = i_ref[...]
+            valid = valid_ref[...]
         Hp, Wp = J.shape  # (T+2, T+2)
         neut = _neutral(J.dtype)
+        # Invalid in-block pixels (non-rectangular masks) must neither source
+        # nor hold propagation: pin them to the neutral value — the morph
+        # analogue of the EDT kernel's sentinel clamp.
+        J = jnp.where(valid, J, neut)
 
         def cond(carry):
             _, changed, it = carry
@@ -49,12 +68,17 @@ def _make_kernel(connectivity: int, max_iters: int):
                 nb = jax.lax.slice(Jp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
                 cand = jnp.maximum(cand, nb)
             new = jnp.minimum(I, jnp.maximum(J, cand))
+            new = jnp.where(valid, new, neut)
             changed = jnp.any(new != J)
             return new, changed, it + 1
 
         J, _, iters = jax.lax.while_loop(cond, body, (J, jnp.bool_(True), jnp.int32(0)))
-        o_ref[...] = J
-        iters_ref[0, 0] = iters
+        if batched:
+            o_ref[0] = J
+            iters_ref[0, 0, 0] = iters
+        else:
+            o_ref[...] = J
+            iters_ref[0, 0] = iters
 
     return kernel
 
@@ -66,14 +90,13 @@ def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 102
 
     Returns (J_out, iters).  Halo rows/cols are read as propagation sources
     but their output values are unspecified (callers write back interiors
-    only, as the tiled engine does).
+    only, as the tiled engine does).  Invalid cells come back neutral.
     """
     kernel = _make_kernel(connectivity, max_iters)
     out_shape = (
         jax.ShapeDtypeStruct(J.shape, J.dtype),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
-    blk = lambda: pl.BlockSpec(J.shape, lambda: (0, 0))
     J_out, iters = pl.pallas_call(
         kernel,
         out_shape=out_shape,
@@ -85,3 +108,31 @@ def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 102
         interpret=interpret,
     )(J, I, valid)
     return J_out, iters[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
+def morph_tile_solve_batched(J, I, valid, *, connectivity: int = 8,
+                             max_iters: int = 1024, interpret: bool = True):
+    """Drain a (K, T+2, T+2) batch of halo blocks concurrently.
+
+    One ``pallas_call`` with ``grid=(K,)``: each grid step owns one block and
+    iterates it to *its own* local stability (no cross-block sync, unlike a
+    vmapped while_loop which runs every block for the batch max).  Returns
+    (J_out, iters) with iters shaped (K,).
+    """
+    K, Hp, Wp = J.shape
+    kernel = _make_kernel(connectivity, max_iters, batched=True)
+    out_shape = (
+        jax.ShapeDtypeStruct((K, Hp, Wp), J.dtype),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+    )
+    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    J_out, iters = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        out_shape=out_shape,
+        in_specs=[blk, blk, blk],
+        out_specs=(blk, pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))),
+        interpret=interpret,
+    )(J, I, valid)
+    return J_out, iters[:, 0, 0]

@@ -4,7 +4,10 @@
   upcast to int32 for the kernel and cast back (exactness preserved — the
   ops are min/max/compare).
 * `tile_solver_morph` / `tile_solver_edt` adapt the kernels to the tiled
-  engine's `tile_solver` interface (block pytree -> block pytree).
+  engine's `tile_solver` interface (block pytree -> block pytree); the
+  `*_batched` variants adapt the grid-over-batch kernels to the engine's
+  `batched_tile_solver` interface (leaves carry a leading (K,) batch dim —
+  the paper's parallel queue drain, DESIGN.md §2).
 * every directional raster pass is expressed through the single
   `raster_down` kernel via flips/transposes.
 """
@@ -16,8 +19,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.edt_tile import edt_tile_solve
-from repro.kernels.morph_tile import morph_tile_solve
+from repro.kernels.edt_tile import edt_tile_solve, edt_tile_solve_batched
+from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_batched
 from repro.kernels.raster_scan import raster_down
 
 
@@ -46,6 +49,29 @@ def tile_solver_morph(connectivity: int = 8, interpret: bool = True):
     return solver
 
 
+def morph_tile_pallas_batched(J, I, valid, connectivity: int = 8,
+                              interpret: bool = True):
+    """(K, T+2, T+2) batch drain; returns (J_out, iters[K])."""
+    Ju, orig = _up(J)
+    Iu, _ = _up(I)
+    out, iters = morph_tile_solve_batched(Ju, Iu, valid,
+                                          connectivity=connectivity,
+                                          interpret=interpret)
+    return (out.astype(orig) if orig is not None else out), iters
+
+
+def tile_solver_morph_batched(connectivity: int = 8, interpret: bool = True):
+    """Adapter: tiled-engine `batched_tile_solver` backed by the grid kernel."""
+    def solver(blocks):
+        J, iters = morph_tile_pallas_batched(blocks["J"], blocks["I"],
+                                             blocks["valid"], connectivity,
+                                             interpret)
+        out = dict(blocks)
+        out["J"] = J
+        return out
+    return solver
+
+
 def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True):
     vr = state_block["vr"]
     o_r, o_c, iters = edt_tile_solve(
@@ -59,6 +85,25 @@ def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True):
 def tile_solver_edt(connectivity: int = 8, interpret: bool = True):
     def solver(block):
         out, _ = edt_tile_pallas(block, connectivity, interpret)
+        return out
+    return solver
+
+
+def edt_tile_pallas_batched(state_blocks, connectivity: int = 8,
+                            interpret: bool = True):
+    """Batched EDT drain over leaves with a leading (K,) batch dim."""
+    vr = state_blocks["vr"]  # (K, 2, T+2, T+2)
+    o_r, o_c, iters = edt_tile_solve_batched(
+        vr[:, 0], vr[:, 1], state_blocks["valid"], state_blocks["row"],
+        state_blocks["col"], connectivity=connectivity, interpret=interpret)
+    out = dict(state_blocks)
+    out["vr"] = jnp.stack([o_r, o_c], axis=1)
+    return out, iters
+
+
+def tile_solver_edt_batched(connectivity: int = 8, interpret: bool = True):
+    def solver(blocks):
+        out, _ = edt_tile_pallas_batched(blocks, connectivity, interpret)
         return out
     return solver
 

@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -51,6 +52,20 @@ ENGINES = ("sweep", "frontier", "tiled", "tiled-pallas", "shard_map",
 
 DEFAULT_TILES = (32, 64, 128)
 DEFAULT_QUEUE_CAPACITY = 64
+# Queue slots drained concurrently per dispatch by the tiled engines (the
+# paper's parallel consumption of the global queue; DESIGN.md §2).
+DEFAULT_DRAIN_BATCH = 4
+# Largest tile that batches by default.  Small blocks are dispatch-bound, so
+# draining K=4 of them per dispatch is a measured ~4-5x win on CPU hosts
+# (BENCH_tiled.json); large blocks are bandwidth-bound and the batch pays
+# max-of-batch iteration inflation plus cache pressure, so they stay
+# sequential unless the caller (or autotune) asks otherwise.  Compiled TPU grid kernels shift this
+# break-even upward — then pass drain_batch explicitly.
+BATCH_DEFAULT_MAX_TILE = 32
+
+
+def _default_drain_batch(tile: int) -> int:
+    return DEFAULT_DRAIN_BATCH if tile <= BATCH_DEFAULT_MAX_TILE else 1
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +89,7 @@ class SolveStats:
     requeues: int = 0              # scheduler fault-tolerance requeues
     tile: Optional[int] = None
     queue_capacity: Optional[int] = None
+    drain_batch: Optional[int] = None        # blocks drained per dispatch
     n_devices: int = 1
     predicted_cost: Optional[float] = None   # CostModel units (auto only)
     autotuned: bool = False
@@ -85,14 +101,25 @@ class SolveStats:
 
 # op class -> factory(op, interpret) -> tile_solver for run_tiled
 _PALLAS_SOLVERS: Dict[type, Callable] = {}
+# op class -> factory(op, interpret) -> batched_tile_solver for run_tiled
+# (grid-over-batch kernel; absent -> jax.vmap of the per-tile solver)
+_PALLAS_BATCH_SOLVERS: Dict[type, Callable] = {}
 # op class -> factory(op) -> merge_block_fn for TileScheduler (None = default
 # elementwise-max merge, valid for any single-plane monotone-max op)
 _SCHEDULER_MERGES: Dict[type, Callable] = {}
 
 
-def register_pallas_solver(op_cls: type, factory: Callable) -> None:
-    """Register ``factory(op, interpret) -> tile_solver`` for an op class."""
+def register_pallas_solver(op_cls: type, factory: Callable,
+                           batched_factory: Optional[Callable] = None) -> None:
+    """Register ``factory(op, interpret) -> tile_solver`` for an op class.
+
+    ``batched_factory(op, interpret) -> batched_tile_solver`` (leaves carry a
+    leading (K,) batch dim) backs the batched drain; without one, the engine
+    falls back to ``jax.vmap`` of the per-tile solver.
+    """
     _PALLAS_SOLVERS[op_cls] = factory
+    if batched_factory is not None:
+        _PALLAS_BATCH_SOLVERS[op_cls] = batched_factory
 
 
 def register_scheduler_merge(op_cls: type, factory: Callable) -> None:
@@ -109,14 +136,18 @@ def _registry_lookup(registry: Dict[type, Callable], op: PropagationOp):
 
 def _register_builtin_ops():
     from repro.edt.ops import EdtOp
-    from repro.kernels.ops import tile_solver_edt, tile_solver_morph
+    from repro.kernels.ops import (tile_solver_edt, tile_solver_edt_batched,
+                                   tile_solver_morph, tile_solver_morph_batched)
     from repro.morph.ops import MorphReconstructOp
 
     register_pallas_solver(
         MorphReconstructOp,
-        lambda op, interpret: tile_solver_morph(op.connectivity, interpret))
+        lambda op, interpret: tile_solver_morph(op.connectivity, interpret),
+        lambda op, interpret: tile_solver_morph_batched(op.connectivity, interpret))
     register_pallas_solver(
-        EdtOp, lambda op, interpret: tile_solver_edt(op.connectivity, interpret))
+        EdtOp,
+        lambda op, interpret: tile_solver_edt(op.connectivity, interpret),
+        lambda op, interpret: tile_solver_edt_batched(op.connectivity, interpret))
 
     # Morph: default elementwise max on "J" is the correct commutative merge.
     register_scheduler_merge(MorphReconstructOp, lambda op: None)
@@ -196,6 +227,7 @@ class EngineConfig:
     engine: str
     tile: Optional[int] = None
     queue_capacity: Optional[int] = None
+    drain_batch: Optional[int] = None   # queue slots drained per dispatch
 
 
 class CostModel:
@@ -219,6 +251,9 @@ class CostModel:
     # amortization argument).
     vmem_discount = 1.0 / 16.0
     # Fixed cost of dispatching one tile drain (lax.scan step / host call).
+    # A batched drain issues one dispatch per `drain_batch` blocks, so the
+    # effective per-tile term is tile_dispatch / drain_batch (the paper's
+    # point that queue consumption must be parallel across SMs to pay off).
     tile_dispatch = 500.0
     # E0 recomputes every valid pixel with no tracking: constant-factor
     # penalty over E1 plus the extra settle rounds.
@@ -272,7 +307,8 @@ class CostModel:
             if e == "tiled-pallas" and self.interpret:
                 inner *= self.interpret_penalty
             drains = self._drains(stats, cfg.tile)
-            return drains * inner + drains * self.tile_dispatch
+            dispatch = self.tile_dispatch / max(1, cfg.drain_batch or 1)
+            return drains * inner + drains * dispatch
         if e == "scheduler":
             block = (cfg.tile + 2) ** 2
             drains = self._drains(stats, cfg.tile)
@@ -297,8 +333,9 @@ class CostModel:
         usable = [t for t in tiles if t <= 2 * max(stats.height, stats.width)]
         for t in usable or [min(tiles)]:
             cap = min(max(4, stats.n_tiles(t)), 256)
-            out.append(EngineConfig("tiled", t, cap))
-            out.append(EngineConfig("tiled-pallas", t, cap))
+            db = min(cap, _default_drain_batch(t))
+            out.append(EngineConfig("tiled", t, cap, db))
+            out.append(EngineConfig("tiled-pallas", t, cap, db))
             out.append(EngineConfig("scheduler", t, cap))
         if stats.n_devices > 1:
             out.append(EngineConfig("shard_map"))
@@ -319,6 +356,10 @@ class CostModel:
 
 # signature -> (EngineConfig, measured seconds)
 _AUTOTUNE_CACHE: Dict[tuple, Tuple[EngineConfig, float]] = {}
+# signature -> tuple of (EngineConfig, repr(exception)) for candidates that
+# raised during micro-benchmarking — kept so a fully-failing candidate set is
+# distinguishable from a fast one (and surfaced via warnings.warn).
+_AUTOTUNE_FAILURES: Dict[tuple, tuple] = {}
 
 
 def autotune_signature(op: PropagationOp, stats: InputStats,
@@ -338,6 +379,7 @@ def autotune_signature(op: PropagationOp, stats: InputStats,
 
 def clear_autotune_cache() -> None:
     _AUTOTUNE_CACHE.clear()
+    _AUTOTUNE_FAILURES.clear()
 
 
 def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
@@ -347,6 +389,7 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
         return _AUTOTUNE_CACHE[sig][0]
     ranked = model.rank(stats, candidates)
     best_cfg, best_t = None, float("inf")
+    failures = []
     for _, cfg in ranked[:top_k]:
         try:
             runner = lambda: _run_engine(op, state, cfg, **run_kw)
@@ -357,13 +400,23 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
                 jax.block_until_ready(runner()[0])
                 ts.append(time.perf_counter() - t0)
             t = min(ts)
-        except Exception:
+        except Exception as e:
+            warnings.warn(f"autotune: candidate {cfg} failed with {e!r}; "
+                          "excluding it from the measured ranking",
+                          RuntimeWarning, stacklevel=2)
+            failures.append((cfg, repr(e)))
             continue
         if t < best_t:
             best_cfg, best_t = cfg, t
     if best_cfg is None:                              # all candidates failed
+        warnings.warn(
+            f"autotune: all {len(ranked[:top_k])} measured candidates failed; "
+            "falling back to the cost model's top prediction "
+            f"{ranked[0][1]} (unmeasured)", RuntimeWarning, stacklevel=2)
         best_cfg, best_t = ranked[0][1], float("nan")
     _AUTOTUNE_CACHE[sig] = (best_cfg, best_t)
+    if failures:
+        _AUTOTUNE_FAILURES[sig] = tuple(failures)
     return best_cfg
 
 
@@ -407,16 +460,23 @@ def _run_dense_engine(op, state, cfg, max_rounds, **_):
                            sources_processed=int(st.sources_processed))
 
 
-# Memoized per (op identity, interpret) so run_tiled's static tile_solver
-# argument stays hash-stable across solve() calls (avoids recompiles).
+# Memoized per (op identity, interpret, batched) so run_tiled's static
+# tile_solver arguments stay hash-stable across solve() calls (avoids
+# recompiles).
 _SOLVER_MEMO: Dict[tuple, Callable] = {}
 
 
-def _pallas_solver_for(op, interpret: bool):
-    key = (type(op), op.connectivity, interpret)
+def _pallas_solver_for(op, interpret: bool, batched: bool = False):
+    key = (type(op), op.connectivity, interpret, batched)
     if key not in _SOLVER_MEMO:
-        factory = _registry_lookup(_PALLAS_SOLVERS, op)
+        factory = _registry_lookup(
+            _PALLAS_BATCH_SOLVERS if batched else _PALLAS_SOLVERS, op)
         if factory is None:
+            if batched:
+                # Fall back to vmapping the per-tile kernel; a dedicated
+                # grid-over-batch kernel is only an optimization.
+                _SOLVER_MEMO[key] = jax.vmap(_pallas_solver_for(op, interpret))
+                return _SOLVER_MEMO[key]
             raise ValueError(
                 f"no Pallas tile solver registered for {type(op).__name__}; "
                 "use register_pallas_solver() or engine='tiled'")
@@ -425,17 +485,24 @@ def _pallas_solver_for(op, interpret: bool):
 
 
 def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
-    solver = None
-    if cfg.engine == "tiled-pallas":
-        solver = _pallas_solver_for(op, interpret)
+    solver = batched_solver = None
     tile = cfg.tile or DEFAULT_TILES[1]
     cap = cfg.queue_capacity or DEFAULT_QUEUE_CAPACITY
+    drain_batch = (cfg.drain_batch if cfg.drain_batch is not None
+                   else _default_drain_batch(tile))
+    if cfg.engine == "tiled-pallas":
+        solver = _pallas_solver_for(op, interpret)
+        if drain_batch > 1:
+            batched_solver = _pallas_solver_for(op, interpret, batched=True)
     out, st = run_tiled(op, state, tile=tile, queue_capacity=cap,
-                        max_outer_rounds=max_rounds, tile_solver=solver)
+                        max_outer_rounds=max_rounds, tile_solver=solver,
+                        drain_batch=drain_batch,
+                        batched_tile_solver=batched_solver)
     return out, SolveStats(cfg.engine, rounds=int(st.outer_rounds),
                            tiles_processed=int(st.tiles_processed),
                            overflow_events=int(st.overflow_events),
-                           tile=tile, queue_capacity=cap)
+                           tile=tile, queue_capacity=cap,
+                           drain_batch=drain_batch)
 
 
 def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
@@ -459,18 +526,11 @@ def _scheduler_drain_for(op, tile: int):
     if key not in _DRAIN_MEMO:
         @jax.jit
         def _drain(blk):
-            # Sanitize: the scheduler's halo slices fill out-of-array cells
-            # with dtype-min, not the op's neutral value; force every invalid
-            # cell to the neutral fill so it can never source a propagation.
-            blk = dict(blk)
-            pv = op.pad_value(blk)
-            v = blk["valid"]
-            for k in blk:
-                if k != "valid":
-                    blk[k] = jnp.where(v, blk[k], jnp.asarray(pv[k], blk[k].dtype))
             # (T+2)^2 iterations bound the longest geodesic inside one block
             # (e.g. a spiral mask); the while_loop exits at stability, so the
-            # generous bound costs nothing in the common case.
+            # generous bound costs nothing in the common case.  Out-of-array
+            # halo cells arrive already holding the op's neutral pad values
+            # (TileScheduler pad_values), so no sanitize pass is needed.
             return _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
         _DRAIN_MEMO[key] = _drain
     return _DRAIN_MEMO[key]
@@ -492,9 +552,12 @@ def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
     merge_factory = _registry_lookup(_SCHEDULER_MERGES, op)
     merge_block_fn = merge_factory(op) if merge_factory is not None else None
     mutable = tuple(k for k in np_state if k not in op.static_leaves)
+    pad_values = {k: np.asarray(v).item()
+                  for k, v in op.pad_value(padded).items()}
     sched = TileScheduler(np_state, tile, tile_fn, active,
                           n_workers=n_workers, mutable=mutable,
-                          merge_block_fn=merge_block_fn)
+                          merge_block_fn=merge_block_fn,
+                          pad_values=pad_values)
     st = sched.run()
     out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
     return out, SolveStats("scheduler", rounds=1,
@@ -525,6 +588,7 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
           devices: Optional[Sequence] = None,
           tile: Optional[int] = None,
           queue_capacity: Optional[int] = None,
+          drain_batch: Optional[int] = None,
           max_rounds: int = 1_000_000,
           cost_model: Optional[CostModel] = None,
           autotune: bool = False,
@@ -542,6 +606,12 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
         also sets the device count the cost model sees.
     tile, queue_capacity : override the tiled engines' blocking; under
         ``"auto"`` they restrict the candidate set instead.
+    drain_batch : queue slots the tiled engines drain concurrently per
+        dispatch; ``1`` keeps the sequential per-tile scan.  Default: batch
+        by :data:`DEFAULT_DRAIN_BATCH` for tiles up to
+        :data:`BATCH_DEFAULT_MAX_TILE` (dispatch-bound regime), sequential
+        above.  Under ``"auto"`` it restricts the candidate set like
+        ``tile``/``queue_capacity``.
     autotune : with ``engine="auto"``, micro-benchmark the model's top
         ``autotune_top_k`` candidates on this input (``autotune_repeats``
         timed runs each after a warm-up) and cache the winner keyed by
@@ -555,7 +625,7 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
                   interpret=interpret, n_workers=n_workers)
 
     if engine != "auto":
-        cfg = EngineConfig(engine, tile, queue_capacity)
+        cfg = EngineConfig(engine, tile, queue_capacity, drain_batch)
         return _run_engine(op, state, cfg, **run_kw)
 
     n_devices = len(devices) if devices is not None else len(jax.devices())
@@ -567,10 +637,13 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
     if queue_capacity is not None:
         cands = [dataclasses.replace(c, queue_capacity=queue_capacity)
                  if c.queue_capacity is not None else c for c in cands]
+    if drain_batch is not None:
+        cands = [dataclasses.replace(c, drain_batch=drain_batch)
+                 if c.engine in ("tiled", "tiled-pallas") else c for c in cands]
 
     if autotune:
         cfg = _autotune(op, state, stats_in, model, cands,
-                        (tile, queue_capacity),
+                        (tile, queue_capacity, drain_batch),
                         autotune_top_k, autotune_repeats, **run_kw)
         out, st = _run_engine(op, state, cfg, **run_kw)
         return out, dataclasses.replace(

@@ -1,0 +1,118 @@
+"""Non-rectangular `valid`-mask regressions.
+
+Two historical bugs motivate these tests: the morph Pallas kernel accepted
+``valid`` but never read it (invalid in-block pixels could source/receive
+propagation), and the host scheduler's halo slices filled out-of-array
+cells with dtype-min instead of the op's neutral pad values (wrong for
+EDT's coordinate planes).  Every engine must now agree with the dense
+sequential reference (E1 `frontier`) on the valid region, with the invalid
+region deliberately *poisoned* with values that would leak if any path
+read them as propagation sources.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.frontier import run_dense
+from repro.core.scheduler import TileScheduler
+from repro.data.images import bg_disks, seeded_marker, tissue_image
+from repro.edt.ops import EdtOp, distance_map
+from repro.edt.ref import SENTINEL
+from repro.kernels.morph_tile import morph_tile_solve
+from repro.morph.ops import MorphReconstructOp
+from repro.solve import ENGINES, solve
+
+MASK_ENGINES = [e for e in ENGINES if e not in ("auto", "frontier")]
+ENGINE_KW = dict(tile=16, queue_capacity=8, n_workers=2)
+
+
+def _disk_valid(H, W):
+    yy, xx = np.mgrid[:H, :W]
+    return ((yy - H / 2) ** 2 + (xx - W / 2) ** 2) < (0.45 * max(H, W)) ** 2
+
+
+@pytest.fixture(scope="module")
+def morph_masked_case():
+    H, W = 49, 57
+    valid = _disk_valid(H, W)
+    _, mask = tissue_image(H, W, coverage=0.8, seed=3)
+    marker = seeded_marker(mask, n_seeds=4, seed=3)
+    # Poison the invalid region with maximal values: any engine that lets an
+    # invalid pixel source propagation will visibly corrupt the valid region.
+    marker = np.where(valid, marker, 255).astype(np.int32)
+    mask = np.where(valid, mask, 255).astype(np.int32)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask),
+                          jnp.asarray(valid))
+    ref_out, _ = run_dense(op, state, "frontier")
+    ref = np.where(valid, np.asarray(ref_out["J"]), 0)
+    return op, state, valid, ref
+
+
+@pytest.fixture(scope="module")
+def edt_masked_case():
+    H, W = 49, 57
+    valid = _disk_valid(H, W)
+    # Background pixels outside the valid region must offer no distance-0
+    # sites; with the mask applied, the only background sources are in-disk.
+    fg = bg_disks(H, W, coverage=0.9, n_disks=2, seed=4)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg), jnp.asarray(valid))
+    ref_out, _ = run_dense(op, state, "frontier")
+    ref = np.where(valid, np.asarray(distance_map(ref_out)), 0)
+    return op, state, valid, ref
+
+
+@pytest.mark.parametrize("engine", MASK_ENGINES)
+def test_masked_morph_every_engine(morph_masked_case, engine):
+    op, state, valid, ref = morph_masked_case
+    out, _ = solve(op, state, engine=engine, **ENGINE_KW)
+    got = np.where(valid, np.asarray(out["J"]), 0)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("engine", MASK_ENGINES)
+def test_masked_edt_every_engine(edt_masked_case, engine):
+    op, state, valid, ref = edt_masked_case
+    out, _ = solve(op, state, engine=engine, **ENGINE_KW)
+    got = np.where(valid, np.asarray(distance_map(out)), 0)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_morph_kernel_invalid_pixels_cannot_source():
+    """Direct kernel regression: an invalid pixel holding the dtype max must
+    not dilate into its valid neighbors (the kernel used to ignore valid)."""
+    Hp = Wp = 18
+    J = jnp.zeros((Hp, Wp), jnp.int32)
+    I = jnp.full((Hp, Wp), 100, jnp.int32)
+    valid = jnp.ones((Hp, Wp), bool)
+    J = J.at[8, 8].set(2**20)          # poisoned pixel...
+    valid = valid.at[8, 8].set(False)  # ...that is not part of the domain
+    out, _ = morph_tile_solve(J, I, valid, connectivity=8, interpret=True)
+    out = np.asarray(out)
+    vm = np.asarray(valid)
+    assert (out[vm] == 0).all()        # nothing to propagate: all-zero marker
+    assert out[8, 8] == np.iinfo(np.int32).min  # pinned to neutral
+
+
+def test_scheduler_slice_block_uses_op_pad_values():
+    """Out-of-array halo cells must hold the op's neutral fills, not
+    dtype-min — EDT's coordinate planes need the far sentinel."""
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(np.ones((8, 8), bool)))
+    np_state = {k: np.array(v) for k, v in state.items()}
+    pad_values = {k: np.asarray(v).item() for k, v in op.pad_value(state).items()}
+    sched = TileScheduler(np_state, 8, lambda b: (b, None),
+                          np.ones((1, 1), bool), n_workers=1,
+                          mutable=("vr",), pad_values=pad_values)
+    blk = sched._slice_block(0, 0)
+    assert blk["row"][0, 0] == SENTINEL      # not iinfo(int32).min
+    assert blk["col"][0, 0] == SENTINEL
+    assert (blk["vr"][:, 0, 0] == SENTINEL).all()
+    assert not blk["valid"][0, 0]
+    # and without pad_values the legacy dtype-min fallback still applies
+    legacy = TileScheduler({"J": np.zeros((8, 8), np.int32)}, 8,
+                           lambda b: (b, None), np.ones((1, 1), bool),
+                           n_workers=1)
+    assert legacy._slice_block(0, 0)["J"][0, 0] == np.iinfo(np.int32).min

@@ -117,3 +117,47 @@ def test_compression_error_bound(seed, n):
     assert err.max() <= float(scale) / 2 + 1e-6
     np.testing.assert_allclose(np.asarray(decompress(q, scale) + new_ef),
                                np.asarray(g), rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def image_pair_with_mask(draw, max_h=24, max_w=24):
+    marker, mask = draw(image_pair(max_h, max_w))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    valid = rng.random(mask.shape) < 0.85    # non-rectangular validity
+    return marker, mask, valid
+
+
+@given(image_pair_with_mask(), st.integers(2, 6))
+@settings(**SETTINGS)
+def test_batched_drain_equals_sequential_morph(case, drain_batch):
+    """The paper's parallel queue consumption: draining the compacted queue
+    in concurrent batches reaches bit-for-bit the sequential scan's fixed
+    point (monotone commutative updates; disjoint interior writes)."""
+    marker, mask, valid = case
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask),
+                          jnp.asarray(valid))
+    seq, _ = run_tiled(op, state, tile=8, queue_capacity=8, drain_batch=1)
+    bat, _ = run_tiled(op, state, tile=8, queue_capacity=8,
+                       drain_batch=drain_batch)
+    np.testing.assert_array_equal(
+        np.where(valid, np.asarray(seq["J"]), 0),
+        np.where(valid, np.asarray(bat["J"]), 0))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(6, 24), st.integers(6, 24),
+       st.integers(2, 6))
+@settings(**SETTINGS)
+def test_batched_drain_equals_sequential_edt(seed, h, w, drain_batch):
+    rng = np.random.default_rng(seed)
+    fg = rng.random((h, w)) < 0.6
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    seq, _ = run_tiled(op, state, tile=8, queue_capacity=8, drain_batch=1)
+    bat, _ = run_tiled(op, state, tile=8, queue_capacity=8,
+                       drain_batch=drain_batch)
+    # distances are unique at the fixed point (Voronoi ties may differ)
+    np.testing.assert_array_equal(np.asarray(distance_map(seq)),
+                                  np.asarray(distance_map(bat)))
+

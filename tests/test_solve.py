@@ -127,7 +127,7 @@ def test_autotune_caches_winner(morph_case):
     assert len(solve_mod._AUTOTUNE_CACHE) == 1          # cache hit, no growth
     assert s2.engine == s1.engine
     sig = autotune_signature(op, collect_input_stats(op, state),
-                             restrictions=(None, None))
+                             restrictions=(None, None, None))
     assert sig in solve_mod._AUTOTUNE_CACHE
     # a caller restriction is a different cache row, never a stale hit
     _, s3 = solve(op, state, engine="auto", autotune=True,
@@ -179,3 +179,67 @@ def test_candidates_respect_devices_and_tiles():
     stats8 = dataclasses.replace(stats1, n_devices=8)
     cands8 = CostModel().candidates(stats8)
     assert any(c.engine == "shard_map" for c in cands8)
+
+
+def test_autotune_surfaces_failed_candidates(morph_case):
+    """A candidate that raises must be warned about and recorded, so a
+    fully-failing candidate set is distinguishable from a fast one."""
+    op, state, ref = morph_case
+    clear_autotune_cache()
+
+    class ZeroModel(CostModel):
+        def cost(self, stats, cfg):
+            # rank the broken candidate first, the good one second
+            return 0.0 if cfg.engine == "tiled" else 1.0
+
+    broken = EngineConfig("tiled", tile=-7)  # negative tile -> pad ValueError
+    good = EngineConfig("frontier")
+    stats_in = collect_input_stats(op, state)
+    with pytest.warns(RuntimeWarning, match="candidate .* failed"):
+        cfg = solve_mod._autotune(op, state, stats_in, ZeroModel(),
+                                  [broken, good], (), 2, 1,
+                                  max_rounds=10_000, devices=None,
+                                  interpret=True, n_workers=2)
+    assert cfg == good
+    sig = autotune_signature(op, stats_in, ())
+    assert sig in solve_mod._AUTOTUNE_FAILURES
+    (failed_cfg, err), = solve_mod._AUTOTUNE_FAILURES[sig]
+    assert failed_cfg == broken and err
+    # all-failing candidate set: fall back to the ranking, but warn and
+    # record nan so the cache row is visibly unmeasured
+    clear_autotune_cache()
+    with pytest.warns(RuntimeWarning, match="all .* candidates failed"):
+        cfg = solve_mod._autotune(op, state, stats_in, ZeroModel(),
+                                  [broken], (), 1, 1,
+                                  max_rounds=10_000, devices=None,
+                                  interpret=True, n_workers=2)
+    assert cfg == broken
+    assert np.isnan(solve_mod._AUTOTUNE_CACHE[autotune_signature(op, stats_in, ())][1])
+    clear_autotune_cache()
+
+
+def test_drain_batch_knob_threads_through(morph_case):
+    op, state, ref = morph_case
+    out, stats = solve(op, state, engine="tiled", tile=16, queue_capacity=8,
+                       drain_batch=4)
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+    assert stats.drain_batch == 4
+    out, stats = solve(op, state, engine="tiled", tile=16, queue_capacity=8,
+                       drain_batch=1)
+    np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+    assert stats.drain_batch == 1
+
+
+def test_source_counter_exact_past_float32():
+    """sources_processed must stay exact beyond 2^24 (float32's integer
+    cliff) without x64: the counter is a (lo, hi) uint32 pair."""
+    from repro.core.frontier import RunStats, accumulate_u64
+    lo = jnp.uint32(2**32 - 5)
+    hi = jnp.uint32(3)
+    lo, hi = accumulate_u64(lo, hi, jnp.uint32(7))       # wraps the low word
+    stats = RunStats(jnp.int32(1), lo, hi)
+    assert stats.sources_processed == (3 << 32) + (2**32 - 5) + 7
+    # float32 would round this neighborhood; ints must not
+    big = (1 << 24) + 1
+    lo, hi = accumulate_u64(jnp.uint32(big), jnp.uint32(0), jnp.uint32(1))
+    assert (int(hi) << 32 | int(lo)) == big + 1
