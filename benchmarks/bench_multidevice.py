@@ -1,19 +1,32 @@
-"""Paper Figs. 10/15/16: multi-processor scaling.
+"""Paper Figs. 10/15/16: multi-processor scaling — and the composed
+`shard_map-tiled` hierarchy against the flat `shard_map` engine.
 
-Two layers, matching the paper's two experiments:
+Three layers, matching the paper's experiments:
   * host-scheduler scaling (paper Fig. 10 tiled-vs-non-tiled multicore):
     the demand-driven FCFS TileScheduler with 1..4 workers;
   * device-mesh scaling (paper Figs. 15/16 multi-GPU): the E3 shard_map
     engine on 1/2/4/8 host devices, run in subprocesses so the parent
-    process keeps a single-device view.
+    process keeps a single-device view;
+  * engine composition (the §4-over-§3.2 hierarchy): `shard_map` (dense
+    per-device TP drains) vs `shard_map-tiled` (per-shard active-tile
+    queues re-seeded each BP round from only the halo-improved tiles) on
+    sparse-seeded and dense wavefronts over the same meshes.
+
+``--json [PATH]`` writes every record to ``BENCH_multidevice.json`` (the
+perf-trajectory seed, tracked per PR like ``BENCH_tiled.json``); ``--smoke``
+shrinks sizes/meshes/iterations to the CI profile (8 fake CPU devices).
 
 CPU-host caveat recorded in EXPERIMENTS.md: all "devices" share one socket
 here, so scaling saturates at the memory bus — the numbers validate the
-TP/BP pipeline's correctness+overhead, not TPU-pod bandwidth.
+TP/BP pipeline's correctness+overhead, not TPU-pod bandwidth.  The
+composition comparison is still meaningful on CPU hosts for the *work*
+columns (BP rounds, tiles drained vs whole-shard redrains).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
@@ -24,52 +37,61 @@ import numpy as np
 from benchmarks.common import emit
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = "BENCH_multidevice.json"
 
 _CHILD = """
 import time
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.distributed import run_sharded
-from repro.data.images import tissue_image
+from repro.data.images import tissue_image, seeded_marker
 from repro.morph.ops import MorphReconstructOp
-ndev = {ndev}
-shape = {mesh_shape}
-mesh = jax.make_mesh(shape, ("data", "model"))
+mesh = jax.make_mesh({mesh_shape}, ("data", "model"))
 marker, mask = tissue_image({size}, {size}, 1.0, seed=0)
+if {sparse}:
+    marker = seeded_marker(mask, n_seeds=max(8, {size} // 20), seed=0)
 op = MorphReconstructOp(connectivity=8)
 state = op.make_state(jnp.asarray(marker.astype(np.int32)),
                       jnp.asarray(mask.astype(np.int32)))
-out, rounds = run_sharded(op, state, mesh)   # compile+warm
+kw = dict(tile={tile}, queue_capacity=64, drain_batch=4) if {tiled} else {{}}
+out, st = run_sharded(op, state, mesh, **kw)   # compile+warm
 ts = []
-for _ in range(3):
+for _ in range({iters}):
     t0 = time.perf_counter()
-    out, rounds = run_sharded(op, state, mesh)
+    out, st = run_sharded(op, state, mesh, **kw)
     jax.block_until_ready(out)
     ts.append(time.perf_counter() - t0)
-print("RESULT", np.median(ts), int(rounds))
+print("RESULT", np.median(ts), int(st.bp_rounds), int(st.tiles_processed),
+      int(st.overflow_events))
 """
 
 
-def _run_child(ndev, mesh_shape, size):
+def _run_child(ndev, mesh_shape, size, sparse=False, tiled=False, tile=32,
+               iters=3):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    code = _CHILD.format(ndev=ndev, mesh_shape=mesh_shape, size=size)
+    code = _CHILD.format(mesh_shape=mesh_shape, size=size, sparse=sparse,
+                         tiled=tiled, tile=tile, iters=iters)
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=560, env=env)
     if r.returncode != 0:
         raise RuntimeError(r.stderr[-2000:])
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
-    _, t, rounds = line.split()
-    return float(t), int(rounds)
+    _, t, rounds, tiles, ovf = line.split()
+    return float(t), int(rounds), int(tiles), int(ovf)
 
 
-def main(size: int = 512):
-    # Fig 10 analogue: host tile scheduler, 1..4 workers
+def _record(records, name, seconds, **derived):
+    emit(name, seconds, ";".join(f"{k}={v}" for k, v in derived.items()))
+    records.append({"name": name, "seconds": seconds, **derived})
+
+
+def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4)):
+    """Fig 10 analogue: host tile scheduler, 1..N workers."""
     from repro.core.scheduler import TileScheduler
-    from repro.core.tiles import initial_active_tiles
+    from repro.core.tiles import _tile_local_solve, initial_active_tiles
     from repro.data.images import tissue_image
     from repro.morph.ops import MorphReconstructOp
-    from repro.core.tiles import _tile_local_solve
     import jax.numpy as jnp
     import jax
     import time
@@ -77,7 +99,10 @@ def main(size: int = 512):
     marker, mask = tissue_image(size, size, 1.0, seed=0)
     op = MorphReconstructOp(connectivity=8)
     T = 128
-    solve = jax.jit(lambda blk: _tile_local_solve(op, blk, max_iters=4 * T))
+    # (T+2)^2 is the geodesic bound — anything lower can silently truncate
+    # a drain (the scheduler has no unconverged self-requeue of its own).
+    solve = jax.jit(
+        lambda blk: _tile_local_solve(op, blk, max_iters=(T + 2) ** 2)[0])
 
     def tile_fn(block):
         blk = {k: jnp.asarray(v) for k, v in block.items()}
@@ -93,7 +118,7 @@ def main(size: int = 512):
     jax.block_until_ready(solve(warm))
 
     base = None
-    for workers in (1, 2, 4):
+    for workers in workers_list:
         state = {"J": np.minimum(marker, mask).astype(np.int32),
                  "I": mask.astype(np.int32),
                  "valid": np.ones(mask.shape, bool)}
@@ -103,18 +128,85 @@ def main(size: int = 512):
         TileScheduler(state, T, tile_fn, active, n_workers=workers).run()
         t = time.perf_counter() - t0
         base = base or t
-        emit(f"fig10/scheduler/workers={workers}", t,
-             f"speedup={base / t:.2f}")
+        _record(records, f"fig10/scheduler/workers={workers}", t,
+                speedup=round(base / t, 2))
 
-    # Figs 15/16 analogue: mesh scaling via subprocesses
-    base = None
-    for ndev, mesh_shape in ((1, (1, 1)), (2, (1, 2)), (4, (2, 2)),
-                             (8, (2, 4))):
-        t, rounds = _run_child(ndev, mesh_shape, size)
+
+def mesh_scaling(size: int, records: list, meshes, iters=3):
+    """Figs 15/16 analogue: flat shard_map mesh scaling via subprocesses.
+
+    Returns {ndev: (seconds, bp_rounds)} so composition_comparison can
+    reuse these dense flat runs instead of re-spawning identical children.
+    """
+    base, flat_dense = None, {}
+    for ndev, mesh_shape in meshes:
+        t, rounds, _, _ = _run_child(ndev, mesh_shape, size, iters=iters)
         base = base or t
-        emit(f"fig15/mesh/devices={ndev}", t,
-             f"speedup={base / t:.2f};bp_rounds={rounds}")
+        flat_dense[ndev] = (t, rounds)
+        _record(records, f"fig15/mesh/devices={ndev}", t,
+                speedup=round(base / t, 2), bp_rounds=rounds)
+    return flat_dense
+
+
+def composition_comparison(size: int, records: list, meshes, tile=32,
+                           iters=3, flat_dense=None):
+    """shard_map vs shard_map-tiled on sparse/dense seeds over the meshes.
+
+    The regime claim (paper Fig. 12 transplanted to the mesh level): with
+    sparse seeds the wavefront touches few tiles per shard, so the composed
+    engine's per-shard queue skips the stable interior every BP round; with
+    near-full wavefronts the dense drain's full-shard rounds are already
+    optimal and the queue is pure overhead.
+    """
+    for kind, sparse in (("sparse", True), ("dense", False)):
+        for ndev, mesh_shape in meshes:
+            if not sparse and flat_dense and ndev in flat_dense:
+                # identical workload to the fig15 run — reuse, don't respawn
+                t_flat, rounds_f = flat_dense[ndev]
+            else:
+                t_flat, rounds_f, _, _ = _run_child(
+                    ndev, mesh_shape, size, sparse=sparse, iters=iters)
+            _record(records,
+                    f"compose/{kind}/devices={ndev}/shard_map", t_flat,
+                    bp_rounds=rounds_f)
+            t_tiled, rounds_t, tiles, ovf = _run_child(
+                ndev, mesh_shape, size, sparse=sparse, tiled=True, tile=tile,
+                iters=iters)
+            _record(records,
+                    f"compose/{kind}/devices={ndev}/shard_map-tiled", t_tiled,
+                    bp_rounds=rounds_t, tiles=tiles, overflows=ovf,
+                    speedup_vs_flat=round(t_flat / t_tiled, 2))
+
+
+def main(size: int = 512, json_path: str | None = None, smoke: bool = False):
+    records: list = []
+    if smoke:
+        # CI profile: one small grid, the 1-device baseline and the full
+        # 8-fake-device mesh, single timed iteration.
+        size = 256
+        meshes = ((1, (1, 1)), (8, (2, 4)))
+        scheduler_scaling(size, records, workers_list=(1, 2))
+        flat = mesh_scaling(size, records, meshes, iters=1)
+        composition_comparison(size, records, meshes, iters=1, flat_dense=flat)
+    else:
+        meshes = ((1, (1, 1)), (2, (1, 2)), (4, (2, 2)), (8, (2, 4)))
+        scheduler_scaling(size, records)
+        flat = mesh_scaling(size, records, meshes)
+        composition_comparison(size, records, meshes, flat_dense=flat)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} records to {json_path}", flush=True)
+    return records
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=512)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: small grid, 1+8 device meshes, 1 iter")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"write records as JSON (default path {DEFAULT_JSON})")
+    a = ap.parse_args()
+    main(a.size, json_path=a.json, smoke=a.smoke)

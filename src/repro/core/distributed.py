@@ -5,7 +5,12 @@ The grid is partitioned into one block per device over a 2-D device grid
 is exactly the paper's TP/BP pipeline:
 
   TP (Tile Propagation)  -> every device drains its local block to stability
-                            (dense frontier rounds — E1 — or the tiled E2);
+                            — the drain is *pluggable*: dense frontier
+                            rounds (E1 `_local_drain`) or a per-shard
+                            `run_tiled` active-tile queue (E2, plain or
+                            Pallas-backed, with `drain_batch`), composing
+                            the paper's §4 inter-device pipeline with its
+                            §3.2 multi-level queue *within* each device;
   BP (Border Propagation)-> halo exchange of the 1-px border ring with the
                             4 mesh neighbors via `lax.ppermute` (two-step:
                             columns first, then rows of the column-extended
@@ -18,19 +23,38 @@ is exactly the paper's TP/BP pipeline:
 Restarting local propagation from received halos is seeded only at the
 border ring — the frontier of the next TP stage is the set of pixels the
 halo actually improved, which is the paper's "propagations initiated from
-the borders".
+the borders".  With the tiled TP drain, that frontier is further compacted
+to the set of *tiles* it touches (`active_tiles_from_frontier`), so a BP
+round re-drains only the halo-improved corner of each shard instead of the
+whole block (DESIGN.md §2.2).
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.pattern import PropagationOp, tree_shape
+from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
+from repro.core.tiles import active_tiles_from_frontier, run_tiled
+
+
+class ShardStats(NamedTuple):
+    """Work record of one sharded run (per-device counters psum-aggregated).
+
+    ``per_device_tiles`` keeps the *unreduced* (nrows, ncols) per-device
+    drain counts next to the psum'd total, so the aggregation itself is a
+    testable invariant: ``per_device_tiles.sum() == tiles_processed``.
+    All tile counters are zero under the dense TP drain.
+    """
+    bp_rounds: jnp.ndarray         # outer TP/BP rounds (replicated scalar)
+    tiles_processed: jnp.ndarray   # psum over devices (tiled TP drain only)
+    overflow_events: jnp.ndarray   # psum over devices
+    tiles_requeued: jnp.ndarray    # psum over devices (unconverged re-drains)
+    per_device_tiles: jnp.ndarray  # (nrows, ncols) per-device drain counts
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -91,32 +115,82 @@ def _local_drain(op: PropagationOp, block, frontier, max_iters: int = 1_000_000)
 
 
 def run_sharded(op: PropagationOp, state, mesh: Mesh,
-                axes: Tuple[str, str] = ("data", "model")):
+                axes: Tuple[str, str] = ("data", "model"), *,
+                tile: Optional[int] = None,
+                queue_capacity: int = 256,
+                drain_batch: int = 1,
+                tile_solver: Optional[Callable] = None,
+                batched_tile_solver: Optional[Callable] = None,
+                max_bp_rounds: int = 10_000):
     """Run `op` to the global fixed point on `mesh`.
 
     `state` leaves are (..., H, W) with H divisible by mesh.shape[axes[0]]
-    and W by mesh.shape[axes[1]].
+    and W by mesh.shape[axes[1]].  Returns ``(state, ShardStats)``.
+
+    ``tile=None`` drains each device's block densely (E1 rounds) per TP
+    stage — the flat `shard_map` engine.  With ``tile`` set, each TP stage
+    is a per-shard `run_tiled` active-tile queue (the composed
+    `shard_map-tiled` engine): the first TP drains from the op's own
+    initial frontier; every later TP is seeded with *only the tiles the
+    halo exchange improved* (``initial_active`` over the halo-improved
+    frontier) — monotone commutative updates make re-draining any superset
+    of those tiles reach the same fixed point, so the compaction is free of
+    correctness risk and skips the (typically vast) stable interior of each
+    shard.  ``tile_solver`` / ``batched_tile_solver`` plug the Pallas VMEM
+    drains in, exactly as in `run_tiled`; solvers must honor the
+    ``(block, unconverged)`` contract so partial drains self-requeue.
     """
     row_ax, col_ax = axes
     nrows, ncols = mesh.shape[row_ax], mesh.shape[col_ax]
     H, W = tree_shape(state)
     assert H % nrows == 0 and W % ncols == 0, (H, W, nrows, ncols)
     pad_vals = op.pad_value(state)
+    bh, bw = H // nrows, W // ncols
+    if tile is not None:
+        nty, ntx = -(-bh // tile), -(-bw // tile)
 
     spec = jax.tree_util.tree_map(
         lambda x: P(*([None] * (x.ndim - 2) + [row_ax, col_ax])), state)
 
+    zero = jnp.int32(0)
+
+    def _tp_drain(block, frontier, active):
+        """One TP stage; returns (block, (tiles, overflows, requeues)).
+
+        ``frontier``/``active``: the seed — exactly one is non-None (the
+        dense drain takes a pixel frontier, the tiled drain a tile bitmap).
+        """
+        if tile is None:
+            block, _ = _local_drain(op, block, frontier)
+            return block, (zero, zero, zero)
+        # restore=False: the invalid-pixel contract is applied once at this
+        # engine's own boundary, not per TP stage inside the BP loop.
+        # Each nested call still pays run_tiled's O(shard-area) pad/strip —
+        # the drain work is active-tiles-only, the layout copies are not;
+        # keeping shards in padded layout across the BP loop would remove
+        # them but needs a padded-layout run_tiled entry point (follow-up).
+        block, st = run_tiled(op, block, tile=tile,
+                              queue_capacity=queue_capacity,
+                              tile_solver=tile_solver,
+                              drain_batch=drain_batch,
+                              batched_tile_solver=batched_tile_solver,
+                              initial_active=active, restore=False)
+        return block, (st.tiles_processed, st.overflow_events,
+                       st.tiles_requeued)
+
     def device_fn(block):
         # TP round 0: local drain from the op's own init frontier.
-        f0 = op.init_frontier(block)
-        block, _ = _local_drain(op, block, f0)
+        if tile is None:
+            block, counters = _tp_drain(block, op.init_frontier(block), None)
+        else:
+            block, counters = _tp_drain(block, None, None)
 
         def cond(carry):
-            _, changed, it = carry
-            return changed & (it < 10_000)
+            _, changed, it, _ = carry
+            return changed & (it < max_bp_rounds)
 
         def body(carry):
-            block, _, it = carry
+            block, _, it, (tiles, ovf, req) = carry
             # BP: halo exchange, then one masked round sourcing only from the
             # halo ring, to find which border pixels the neighbors improved.
             ext = _exchange_halo(block, pad_vals, (row_ax, col_ax), (nrows, ncols))
@@ -124,19 +198,37 @@ def run_sharded(op: PropagationOp, state, mesh: Mesh,
             halo_frontier = jnp.zeros((h + 2, w + 2), dtype=bool)
             halo_frontier = halo_frontier.at[0, :].set(True).at[-1, :].set(True)
             halo_frontier = halo_frontier.at[:, 0].set(True).at[:, -1].set(True)
+            # Only *valid* halo cells may source: an invalid border pixel of
+            # the neighbor shard holds arbitrary input values (the invalid-
+            # pixel contract preserves them), and an unmasked seed would let
+            # it propagate into this shard's valid region.
+            if "valid" in ext:
+                halo_frontier = halo_frontier & ext["valid"]
             ext_new, f_ext = op.round(ext, halo_frontier)
             inner = lambda x: x[..., 1:-1, 1:-1]
             block = jax.tree_util.tree_map(lambda _, b: inner(b), block, ext_new)
             f_in = inner(f_ext)
-            # TP: drain local propagation seeded by improved border pixels.
-            block, _ = _local_drain(op, block, f_in)
+            # TP: drain local propagation seeded by improved border pixels
+            # (tiled drain: compacted to the tiles those pixels touch).
+            if tile is None:
+                block, (t, o, r) = _tp_drain(block, f_in, None)
+            else:
+                active = active_tiles_from_frontier(op, f_in, tile, nty, ntx)
+                block, (t, o, r) = _tp_drain(block, None, active)
             changed_local = jnp.any(f_in)
             changed = jax.lax.psum(changed_local.astype(jnp.int32), (row_ax, col_ax)) > 0
-            return block, changed, it + 1
+            return block, changed, it + 1, (tiles + t, ovf + o, req + r)
 
-        block, _, rounds = jax.lax.while_loop(cond, body, (block, jnp.bool_(True), jnp.int32(0)))
-        return block, rounds
+        block, _, rounds, (tiles, ovf, req) = jax.lax.while_loop(
+            cond, body, (block, jnp.bool_(True), jnp.int32(0), counters))
+        # Per-device counters + psum totals: stats aggregation is itself a
+        # collective (the record is replicated; the per-device plane is not).
+        totals = tuple(jax.lax.psum(c, (row_ax, col_ax)) for c in (tiles, ovf, req))
+        return block, rounds, totals, tiles.reshape(1, 1)
 
-    fn = shard_map_compat(device_fn, mesh, (spec,), (spec, P()))
-    out, rounds = jax.jit(fn)(state)
-    return out, rounds
+    fn = shard_map_compat(device_fn, mesh, (spec,),
+                          (spec, P(), (P(), P(), P()), P(row_ax, col_ax)))
+    out, rounds, (tiles, ovf, req), per_dev = jax.jit(fn)(state)
+    # Engine output contract: invalid cells hold their input values.
+    out = restore_invalid(op, state, out)
+    return out, ShardStats(rounds, tiles, ovf, req, per_dev)

@@ -22,7 +22,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import PropagationOp
+from repro.core.pattern import PropagationOp, restore_invalid
 
 
 def accumulate_u64(lo: jnp.ndarray, hi: jnp.ndarray,
@@ -79,8 +79,10 @@ def run_dense(op: PropagationOp, state, engine: str = "frontier",
             new_frontier = jnp.broadcast_to(jnp.any(new_frontier), new_frontier.shape) & state["valid"]
         return state, new_frontier, stats
 
-    state, _, stats = jax.lax.while_loop(cond, body, (state, frontier0, stats0))
-    return state, stats
+    out, _, stats = jax.lax.while_loop(cond, body, (state, frontier0, stats0))
+    # Engine output contract: invalid cells hold their input values (the
+    # dense rounds can grow an invalid *receiver* one step toward the mask).
+    return restore_invalid(op, state, out), stats
 
 
 def run_to_stability(op: PropagationOp, state, max_rounds: int = 1_000_000):

@@ -93,3 +93,26 @@ class PropagationOp:
 def tree_shape(state):
     leaf = jax.tree_util.tree_leaves(state)[0]
     return leaf.shape[-2], leaf.shape[-1]
+
+
+def restore_invalid(op: PropagationOp, original, out):
+    """Enforce the engine output contract on invalid pixels.
+
+    Engines differ in what they leave behind outside the valid domain (the
+    dense rounds can grow an invalid *receiver*, the Pallas tile drains pin
+    invalid cells to the neutral value) — so the uniform contract is:
+    **invalid cells of every engine's output hold their input values,
+    bit-for-bit**.  Every engine applies this restore on its final state,
+    making engine outputs comparable over the whole array, not just the
+    valid region (tests/test_masks.py).
+
+    Static leaves are never written by engines, so only mutable leaves are
+    restored; ``valid`` broadcasts against leading non-spatial dims (EDT's
+    (2, H, W) pointer plane).
+    """
+    if "valid" not in original:
+        return out
+    valid = original["valid"]
+    static = set(op.static_leaves)
+    return {k: (v if k in static else jnp.where(valid, v, original[k]))
+            for k, v in out.items()}

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Set, Tuple
 
@@ -34,6 +35,10 @@ class SchedulerStats:
     rounds: int = 0
     requeues_from_failures: int = 0
     per_worker: Dict[int, int] = field(default_factory=dict)
+    # True iff run() gave up with work still queued (every survivor wave
+    # died, max_survivor_waves exhausted): the state is NOT at its fixed
+    # point and must not be treated as one.
+    incomplete: bool = False
 
 
 class TileScheduler:
@@ -88,16 +93,18 @@ class TileScheduler:
         self._inflight = 0
         self._done = threading.Condition(self._lock)
         self.stats = SchedulerStats()
-        for ty in range(self.nty):
-            for tx in range(self.ntx):
-                if init_active[ty, tx]:
-                    self._push((ty, tx))
+        with self._lock:   # _push notifies `_done`, which requires the lock
+            for ty in range(self.nty):
+                for tx in range(self.ntx):
+                    if init_active[ty, tx]:
+                        self._push((ty, tx))
 
     # -- queue ops (lock held) ---------------------------------------------
     def _push(self, tid):
         if tid not in self._in_queue:
             self._in_queue.add(tid)
             self._q.put(tid)
+            self._done.notify_all()   # wake idle workers waiting for work
 
     def _slice_block(self, ty, tx):
         T = self.tile
@@ -160,17 +167,29 @@ class TileScheduler:
     def _worker(self, wid: int):
         n_done = 0
         while True:
-            try:
-                tid = self._q.get(timeout=0.05)
-            except queue.Empty:
-                with self._lock:
-                    if self._inflight == 0 and self._q.empty():
-                        return
-                continue
+            # Atomic claim-then-get: the queue pop and the inflight increment
+            # happen under ONE lock acquisition.  The previous unlocked
+            # `q.get()` left a window between a successful pop and
+            # `_inflight += 1` in which the tile was in a worker's hands but
+            # visible nowhere — idle peers observing `inflight == 0 and
+            # q.empty()` exited, silently degrading the pool to one worker.
             with self._lock:
-                self._inflight += 1
-                self._in_queue.discard(tid)
-                block = self._slice_block(*tid)
+                try:
+                    tid = self._q.get_nowait()
+                except queue.Empty:
+                    if self._inflight == 0:
+                        return      # genuinely done: nothing queued, nothing claimed
+                    # A peer holds a tile; it may mark neighbors (push) or
+                    # finish (inflight drop) — both notify `_done`.  The
+                    # timeout is only a safety net against a lost wakeup.
+                    self._done.wait(timeout=0.05)
+                    tid = None
+                else:
+                    self._inflight += 1
+                    self._in_queue.discard(tid)
+                    block = self._slice_block(*tid)
+            if tid is None:
+                continue
             try:
                 if self.fail_worker == wid and n_done >= self.fail_after:
                     raise RuntimeError(f"injected failure on worker {wid}")
@@ -188,9 +207,15 @@ class TileScheduler:
                     self._push(tid)
                     self.stats.requeues_from_failures += 1
                     self._inflight -= 1
+                    self._done.notify_all()
                 return  # worker dies; remaining workers pick up the slack
             with self._lock:
                 self._inflight -= 1
+                self._done.notify_all()   # idle peers re-check the exit condition
+
+    # Survivor waves after the initial pass (fault tolerance); bounds the
+    # pathological case of a tile_fn that fails deterministically forever.
+    max_survivor_waves = 32
 
     def run(self) -> SchedulerStats:
         workers = [threading.Thread(target=self._worker, args=(w,), daemon=True)
@@ -199,11 +224,29 @@ class TileScheduler:
             t.start()
         for t in workers:
             t.join()
-        if not self._q.empty():  # killed workers left work behind
-            survivors = [threading.Thread(target=self._worker, args=(self.n_workers + w,), daemon=True)
+        # Killed workers re-queue their tile and die, so a wave can end with
+        # work still pending — and a survivor wave can *itself* lose workers.
+        # Re-check after every wave (the old single survivor pass returned
+        # with a non-empty queue if its workers also died).
+        next_wid = self.n_workers
+        waves = 0
+        while not self._q.empty() and waves < self.max_survivor_waves:
+            survivors = [threading.Thread(target=self._worker,
+                                          args=(next_wid + w,), daemon=True)
                          for w in range(max(1, self.n_workers - 1))]
             for t in survivors:
                 t.start()
             for t in survivors:
                 t.join()
+            next_wid += len(survivors)
+            waves += 1
+        if not self._q.empty():
+            # Every wave died with work still queued (a deterministically
+            # failing tile_fn).  Never report this as a fixed point.
+            self.stats.incomplete = True
+            warnings.warn(
+                f"TileScheduler gave up after {waves} survivor waves with "
+                f"~{self._q.qsize()} tiles still queued; the state is NOT at "
+                "its fixed point (stats.incomplete=True)", RuntimeWarning,
+                stacklevel=2)
         return self.stats

@@ -34,13 +34,14 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import PropagationOp, tree_shape
+from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
 
 
 class TileStats(NamedTuple):
     outer_rounds: jnp.ndarray
     tiles_processed: jnp.ndarray
     overflow_events: jnp.ndarray   # rounds where active > capacity (paper §5.2.4)
+    tiles_requeued: jnp.ndarray    # drains cut off at max_iters -> self-requeued
 
 
 def _pad_state(op, state, tile: int):
@@ -68,6 +69,11 @@ def _tile_local_solve(op: PropagationOp, block, max_iters: int):
     from the seed: `op.round` masks sources by the frontier, so seeding them
     would let invalid pixels (non-rectangular masks, engine padding) source
     one round of propagation.
+
+    Returns ``(block, unconverged)``: ``unconverged`` is True iff the loop
+    was cut off at ``max_iters`` with a non-empty frontier — the caller must
+    treat the result as a *partial* drain and re-queue the tile, never as a
+    fixed point.
     """
     frontier0 = jnp.ones(tree_shape(block), dtype=bool)
     if "valid" in block:
@@ -82,29 +88,38 @@ def _tile_local_solve(op: PropagationOp, block, max_iters: int):
         blk, f = op.round(blk, f)
         return blk, f, it + 1
 
-    block, _, _ = jax.lax.while_loop(cond, body, (block, frontier0, jnp.int32(0)))
-    return block
+    block, f, _ = jax.lax.while_loop(cond, body, (block, frontier0, jnp.int32(0)))
+    return block, jnp.any(f)
+
+
+def active_tiles_from_frontier(op: PropagationOp, frontier, tile: int,
+                               nty: int, ntx: int):
+    """Tiles containing (or *adjacent to*) a frontier pixel.
+
+    The frontier marks *source* pixels; a source on a tile border must also
+    activate the receiving tile (its own tile may drain without any interior
+    change, producing no neighbor marks).  Hence the 1-px dilation before
+    the per-tile reduction.  This is also the BP->TP seam of the composed
+    `shard_map-tiled` engine: each BP round seeds the per-device queue with
+    exactly the tiles the halo exchange improved (core/distributed.py).
+    """
+    from repro.core.pattern import shift2d
+    H, W = frontier.shape[-2:]
+    dil = frontier
+    for dr, dc in op.offsets:
+        dil = dil | shift2d(frontier, dr, dc, False)
+    fp = jnp.pad(dil, ((0, nty * tile - H), (0, ntx * tile - W)))
+    return fp.reshape(nty, tile, ntx, tile).any(axis=(1, 3))
 
 
 def initial_active_tiles(op: PropagationOp, state, tile: int,
                          nty: int = None, ntx: int = None):
-    """Tiles containing (or *adjacent to*) an initial-frontier pixel.
-
-    The frontier condition marks *source* pixels; a source on a tile border
-    must also activate the receiving tile (its own tile may drain without
-    any interior change, producing no neighbor marks).  Hence the 1-px
-    dilation before the per-tile reduction.
-    """
+    """Tiles activated by the op's own initial frontier (see
+    :func:`active_tiles_from_frontier` for the dilation argument)."""
     H, W = tree_shape(state)
     if nty is None:
         nty, ntx = -(-H // tile), -(-W // tile)
-    f0 = op.init_frontier(state)
-    dil = f0
-    for dr, dc in op.offsets:
-        from repro.core.pattern import shift2d
-        dil = dil | shift2d(f0, dr, dc, False)
-    fp = jnp.pad(dil, ((0, nty * tile - H), (0, ntx * tile - W)))
-    return fp.reshape(nty, tile, ntx, tile).any(axis=(1, 3))
+    return active_tiles_from_frontier(op, op.init_frontier(state), tile, nty, ntx)
 
 
 def _gather_block(padded, ty, tx, tile: int):
@@ -156,12 +171,14 @@ def _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty: int, ntx: int):
     return marks
 
 
-@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6, 7))
+@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6, 7, 9))
 def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 256,
               max_outer_rounds: int = 100_000,
               tile_solver: Optional[Callable] = None,
               drain_batch: int = 1,
-              batched_tile_solver: Optional[Callable] = None):
+              batched_tile_solver: Optional[Callable] = None,
+              initial_active: Optional[jnp.ndarray] = None,
+              restore: bool = True):
     """Run `op` to the global fixed point with the tiled active-set engine.
 
     ``drain_batch`` > 1 drains the compacted queue in parallel batches of
@@ -173,6 +190,21 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     the dirty-neighbor re-marking, and monotone-commutative updates make
     the result exact either way.  ``drain_batch <= 1`` keeps the sequential
     ``lax.scan`` drain.
+
+    Tile solvers map a halo-block pytree to ``(drained block, unconverged)``
+    — an ``unconverged`` drain (cut off at the solver's iteration bound) is
+    a *partial* result, so the engine re-queues that tile (self-mark) until
+    a drain reaches stability.  Without this, a tile whose internal geodesic
+    exceeds the bound would be dequeued with a silently-wrong fixed point.
+
+    ``initial_active``: optional (nty, ntx) bool plane overriding the
+    op-derived initial queue — the seam the composed `shard_map-tiled`
+    engine uses to seed each BP round from only the halo-improved tiles.
+
+    ``restore=False`` skips the final invalid-pixel restore (an O(area)
+    `where` over every mutable leaf) — for *nested* use only, where the
+    outer engine applies the contract once at its own boundary
+    (`run_sharded` calls run_tiled per TP stage inside the BP loop).
     """
     # (T+2)^2 bounds the longest geodesic inside one halo block (a spiral
     # path); the while_loop exits at stability so the bound is free normally.
@@ -187,7 +219,8 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     n_chunks = -(-queue_capacity // K)
     n_slots = n_chunks * K
 
-    active0 = initial_active_tiles(op, state, tile, nty, ntx)
+    active0 = (initial_active if initial_active is not None
+               else initial_active_tiles(op, state, tile, nty, ntx))
 
     mutable = [k for k in padded.keys() if k not in op.static_leaves]
 
@@ -199,18 +232,21 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
         def do(padded):
             block = _gather_block(padded, ty, tx, tile)
             pre = {k: block[k] for k in mutable}
-            block = solver(block)
+            block, unconv = solver(block)
             new_padded = _interior_writeback(padded, block, ty, tx, tile, mutable)
             top, bot, lef, rig = _edges_changed(pre, block, tile, mutable)
             marks = jnp.zeros((nty, ntx), dtype=bool)
             marks = _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty, ntx)
-            return new_padded, marks
+            # Partial drain: the tile is NOT at a fixed point — self-mark it
+            # so it stays in the queue (the truncation bugfix).
+            marks = marks.at[ty, tx].max(unconv)
+            return new_padded, marks, unconv.astype(jnp.int32)
 
         def skip(padded):
-            return padded, jnp.zeros((nty, ntx), dtype=bool)
+            return padded, jnp.zeros((nty, ntx), dtype=bool), jnp.int32(0)
 
-        padded, marks = jax.lax.cond(tid >= 0, do, skip, padded)
-        return padded, marks
+        padded, marks, requeued = jax.lax.cond(tid >= 0, do, skip, padded)
+        return padded, (marks, requeued)
 
     if K > 1:
         batched_solver = batched_tile_solver or jax.vmap(solver)
@@ -230,13 +266,16 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
                 live.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.asarray(v, x.dtype)),
             blocks, pv)
         pre = {k: blocks[k] for k in mutable}
-        post = batched_solver(blocks)
+        post, unconv = batched_solver(blocks)
         top, bot, lef, rig = jax.vmap(
             lambda p, q: _edges_changed(p, q, tile, mutable)
         )(pre, {k: post[k] for k in mutable})
         marks = jnp.zeros((nty, ntx), dtype=bool)
         marks = _mark_neighbors(marks, tys, txs, top & live, bot & live,
                                 lef & live, rig & live, nty, ntx)
+        # Partial drains self-requeue (dead slots never do: unconv & live).
+        unconv = unconv & live
+        marks = marks.at[tys, txs].max(unconv)
 
         def scatter(padded, slot):
             tid, ty, tx, block = slot
@@ -248,7 +287,7 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
 
         padded, _ = jax.lax.scan(
             scatter, padded, (ids_k, tys, txs, {k: post[k] for k in mutable}))
-        return padded, marks
+        return padded, (marks, jnp.sum(unconv, dtype=jnp.int32))
 
     def outer_cond(carry):
         padded, active, stats = carry
@@ -261,23 +300,27 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
         n_active = jnp.sum(flat)
         processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
         if K > 1:
-            padded, marks = jax.lax.scan(process_chunk, padded, ids.reshape(n_chunks, K))
+            padded, (marks, requeued) = jax.lax.scan(
+                process_chunk, padded, ids.reshape(n_chunks, K))
         else:
-            padded, marks = jax.lax.scan(process_tile, padded, ids)
+            padded, (marks, requeued) = jax.lax.scan(process_tile, padded, ids)
         dirty = jnp.any(marks, axis=0)
-        # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones.
+        # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones
+        # (including unconverged self-marks — partial drains re-queue).
         active = (active & ~processed) | dirty
         stats = TileStats(
             stats.outer_rounds + 1,
             stats.tiles_processed + jnp.sum(ids >= 0),
-            stats.overflow_events + (n_active > n_slots).astype(jnp.int32))
+            stats.overflow_events + (n_active > n_slots).astype(jnp.int32),
+            stats.tiles_requeued + jnp.sum(requeued))
         return padded, active, stats
 
-    stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
     padded, _, stats = jax.lax.while_loop(outer_cond, outer_body, (padded, active0, stats0))
 
     # Strip padding back to the original domain.
     out = jax.tree_util.tree_map(
         lambda x: jax.lax.slice(x, (0,) * (x.ndim - 2) + (1, 1),
                                 x.shape[:-2] + (1 + H, 1 + W)), padded)
-    return out, stats
+    # Engine output contract: invalid cells hold their input values.
+    return (restore_invalid(op, state, out) if restore else out), stats

@@ -4,10 +4,16 @@
   upcast to int32 for the kernel and cast back (exactness preserved — the
   ops are min/max/compare).
 * `tile_solver_morph` / `tile_solver_edt` adapt the kernels to the tiled
-  engine's `tile_solver` interface (block pytree -> block pytree); the
-  `*_batched` variants adapt the grid-over-batch kernels to the engine's
-  `batched_tile_solver` interface (leaves carry a leading (K,) batch dim —
-  the paper's parallel queue drain, DESIGN.md §2).
+  engine's `tile_solver` interface (block pytree -> (block pytree,
+  unconverged)); the `*_batched` variants adapt the grid-over-batch kernels
+  to the engine's `batched_tile_solver` interface (leaves carry a leading
+  (K,) batch dim — the paper's parallel queue drain, DESIGN.md §2).
+* the adapters take the engine's iteration bound as ``max_iters`` (the
+  tiled engine passes its (T+2)² geodesic bound) and report
+  ``iters >= max_iters`` as the *unconverged* flag, so a drain cut off at
+  the bound is re-queued by the engine instead of silently accepted as a
+  fixed point.  The flag is conservative: a drain that stabilized exactly
+  at the bound re-queues once and converges immediately on the re-drain.
 * every directional raster pass is expressed through the single
   `raster_down` kernel via flips/transposes.
 """
@@ -23,6 +29,8 @@ from repro.kernels.edt_tile import edt_tile_solve, edt_tile_solve_batched
 from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_batched
 from repro.kernels.raster_scan import raster_down
 
+DEFAULT_MAX_ITERS = 1024
+
 
 def _up(x):
     if x.dtype in (jnp.uint8, jnp.int8, jnp.uint16, jnp.int16):
@@ -30,81 +38,92 @@ def _up(x):
     return x, None
 
 
-def morph_tile_pallas(J, I, valid, connectivity: int = 8, interpret: bool = True):
+def morph_tile_pallas(J, I, valid, connectivity: int = 8, interpret: bool = True,
+                      max_iters: int = DEFAULT_MAX_ITERS):
     Ju, orig = _up(J)
     Iu, _ = _up(I)
     out, iters = morph_tile_solve(Ju, Iu, valid, connectivity=connectivity,
-                                  interpret=interpret)
+                                  max_iters=max_iters, interpret=interpret)
     return (out.astype(orig) if orig is not None else out), iters
 
 
-def tile_solver_morph(connectivity: int = 8, interpret: bool = True):
+def tile_solver_morph(connectivity: int = 8, interpret: bool = True,
+                      max_iters: int = DEFAULT_MAX_ITERS):
     """Adapter: tiled-engine `tile_solver` backed by the Pallas kernel."""
     def solver(block):
         J, iters = morph_tile_pallas(block["J"], block["I"], block["valid"],
-                                     connectivity, interpret)
+                                     connectivity, interpret, max_iters)
         out = dict(block)
         out["J"] = J
-        return out
+        return out, iters >= max_iters
     return solver
 
 
 def morph_tile_pallas_batched(J, I, valid, connectivity: int = 8,
-                              interpret: bool = True):
+                              interpret: bool = True,
+                              max_iters: int = DEFAULT_MAX_ITERS):
     """(K, T+2, T+2) batch drain; returns (J_out, iters[K])."""
     Ju, orig = _up(J)
     Iu, _ = _up(I)
     out, iters = morph_tile_solve_batched(Ju, Iu, valid,
                                           connectivity=connectivity,
+                                          max_iters=max_iters,
                                           interpret=interpret)
     return (out.astype(orig) if orig is not None else out), iters
 
 
-def tile_solver_morph_batched(connectivity: int = 8, interpret: bool = True):
+def tile_solver_morph_batched(connectivity: int = 8, interpret: bool = True,
+                              max_iters: int = DEFAULT_MAX_ITERS):
     """Adapter: tiled-engine `batched_tile_solver` backed by the grid kernel."""
     def solver(blocks):
         J, iters = morph_tile_pallas_batched(blocks["J"], blocks["I"],
                                              blocks["valid"], connectivity,
-                                             interpret)
+                                             interpret, max_iters)
         out = dict(blocks)
         out["J"] = J
-        return out
+        return out, iters >= max_iters
     return solver
 
 
-def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True):
+def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True,
+                    max_iters: int = DEFAULT_MAX_ITERS):
     vr = state_block["vr"]
     o_r, o_c, iters = edt_tile_solve(
         vr[0], vr[1], state_block["valid"], state_block["row"], state_block["col"],
-        connectivity=connectivity, interpret=interpret)
+        connectivity=connectivity, max_iters=max_iters, interpret=interpret)
     out = dict(state_block)
     out["vr"] = jnp.stack([o_r, o_c])
     return out, iters
 
 
-def tile_solver_edt(connectivity: int = 8, interpret: bool = True):
+def tile_solver_edt(connectivity: int = 8, interpret: bool = True,
+                    max_iters: int = DEFAULT_MAX_ITERS):
     def solver(block):
-        out, _ = edt_tile_pallas(block, connectivity, interpret)
-        return out
+        out, iters = edt_tile_pallas(block, connectivity, interpret, max_iters)
+        return out, iters >= max_iters
     return solver
 
 
 def edt_tile_pallas_batched(state_blocks, connectivity: int = 8,
-                            interpret: bool = True):
+                            interpret: bool = True,
+                            max_iters: int = DEFAULT_MAX_ITERS):
     """Batched EDT drain over leaves with a leading (K,) batch dim."""
     vr = state_blocks["vr"]  # (K, 2, T+2, T+2)
     o_r, o_c, iters = edt_tile_solve_batched(
         vr[:, 0], vr[:, 1], state_blocks["valid"], state_blocks["row"],
-        state_blocks["col"], connectivity=connectivity, interpret=interpret)
+        state_blocks["col"], connectivity=connectivity, max_iters=max_iters,
+        interpret=interpret)
     out = dict(state_blocks)
     out["vr"] = jnp.stack([o_r, o_c], axis=1)
     return out, iters
 
 
-def tile_solver_edt_batched(connectivity: int = 8, interpret: bool = True):
+def tile_solver_edt_batched(connectivity: int = 8, interpret: bool = True,
+                            max_iters: int = DEFAULT_MAX_ITERS):
     def solver(blocks):
-        out, _ = edt_tile_pallas_batched(blocks, connectivity, interpret)
-        return out
+        out, iters = edt_tile_pallas_batched(blocks, connectivity, interpret,
+                                             max_iters)
+        return out, iters >= max_iters
     return solver
 
 

@@ -13,8 +13,8 @@ from repro.morph.ops import MorphReconstructOp
 def morph_tile_ref(J, I, valid, connectivity: int = 8):
     """Oracle for kernels.morph_tile: dense rounds to stability (interior)."""
     op = MorphReconstructOp(connectivity=connectivity)
-    blk = _tile_local_solve(op, {"J": J, "I": I, "valid": valid},
-                            max_iters=4 * max(J.shape))
+    blk, _ = _tile_local_solve(op, {"J": J, "I": I, "valid": valid},
+                               max_iters=4 * max(J.shape))
     return blk["J"]
 
 
@@ -22,7 +22,7 @@ def edt_tile_ref(vr_r, vr_c, valid, row, col, connectivity: int = 8):
     """Oracle for kernels.edt_tile."""
     op = EdtOp(connectivity=connectivity)
     state = {"vr": jnp.stack([vr_r, vr_c]), "valid": valid, "row": row, "col": col}
-    blk = _tile_local_solve(op, state, max_iters=4 * max(vr_r.shape))
+    blk, _ = _tile_local_solve(op, state, max_iters=4 * max(vr_r.shape))
     return blk["vr"][0], blk["vr"][1]
 
 

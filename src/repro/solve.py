@@ -6,15 +6,17 @@ density, grid size, and the devices available.  The repo implements the
 strategies as separate engines; this module is the seam that picks among
 them:
 
-  engine name     implementation                        paper analogue
-  -------------   -----------------------------------   -------------------
-  "sweep"         core.frontier.run_dense  (E0)         SR_GPU full sweeps
-  "frontier"      core.frontier.run_dense  (E1)         Naive/PF queue
-  "tiled"         core.tiles.run_tiled     (E2)         TQ/BQ/GBQ hierarchy
-  "tiled-pallas"  run_tiled + kernels.ops tile solver   BQ drain in VMEM
-  "shard_map"     core.distributed.run_sharded (E3)     §4 TP/BP multi-GPU
-  "scheduler"     core.scheduler.TileScheduler          §4 Fig. 8 host FCFS
-  "auto"          CostModel ranking (+ autotune)        §4 demand-driven map
+  engine name        implementation                        paper analogue
+  ----------------   -----------------------------------   -------------------
+  "sweep"            core.frontier.run_dense  (E0)         SR_GPU full sweeps
+  "frontier"         core.frontier.run_dense  (E1)         Naive/PF queue
+  "tiled"            core.tiles.run_tiled     (E2)         TQ/BQ/GBQ hierarchy
+  "tiled-pallas"     run_tiled + kernels.ops tile solver   BQ drain in VMEM
+  "shard_map"        core.distributed.run_sharded (E3)     §4 TP/BP multi-GPU
+  "shard_map-tiled"  run_sharded w/ per-shard run_tiled    §4 pipeline over
+                     TP drains (E3∘E2, DESIGN.md §2.2)     §3.2 queues
+  "scheduler"        core.scheduler.TileScheduler          §4 Fig. 8 host FCFS
+  "auto"             CostModel ranking (+ autotune)        §4 demand-driven map
 
 ``engine="auto"`` ranks candidate ``(engine, tile, queue_capacity)``
 configurations with a pluggable :class:`CostModel` — transfer cost plus
@@ -43,12 +45,12 @@ import numpy as np
 
 from repro.core.distributed import run_sharded
 from repro.core.frontier import run_dense
-from repro.core.pattern import PropagationOp, tree_shape
+from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
 from repro.core.scheduler import TileScheduler
 from repro.core.tiles import _tile_local_solve, initial_active_tiles, run_tiled
 
 ENGINES = ("sweep", "frontier", "tiled", "tiled-pallas", "shard_map",
-           "scheduler", "auto")
+           "shard_map-tiled", "scheduler", "auto")
 
 DEFAULT_TILES = (32, 64, 128)
 DEFAULT_QUEUE_CAPACITY = 64
@@ -87,6 +89,7 @@ class SolveStats:
     tiles_processed: int = 0       # tile drains (tiled/scheduler engines)
     overflow_events: int = 0       # rounds where active tiles > queue capacity
     requeues: int = 0              # scheduler fault-tolerance requeues
+    tiles_requeued: int = 0        # unconverged (partial) drains re-queued
     tile: Optional[int] = None
     queue_capacity: Optional[int] = None
     drain_batch: Optional[int] = None        # blocks drained per dispatch
@@ -99,10 +102,10 @@ class SolveStats:
 # Engine registries: per-op plug points for the non-generic engines.
 # ---------------------------------------------------------------------------
 
-# op class -> factory(op, interpret) -> tile_solver for run_tiled
+# op class -> factory(op, interpret, max_iters) -> tile_solver for run_tiled
 _PALLAS_SOLVERS: Dict[type, Callable] = {}
-# op class -> factory(op, interpret) -> batched_tile_solver for run_tiled
-# (grid-over-batch kernel; absent -> jax.vmap of the per-tile solver)
+# op class -> factory(op, interpret, max_iters) -> batched_tile_solver for
+# run_tiled (grid-over-batch kernel; absent -> jax.vmap of per-tile solver)
 _PALLAS_BATCH_SOLVERS: Dict[type, Callable] = {}
 # op class -> factory(op) -> merge_block_fn for TileScheduler (None = default
 # elementwise-max merge, valid for any single-plane monotone-max op)
@@ -111,11 +114,16 @@ _SCHEDULER_MERGES: Dict[type, Callable] = {}
 
 def register_pallas_solver(op_cls: type, factory: Callable,
                            batched_factory: Optional[Callable] = None) -> None:
-    """Register ``factory(op, interpret) -> tile_solver`` for an op class.
+    """Register ``factory(op, interpret, max_iters) -> tile_solver``.
 
-    ``batched_factory(op, interpret) -> batched_tile_solver`` (leaves carry a
-    leading (K,) batch dim) backs the batched drain; without one, the engine
-    falls back to ``jax.vmap`` of the per-tile solver.
+    ``max_iters`` is the engine's per-drain iteration bound ((T+2)² — the
+    longest geodesic inside one halo block); solvers must return
+    ``(block, unconverged)`` with ``unconverged`` True when the drain was
+    cut off at the bound, so the engine re-queues instead of silently
+    accepting a partial drain.  ``batched_factory(op, interpret, max_iters)
+    -> batched_tile_solver`` (leaves carry a leading (K,) batch dim) backs
+    the batched drain; without one, the engine falls back to ``jax.vmap``
+    of the per-tile solver.
     """
     _PALLAS_SOLVERS[op_cls] = factory
     if batched_factory is not None:
@@ -142,12 +150,16 @@ def _register_builtin_ops():
 
     register_pallas_solver(
         MorphReconstructOp,
-        lambda op, interpret: tile_solver_morph(op.connectivity, interpret),
-        lambda op, interpret: tile_solver_morph_batched(op.connectivity, interpret))
+        lambda op, interpret, max_iters:
+            tile_solver_morph(op.connectivity, interpret, max_iters),
+        lambda op, interpret, max_iters:
+            tile_solver_morph_batched(op.connectivity, interpret, max_iters))
     register_pallas_solver(
         EdtOp,
-        lambda op, interpret: tile_solver_edt(op.connectivity, interpret),
-        lambda op, interpret: tile_solver_edt_batched(op.connectivity, interpret))
+        lambda op, interpret, max_iters:
+            tile_solver_edt(op.connectivity, interpret, max_iters),
+        lambda op, interpret, max_iters:
+            tile_solver_edt_batched(op.connectivity, interpret, max_iters))
 
     # Morph: default elementwise max on "J" is the correct commutative merge.
     register_scheduler_merge(MorphReconstructOp, lambda op: None)
@@ -294,6 +306,17 @@ class CostModel:
             halo = 2 * (stats.height + stats.width)
             return (stats.depth_est * stats.area / stats.n_devices
                     + bp_rounds * halo)
+        if e == "shard_map-tiled":
+            # Composed hierarchy: transfer = the BP halo rings (same
+            # collective traffic as the flat shard_map) + only the *active*
+            # tile blocks each TP stage touches, split across devices —
+            # never the whole shard per round (the flat engine's
+            # depth*area/n term).
+            bp_rounds = self._bp_rounds(stats)
+            halo = 2 * (stats.height + stats.width)
+            block = (cfg.tile + 2) ** 2
+            drains = self._drains(stats, cfg.tile) / stats.n_devices
+            return drains * block + bp_rounds * halo
         raise ValueError(f"unknown engine {e!r}")
 
     def drain_cost(self, stats: InputStats, cfg: EngineConfig) -> float:
@@ -316,6 +339,17 @@ class CostModel:
                     * self.host_penalty + drains * self.host_dispatch)
         if e == "shard_map":
             return self._bp_rounds(stats) * self.collective_latency * stats.n_devices
+        if e == "shard_map-tiled":
+            # Per-shard amortized tile dispatch (the E2 drain cost at 1/n
+            # devices worth of drains each) + the same per-BP-round
+            # collective latency as the flat shard_map.
+            block = (cfg.tile + 2) ** 2
+            inner = block * cfg.tile * self.vmem_discount
+            drains = self._drains(stats, cfg.tile) / stats.n_devices
+            dispatch = self.tile_dispatch / max(1, cfg.drain_batch or 1)
+            return (drains * (inner + dispatch)
+                    + self._bp_rounds(stats) * self.collective_latency
+                    * stats.n_devices)
         raise ValueError(f"unknown engine {e!r}")
 
     def _bp_rounds(self, stats: InputStats) -> float:
@@ -337,6 +371,8 @@ class CostModel:
             out.append(EngineConfig("tiled", t, cap, db))
             out.append(EngineConfig("tiled-pallas", t, cap, db))
             out.append(EngineConfig("scheduler", t, cap))
+            if stats.n_devices > 1:
+                out.append(EngineConfig("shard_map-tiled", t, cap, db))
         if stats.n_devices > 1:
             out.append(EngineConfig("shard_map"))
         return out
@@ -460,14 +496,18 @@ def _run_dense_engine(op, state, cfg, max_rounds, **_):
                            sources_processed=int(st.sources_processed))
 
 
-# Memoized per (op identity, interpret, batched) so run_tiled's static
-# tile_solver arguments stay hash-stable across solve() calls (avoids
+# Memoized per (op identity, interpret, batched, max_iters) so run_tiled's
+# static tile_solver arguments stay hash-stable across solve() calls (avoids
 # recompiles).
 _SOLVER_MEMO: Dict[tuple, Callable] = {}
 
 
-def _pallas_solver_for(op, interpret: bool, batched: bool = False):
-    key = (type(op), op.connectivity, interpret, batched)
+def _pallas_solver_for(op, interpret: bool, batched: bool = False,
+                       max_iters: int = None):
+    from repro.kernels.ops import DEFAULT_MAX_ITERS
+    if max_iters is None:
+        max_iters = DEFAULT_MAX_ITERS
+    key = (type(op), op.connectivity, interpret, batched, max_iters)
     if key not in _SOLVER_MEMO:
         factory = _registry_lookup(
             _PALLAS_BATCH_SOLVERS if batched else _PALLAS_SOLVERS, op)
@@ -475,25 +515,37 @@ def _pallas_solver_for(op, interpret: bool, batched: bool = False):
             if batched:
                 # Fall back to vmapping the per-tile kernel; a dedicated
                 # grid-over-batch kernel is only an optimization.
-                _SOLVER_MEMO[key] = jax.vmap(_pallas_solver_for(op, interpret))
+                _SOLVER_MEMO[key] = jax.vmap(
+                    _pallas_solver_for(op, interpret, max_iters=max_iters))
                 return _SOLVER_MEMO[key]
             raise ValueError(
                 f"no Pallas tile solver registered for {type(op).__name__}; "
                 "use register_pallas_solver() or engine='tiled'")
-        _SOLVER_MEMO[key] = factory(op, interpret)
+        _SOLVER_MEMO[key] = factory(op, interpret, max_iters)
     return _SOLVER_MEMO[key]
 
 
-def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
-    solver = batched_solver = None
+def _tiled_cfg_defaults(cfg: EngineConfig) -> Tuple[int, int, int]:
+    """Resolve (tile, queue_capacity, drain_batch) for the queued engines."""
     tile = cfg.tile or DEFAULT_TILES[1]
     cap = cfg.queue_capacity or DEFAULT_QUEUE_CAPACITY
     drain_batch = (cfg.drain_batch if cfg.drain_batch is not None
                    else _default_drain_batch(tile))
+    return tile, cap, drain_batch
+
+
+def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
+    solver = batched_solver = None
+    tile, cap, drain_batch = _tiled_cfg_defaults(cfg)
     if cfg.engine == "tiled-pallas":
-        solver = _pallas_solver_for(op, interpret)
+        # Thread the engine's (T+2)² geodesic bound into the kernels: the
+        # kernel-default 1024 is *below* the bound for any tile >= 32, and a
+        # drain cut off there must re-queue, not masquerade as converged.
+        max_iters = (tile + 2) ** 2
+        solver = _pallas_solver_for(op, interpret, max_iters=max_iters)
         if drain_batch > 1:
-            batched_solver = _pallas_solver_for(op, interpret, batched=True)
+            batched_solver = _pallas_solver_for(op, interpret, batched=True,
+                                                max_iters=max_iters)
     out, st = run_tiled(op, state, tile=tile, queue_capacity=cap,
                         max_outer_rounds=max_rounds, tile_solver=solver,
                         drain_batch=drain_batch,
@@ -501,6 +553,7 @@ def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
     return out, SolveStats(cfg.engine, rounds=int(st.outer_rounds),
                            tiles_processed=int(st.tiles_processed),
                            overflow_events=int(st.overflow_events),
+                           tiles_requeued=int(st.tiles_requeued),
                            tile=tile, queue_capacity=cap,
                            drain_batch=drain_batch)
 
@@ -511,8 +564,20 @@ def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
     from jax.sharding import Mesh
     mesh = Mesh(np.asarray(devices).reshape(nr, nc), ("data", "model"))
     padded, (H, W) = _pad_to_multiple(op, state, nr, nc)
-    out, rounds = run_sharded(op, padded, mesh)
-    return _crop(out, H, W), SolveStats("shard_map", rounds=int(rounds),
+    if cfg.engine == "shard_map-tiled":
+        tile, cap, drain_batch = _tiled_cfg_defaults(cfg)
+        out, st = run_sharded(op, padded, mesh, tile=tile,
+                              queue_capacity=cap, drain_batch=drain_batch,
+                              max_bp_rounds=max_rounds)
+        return _crop(out, H, W), SolveStats(
+            cfg.engine, rounds=int(st.bp_rounds),
+            tiles_processed=int(st.tiles_processed),
+            overflow_events=int(st.overflow_events),
+            tiles_requeued=int(st.tiles_requeued),
+            tile=tile, queue_capacity=cap, drain_batch=drain_batch,
+            n_devices=len(devices))
+    out, st = run_sharded(op, padded, mesh, max_bp_rounds=max_rounds)
+    return _crop(out, H, W), SolveStats("shard_map", rounds=int(st.bp_rounds),
                                         n_devices=len(devices))
 
 
@@ -531,7 +596,8 @@ def _scheduler_drain_for(op, tile: int):
             # generous bound costs nothing in the common case.  Out-of-array
             # halo cells arrive already holding the op's neutral pad values
             # (TileScheduler pad_values), so no sanitize pass is needed.
-            return _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
+            out, _ = _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
+            return out
         _DRAIN_MEMO[key] = _drain
     return _DRAIN_MEMO[key]
 
@@ -559,7 +625,16 @@ def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
                           merge_block_fn=merge_block_fn,
                           pad_values=pad_values)
     st = sched.run()
+    if st.incomplete:
+        # Never hand back a partial drain as a solve() result (the scheduler
+        # already warned); autotune treats this as a failed candidate.
+        raise RuntimeError(
+            "scheduler engine gave up with tiles still queued "
+            f"(requeues_from_failures={st.requeues_from_failures}); "
+            "the state did not reach its fixed point")
     out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
+    # Engine output contract: invalid cells hold their input values.
+    out = restore_invalid(op, state, out)
     return out, SolveStats("scheduler", rounds=1,
                            tiles_processed=st.tiles_processed,
                            requeues=st.requeues_from_failures,
@@ -572,6 +647,7 @@ _ENGINE_RUNNERS = {
     "tiled": _run_tiled_engine,
     "tiled-pallas": _run_tiled_engine,
     "shard_map": _run_shard_map_engine,
+    "shard_map-tiled": _run_shard_map_engine,
     "scheduler": _run_scheduler_engine,
 }
 
@@ -602,8 +678,15 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
     ----------
     engine : one of :data:`ENGINES`.  ``"auto"`` ranks candidates with
         ``cost_model`` (default :class:`CostModel`) and runs the cheapest.
-    devices : device list for ``"shard_map"`` (default: ``jax.devices()``);
-        also sets the device count the cost model sees.
+        ``"shard_map-tiled"`` composes the mesh TP/BP pipeline with a
+        per-shard active-tile queue (the paper's full two-level hierarchy;
+        DESIGN.md §2.2) — ``tile``/``queue_capacity``/``drain_batch`` all
+        apply per shard.  It uses the plain per-tile drain; for
+        Pallas-backed TP drains call
+        :func:`repro.core.distributed.run_sharded` with ``tile_solver``.
+    devices : device list for ``"shard_map"`` / ``"shard_map-tiled"``
+        (default: ``jax.devices()``); also sets the device count the cost
+        model sees.
     tile, queue_capacity : override the tiled engines' blocking; under
         ``"auto"`` they restrict the candidate set instead.
     drain_batch : queue slots the tiled engines drain concurrently per
@@ -639,7 +722,8 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
                  if c.queue_capacity is not None else c for c in cands]
     if drain_batch is not None:
         cands = [dataclasses.replace(c, drain_batch=drain_batch)
-                 if c.engine in ("tiled", "tiled-pallas") else c for c in cands]
+                 if c.engine in ("tiled", "tiled-pallas", "shard_map-tiled")
+                 else c for c in cands]
 
     if autotune:
         cfg = _autotune(op, state, stats_in, model, cands,

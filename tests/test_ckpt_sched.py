@@ -2,6 +2,7 @@
 demand-driven host tile scheduler (FCFS balance + fault injection)."""
 
 import os
+import threading
 import time
 
 import jax
@@ -121,3 +122,62 @@ def test_scheduler_fault_injection():
     J, ref, stats = _sched_case(n_workers=3, fail_worker=1)
     np.testing.assert_array_equal(J, ref)
     assert stats.requeues_from_failures >= 1
+
+
+def test_scheduler_survivor_waves_rechecked():
+    """Regression: run() used to launch exactly ONE survivor pass after the
+    initial workers joined — if the survivors also died (each failure kills
+    its worker), run() returned with the queue non-empty and the state not
+    at its fixed point.  A tile_fn that fails its first 3 calls kills both
+    initial workers and the single survivor; only the re-check loop
+    finishes the job."""
+    marker, mask = tissue_image(64, 64, 0.7, seed=12)
+    ref = reconstruct_fh(marker, mask, 8)
+    op = MorphReconstructOp(connectivity=8)
+    state = {"J": np.minimum(marker, mask).astype(np.int32),
+             "I": mask.astype(np.int32),
+             "valid": np.ones(mask.shape, bool)}
+    T = 32
+    active = np.asarray(initial_active_tiles(
+        op, {k: jnp.asarray(v) for k, v in state.items()}, T))
+    fails = {"n": 3}
+    lock = threading.Lock()
+
+    def flaky_tile_fn(block):
+        with lock:
+            if fails["n"] > 0:
+                fails["n"] -= 1
+                raise RuntimeError("injected flaky failure")
+        out, _ = morph_tile_pallas(
+            jnp.asarray(block["J"]), jnp.asarray(block["I"]),
+            jnp.asarray(block["valid"]), connectivity=8, interpret=True)
+        nb = dict(block)
+        nb["J"] = np.asarray(out)
+        return nb, None
+
+    sched = TileScheduler(state, T, flaky_tile_fn, active, n_workers=2,
+                          mutable=("J",))
+    stats = sched.run()
+    assert sched._q.empty() and sched._inflight == 0
+    assert stats.requeues_from_failures == 3
+    assert not stats.incomplete
+    np.testing.assert_array_equal(state["J"], ref.astype(np.int32))
+
+
+def test_scheduler_deterministic_failure_is_not_silent():
+    """A tile_fn that fails forever must never be reported as a fixed
+    point: run() flags stats.incomplete and warns when it gives up."""
+    state = {"J": np.zeros((32, 32), np.int32),
+             "I": np.zeros((32, 32), np.int32),
+             "valid": np.ones((32, 32), bool)}
+
+    def always_fails(block):
+        raise RuntimeError("deterministic failure")
+
+    sched = TileScheduler(state, 32, always_fails, np.ones((1, 1), bool),
+                          n_workers=1, mutable=("J",))
+    sched.max_survivor_waves = 2
+    with pytest.warns(RuntimeWarning, match="NOT at its fixed point"):
+        stats = sched.run()
+    assert stats.incomplete
+    assert stats.tiles_processed == 0

@@ -36,10 +36,11 @@ def test_sharded_morph_matches_ref():
         op = MorphReconstructOp(connectivity=8)
         state = op.make_state(jnp.asarray(marker.astype(np.int32)),
                               jnp.asarray(mask.astype(np.int32)))
-        out, rounds = run_sharded(op, state, mesh)
+        out, stats = run_sharded(op, state, mesh)
         np.testing.assert_array_equal(np.asarray(out["J"]), ref.astype(np.int32))
-        assert int(rounds) >= 1
-        print("OK rounds=", int(rounds))
+        assert int(stats.bp_rounds) >= 1
+        assert int(stats.tiles_processed) == 0   # dense TP drain: no tile queue
+        print("OK rounds=", int(stats.bp_rounds))
     """)
 
 
@@ -54,8 +55,165 @@ def test_sharded_edt_matches_ref():
         fg = binary_blobs(64, 64, 0.5, seed=1)
         ref_M, _ = edt_wavefront(fg, 8)
         op = EdtOp(connectivity=8)
-        out, _ = run_sharded(op, op.make_state(jnp.asarray(fg)), mesh)
+        out, stats = run_sharded(op, op.make_state(jnp.asarray(fg)), mesh)
         np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+        assert int(stats.bp_rounds) >= 1
+        print("OK")
+    """)
+
+
+def test_composed_shard_map_tiled_matches_ref_across_meshes():
+    """The paper's full two-level hierarchy: per-shard active-tile queues
+    (E2) inside the mesh TP/BP pipeline (E3).  Bit-exact with the FH
+    reference (morph) / distance-exact (EDT) on 1x1, 2x2 and 1x8 meshes,
+    with the BP rounds re-seeding only halo-improved tiles."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import run_sharded
+        from repro.data.images import binary_blobs, tissue_image, seeded_marker
+        from repro.edt.ops import EdtOp, distance_map
+        from repro.edt.ref import edt_wavefront
+        from repro.morph.ops import MorphReconstructOp
+        from repro.morph.ref import reconstruct_fh
+        marker, mask = tissue_image(48, 64, 0.7, seed=0)
+        marker = seeded_marker(mask, n_seeds=4, seed=0)
+        ref = reconstruct_fh(marker.copy(), mask, 8).astype(np.int32)
+        mop = MorphReconstructOp(connectivity=8)
+        mstate = mop.make_state(jnp.asarray(marker.astype(np.int32)),
+                                jnp.asarray(mask.astype(np.int32)))
+        fg = binary_blobs(48, 64, 0.5, seed=1)
+        ref_M, _ = edt_wavefront(fg, 8)
+        eop = EdtOp(connectivity=8)
+        estate = eop.make_state(jnp.asarray(fg))
+        for shape in ((1, 1), (2, 2), (1, 8)):
+            mesh = jax.make_mesh(shape, ("data", "model"))
+            out, st = run_sharded(mop, mstate, mesh, tile=16,
+                                  queue_capacity=8, drain_batch=2)
+            np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+            assert int(st.tiles_processed) > 0
+            assert np.asarray(st.per_device_tiles).shape == shape
+            out, st = run_sharded(eop, estate, mesh, tile=16, queue_capacity=8)
+            np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+            print("OK", shape, int(st.bp_rounds), int(st.tiles_processed))
+    """)
+
+
+def test_composed_engine_pallas_backed_drain():
+    """run_sharded's TP drain accepts the Pallas kernel solvers (with the
+    threaded (T+2)^2 bound) — the VMEM drain inside the mesh pipeline."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import run_sharded
+        from repro.data.images import tissue_image, seeded_marker
+        from repro.kernels.ops import tile_solver_morph, tile_solver_morph_batched
+        from repro.morph.ops import MorphReconstructOp
+        from repro.morph.ref import reconstruct_fh
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        marker, mask = tissue_image(48, 48, 0.7, seed=2)
+        marker = seeded_marker(mask, n_seeds=4, seed=2)
+        ref = reconstruct_fh(marker.copy(), mask, 8).astype(np.int32)
+        op = MorphReconstructOp(connectivity=8)
+        state = op.make_state(jnp.asarray(marker.astype(np.int32)),
+                              jnp.asarray(mask.astype(np.int32)))
+        out, st = run_sharded(
+            op, state, mesh, tile=16, queue_capacity=8, drain_batch=2,
+            tile_solver=tile_solver_morph(8, True, 18 ** 2),
+            batched_tile_solver=tile_solver_morph_batched(8, True, 18 ** 2))
+        np.testing.assert_array_equal(np.asarray(out["J"]), ref)
+        print("OK tiles=", int(st.tiles_processed))
+    """, devices=4)
+
+
+def test_composed_engine_solve_nondivisible_and_masked():
+    """solve(engine="shard_map-tiled") end-to-end: a grid no mesh divides
+    (exercising _pad_to_multiple) under a non-rectangular valid mask, on 8
+    devices — full-array comparable with the E1 reference (the invalid-
+    pixel contract)."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.frontier import run_dense
+        from repro.data.images import bg_disks
+        from repro.edt.ops import EdtOp, distance_map
+        from repro.solve import solve
+        H, W = 37, 51
+        yy, xx = np.mgrid[:H, :W]
+        valid = ((yy - H / 2) ** 2 + (xx - W / 2) ** 2) < (0.45 * max(H, W)) ** 2
+        fg = bg_disks(H, W, coverage=0.9, n_disks=2, seed=4)
+        op = EdtOp(connectivity=8)
+        state = op.make_state(jnp.asarray(fg), jnp.asarray(valid))
+        ref_out, _ = run_dense(op, state, "frontier")
+        out, stats = solve(op, state, engine="shard_map-tiled", tile=16,
+                           queue_capacity=8)
+        assert stats.engine == "shard_map-tiled" and stats.n_devices == 8
+        assert stats.tiles_processed > 0
+        np.testing.assert_array_equal(np.asarray(distance_map(out)),
+                                      np.asarray(distance_map(ref_out)))
+        # invalid cells hold their input values (contract)
+        np.testing.assert_array_equal(np.asarray(out["vr"])[:, ~valid],
+                                      np.asarray(state["vr"])[:, ~valid])
+        print("OK")
+    """)
+
+
+def test_invalid_band_at_shard_border_cannot_source():
+    """Regression: the BP halo round used to seed the WHOLE exchanged ring
+    as frontier — a poisoned invalid band sitting exactly on a shard
+    boundary was handed to the neighbor device's halo, marked as a source,
+    and corrupted its valid region.  The seed is now masked by valid."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import run_sharded
+        from repro.core.frontier import run_dense
+        from repro.morph.ops import MorphReconstructOp
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        H, W = 16, 32
+        valid = np.ones((H, W), bool)
+        valid[:, 15:17] = False          # invalid band straddling the border
+        mask = np.where(valid, 100, 255).astype(np.int32)
+        marker = np.zeros((H, W), np.int32)
+        marker[0, 0] = 50
+        marker = np.where(valid, marker, 255)   # poisoned to the max
+        op = MorphReconstructOp(connectivity=8)
+        state = op.make_state(jnp.asarray(marker), jnp.asarray(mask),
+                              jnp.asarray(valid))
+        ref, _ = run_dense(op, state, "frontier")
+        for kw in ({}, dict(tile=8, queue_capacity=8)):
+            out, _ = run_sharded(op, state, mesh, **kw)
+            np.testing.assert_array_equal(np.asarray(out["J"]),
+                                          np.asarray(ref["J"]))
+        print("OK")
+    """, devices=2)
+
+
+def test_per_device_tile_counters_psum_to_stats():
+    """Hypothesis property: the per-device drain counters (out_spec sharded
+    over the mesh) always sum to the psum'd tiles_processed total in the
+    stats record, and the composed output matches the E1 reference."""
+    pytest.importorskip("hypothesis", reason="install via requirements-dev.txt")
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from hypothesis import given, settings, strategies as st
+        from repro.core.distributed import run_sharded
+        from repro.core.frontier import run_dense
+        from repro.morph.ops import MorphReconstructOp
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        op = MorphReconstructOp(connectivity=8)
+        @given(st.integers(0, 2**31 - 1))
+        @settings(max_examples=5, deadline=None)
+        def prop(seed):
+            rng = np.random.default_rng(seed)
+            mask = rng.integers(0, 256, (32, 32)).astype(np.int32)
+            marker = np.minimum(
+                rng.integers(0, 256, (32, 32)).astype(np.int32), mask)
+            state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+            out, stc = run_sharded(op, state, mesh, tile=8, queue_capacity=8)
+            per_dev = np.asarray(stc.per_device_tiles)
+            assert per_dev.shape == (2, 4)
+            assert int(per_dev.sum()) == int(stc.tiles_processed)
+            ref, _ = run_dense(op, state, "frontier")
+            np.testing.assert_array_equal(np.asarray(out["J"]),
+                                          np.asarray(ref["J"]))
+        prop()
         print("OK")
     """)
 

@@ -80,6 +80,41 @@ def test_masked_edt_every_engine(edt_masked_case, engine):
     np.testing.assert_array_equal(got, ref)
 
 
+# ---------------------------------------------------------------------------
+# Invalid-pixel output contract: engine outputs are bit-comparable over the
+# WHOLE array, not just the valid region.  Historically the dense rounds
+# could grow an invalid *receiver* one step toward the mask while the Pallas
+# writeback pinned invalid interiors to dtype-min/sentinel — three different
+# leftovers for the same input.  The contract (enforced by every engine via
+# `pattern.restore_invalid`): invalid cells hold their INPUT values.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", MASK_ENGINES)
+def test_invalid_pixel_contract_morph(morph_masked_case, engine):
+    op, state, valid, _ = morph_masked_case
+    ref_out, _ = run_dense(op, state, "frontier")
+    out, _ = solve(op, state, engine=engine, **ENGINE_KW)
+    # invalid cells hold the (poisoned) input values, bit-for-bit...
+    np.testing.assert_array_equal(np.asarray(out["J"])[~valid],
+                                  np.asarray(state["J"])[~valid])
+    # ...so the full array equals the E1 reference output, no masking needed
+    np.testing.assert_array_equal(np.asarray(out["J"]),
+                                  np.asarray(ref_out["J"]))
+
+
+@pytest.mark.parametrize("engine", MASK_ENGINES)
+def test_invalid_pixel_contract_edt(edt_masked_case, engine):
+    op, state, valid, _ = edt_masked_case
+    ref_out, _ = run_dense(op, state, "frontier")
+    out, _ = solve(op, state, engine=engine, **ENGINE_KW)
+    np.testing.assert_array_equal(np.asarray(out["vr"])[:, ~valid],
+                                  np.asarray(state["vr"])[:, ~valid])
+    # distances are unique at the fixed point (pointers may tie-break
+    # differently), so the distance map is the full-array comparison
+    np.testing.assert_array_equal(np.asarray(distance_map(out)),
+                                  np.asarray(distance_map(ref_out)))
+
+
 def test_morph_kernel_invalid_pixels_cannot_source():
     """Direct kernel regression: an invalid pixel holding the dtype max must
     not dilate into its valid neighbors (the kernel used to ignore valid)."""

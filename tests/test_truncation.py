@@ -1,0 +1,138 @@
+"""Regression: silent partial-drain truncation (the ISSUE 3 bugfix).
+
+`run_tiled` justifies dequeuing a tile by its (T+2)² geodesic bound — the
+longest propagation path inside one halo block.  But the `tiled-pallas`
+adapters used the kernels' default ``max_iters=1024``, which is *below*
+that bound for any tile >= 32, and the kernels' ``iters`` output (the one
+signal that would reveal the cutoff) was dropped.  A serpentine-corridor
+mask whose internal geodesic exceeds 1024 therefore came back unconverged,
+was dequeued without a self-requeue, and the engine reported a wrong fixed
+point with no error.
+
+Two halves of the fix, each pinned here:
+  * the engine's (T+2)² bound is threaded into the kernels
+    (`solve._pallas_solver_for` -> `kernels.ops.tile_solver_*(max_iters)`);
+  * solvers report ``iters >= max_iters`` as an ``unconverged`` flag and
+    `run_tiled` self-requeues the tile, so even an artificially starved
+    bound converges to the exact fixed point (just in more drains).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.frontier import run_dense
+from repro.core.tiles import _tile_local_solve, run_tiled
+from repro.data.images import binary_blobs
+from repro.edt.ops import EdtOp, distance_map
+from repro.edt.ref import edt_wavefront
+from repro.kernels.morph_tile import morph_tile_solve
+from repro.kernels.ops import (tile_solver_edt, tile_solver_morph,
+                               tile_solver_morph_batched)
+from repro.morph.ops import MorphReconstructOp
+from repro.solve import solve
+
+LEVEL = 100
+
+
+def serpentine_case(n: int):
+    """A 1-px serpentine corridor with 1-px walls: corridor rows connected
+    alternately at the right/left ends.  The geodesic from the seed at
+    (0, 0) to the corridor's far end is ~n²/2 pixels — for n=64 that is
+    ~2100, past the kernels' old 1024 default but inside (T+2)² = 4356."""
+    corridor = np.zeros((n, n), bool)
+    corridor[0::2, :] = True
+    for i, r in enumerate(range(1, n - 1, 2)):
+        corridor[r, (n - 1) if i % 2 == 0 else 0] = True
+    mask = np.where(corridor, LEVEL, 0).astype(np.int32)
+    marker = np.zeros((n, n), np.int32)
+    marker[0, 0] = LEVEL
+    # Reconstruction-by-dilation fixed point in closed form: the marker
+    # floods the whole connected corridor; walls stay clamped at I=0.
+    expected = np.where(corridor, LEVEL, 0).astype(np.int32)
+    return marker, mask, expected
+
+
+def _as_block(marker, mask):
+    """(T, T) image -> (T+2, T+2) halo block with neutral halo ring."""
+    neut = np.iinfo(np.int32).min
+    J = jnp.asarray(np.pad(np.minimum(marker, mask), 1, constant_values=neut))
+    I = jnp.asarray(np.pad(mask, 1, constant_values=neut))
+    valid = jnp.asarray(np.pad(np.ones(mask.shape, bool), 1))
+    return J, I, valid
+
+
+def test_kernel_default_bound_truncates_serpentine():
+    """The pre-fix behavior, pinned: at the kernel-default max_iters=1024
+    the drain is cut off (iters == 1024) and the result is NOT the fixed
+    point; at the engine's (T+2)² bound it converges exactly."""
+    marker, mask, expected = serpentine_case(64)
+    J, I, valid = _as_block(marker, mask)
+    inner = (slice(1, -1), slice(1, -1))
+
+    out, iters = morph_tile_solve(J, I, valid, connectivity=8,
+                                  max_iters=1024, interpret=True)
+    assert int(iters) == 1024                      # cut off at the bound...
+    truncated = np.asarray(out)[inner]
+    assert (truncated != expected).any()           # ...and visibly partial
+
+    out, iters = morph_tile_solve(J, I, valid, connectivity=8,
+                                  max_iters=66 ** 2, interpret=True)
+    assert int(iters) < 66 ** 2                    # genuine convergence
+    np.testing.assert_array_equal(np.asarray(out)[inner], expected)
+
+
+def test_tiled_pallas_serpentine_matches_ref():
+    """The engine-level regression (failed before the fix): one tile=64
+    drain over the serpentine, dispatched through solve()."""
+    marker, mask, expected = serpentine_case(64)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+    ref, _ = run_dense(op, state, "frontier")
+    np.testing.assert_array_equal(np.asarray(ref["J"]), expected)  # sanity
+    out, stats = solve(op, state, engine="tiled-pallas", tile=64,
+                       queue_capacity=4)
+    np.testing.assert_array_equal(np.asarray(out["J"]), expected)
+
+
+@pytest.mark.parametrize("drain_batch", [1, 2])
+def test_starved_pallas_bound_requeues_until_exact(drain_batch):
+    """An artificially low max_iters must only cost extra drains, never
+    correctness: the unconverged flag self-requeues the tile."""
+    marker, mask, expected = serpentine_case(32)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+    out, stats = run_tiled(
+        op, state, tile=32, queue_capacity=4, drain_batch=drain_batch,
+        tile_solver=tile_solver_morph(8, interpret=True, max_iters=64),
+        batched_tile_solver=(tile_solver_morph_batched(8, interpret=True,
+                                                       max_iters=64)
+                             if drain_batch > 1 else None))
+    np.testing.assert_array_equal(np.asarray(out["J"]), expected)
+    assert int(stats.tiles_requeued) > 0           # the requeue path fired
+
+
+def test_starved_plain_solver_requeues_until_exact():
+    """Same property for the plain (non-Pallas) tile solver."""
+    marker, mask, expected = serpentine_case(32)
+    op = MorphReconstructOp(connectivity=8)
+    state = op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+    out, stats = run_tiled(
+        op, state, tile=32, queue_capacity=4,
+        tile_solver=lambda blk: _tile_local_solve(op, blk, max_iters=16))
+    np.testing.assert_array_equal(np.asarray(out["J"]), expected)
+    assert int(stats.tiles_requeued) > 0
+
+
+def test_starved_edt_bound_requeues_until_exact():
+    """EDT: Voronoi pointers crawl one neighbor per iteration, so a starved
+    bound truncates long-range pointer propagation the same way."""
+    fg = binary_blobs(48, 48, 0.97, seed=7)       # sparse background: long waves
+    ref_M, _ = edt_wavefront(fg, 8)
+    op = EdtOp(connectivity=8)
+    state = op.make_state(jnp.asarray(fg))
+    out, stats = run_tiled(
+        op, state, tile=16, queue_capacity=16,
+        tile_solver=tile_solver_edt(8, interpret=True, max_iters=2))
+    np.testing.assert_array_equal(np.asarray(distance_map(out)), ref_M)
+    assert int(stats.tiles_requeued) > 0
