@@ -1,0 +1,99 @@
+"""Paper §4 / Fig. 8: cooperative CPU+device execution vs the solo engines.
+
+The paper's title result is that CPUs and GPUs *cooperatively* consuming one
+demand-driven tile queue beat either processor class alone.  This benchmark
+reproduces that comparison with the `hybrid` engine (DESIGN.md §2.3): for
+each (workload, tile, drain_batch) config it times, back to back in one
+process,
+
+  * ``solo_host``   — engine="scheduler" (host FCFS threads only),
+  * ``solo_device`` — engine="tiled" (the jitted active-tile queue only),
+  * ``coop``        — engine="hybrid" (host threads + a device drain stream
+                      on the same queue, ChunkPolicy-sized claims),
+
+on 1024² sparse-seed inputs (seeded morph markers; concentrated-background
+EDT — the paper's long-propagation regimes).  Each coop row derives
+``speedup_vs_best_solo`` = best-solo seconds / coop seconds (>= 1.0 means
+the cooperative pool won that config).
+
+``--json [PATH]`` writes the records to ``BENCH_hybrid.json`` (schema in
+EXPERIMENTS.md §BENCH JSON schema); ``--smoke`` shrinks to the CI profile
+(one small config, single timed iteration).  CPU-host caveat: see
+EXPERIMENTS.md — both "classes" here run on the same socket, so the
+reproducible claim is the cooperative overhead/split, not GPU magnitudes.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (bench_argparser, edt_state, morph_state,
+                               record, timeit, write_json)
+from repro.solve import solve
+
+DEFAULT_JSON = "BENCH_hybrid.json"
+
+
+def _workload(kind: str, size: int):
+    if kind == "morph":
+        return morph_state(size, coverage=1.0, seed=0, n_sweeps=0,
+                           marker_kind="seeded")
+    return edt_state(size, coverage=0.9, seed=0)
+
+
+def coop_vs_solo(records: list, kind: str, size: int, tile: int,
+                 drain_batch: int = 1, n_workers: int = 1, iters: int = 3):
+    """One cooperative-vs-solo config; all three engines timed in-process
+    so the comparison is noise-paired."""
+    op, state = _workload(kind, size)
+    base = f"coop/{kind}/size={size}/tile={tile}"
+
+    t_host = timeit(lambda: solve(op, state, engine="scheduler", tile=tile,
+                                  n_workers=n_workers + 1)[0], iters=iters)
+    _, s_host = solve(op, state, engine="scheduler", tile=tile,
+                      n_workers=n_workers + 1)
+    record(records, f"{base}/solo_host", t_host,
+           engine="scheduler", n_workers=n_workers + 1,
+           tiles=s_host.tiles_processed)
+
+    t_dev = timeit(lambda: solve(op, state, engine="tiled", tile=tile,
+                                 queue_capacity=64,
+                                 drain_batch=drain_batch)[0], iters=iters)
+    _, s_dev = solve(op, state, engine="tiled", tile=tile, queue_capacity=64,
+                     drain_batch=drain_batch)
+    record(records, f"{base}/solo_device", t_dev,
+           engine="tiled", drain_batch=drain_batch,
+           tiles=s_dev.tiles_processed, rounds=s_dev.rounds)
+
+    kw = dict(tile=tile, drain_batch=drain_batch, n_workers=n_workers,
+              n_device_workers=1)
+    t_coop = timeit(lambda: solve(op, state, engine="hybrid", **kw)[0],
+                    iters=iters)
+    _, s_coop = solve(op, state, engine="hybrid", **kw)
+    best_solo = min(t_host, t_dev)
+    record(records, f"{base}/coop", t_coop,
+           engine="hybrid", n_workers=n_workers, n_device_workers=1,
+           drain_batch=drain_batch, tiles=s_coop.tiles_processed,
+           rounds=s_coop.rounds, requeued=s_coop.tiles_requeued,
+           speedup_vs_host=round(t_host / t_coop, 2),
+           speedup_vs_device=round(t_dev / t_coop, 2),
+           speedup_vs_best_solo=round(best_solo / t_coop, 2))
+
+
+def main(size: int = 1024, json_path: str | None = None, smoke: bool = False):
+    records: list = []
+    if smoke:
+        # CI profile: one small config, single timed iteration.
+        coop_vs_solo(records, "morph", min(size, 256), tile=64, iters=1)
+    else:
+        for kind, tile in (("morph", 128), ("morph", 256),
+                           ("edt", 128), ("edt", 256)):
+            coop_vs_solo(records, kind, size, tile=tile)
+    write_json(records, json_path)
+    return records
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(
+        DEFAULT_JSON, size=1024,
+        smoke_help="CI profile: one 256² config, single timed iteration")
+    a = ap.parse_args()
+    main(a.size, json_path=a.json, smoke=a.smoke)

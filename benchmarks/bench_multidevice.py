@@ -25,8 +25,6 @@ columns (BP rounds, tiles drained vs whole-shard redrains).
 
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import subprocess
 import sys
@@ -34,7 +32,7 @@ import textwrap
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_argparser, record, write_json
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = "BENCH_multidevice.json"
@@ -81,11 +79,6 @@ def _run_child(ndev, mesh_shape, size, sparse=False, tiled=False, tile=32,
     return float(t), int(rounds), int(tiles), int(ovf)
 
 
-def _record(records, name, seconds, **derived):
-    emit(name, seconds, ";".join(f"{k}={v}" for k, v in derived.items()))
-    records.append({"name": name, "seconds": seconds, **derived})
-
-
 def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4)):
     """Fig 10 analogue: host tile scheduler, 1..N workers."""
     from repro.core.scheduler import TileScheduler
@@ -128,7 +121,7 @@ def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4)):
         TileScheduler(state, T, tile_fn, active, n_workers=workers).run()
         t = time.perf_counter() - t0
         base = base or t
-        _record(records, f"fig10/scheduler/workers={workers}", t,
+        record(records, f"fig10/scheduler/workers={workers}", t,
                 speedup=round(base / t, 2))
 
 
@@ -143,7 +136,7 @@ def mesh_scaling(size: int, records: list, meshes, iters=3):
         t, rounds, _, _ = _run_child(ndev, mesh_shape, size, iters=iters)
         base = base or t
         flat_dense[ndev] = (t, rounds)
-        _record(records, f"fig15/mesh/devices={ndev}", t,
+        record(records, f"fig15/mesh/devices={ndev}", t,
                 speedup=round(base / t, 2), bp_rounds=rounds)
     return flat_dense
 
@@ -166,13 +159,13 @@ def composition_comparison(size: int, records: list, meshes, tile=32,
             else:
                 t_flat, rounds_f, _, _ = _run_child(
                     ndev, mesh_shape, size, sparse=sparse, iters=iters)
-            _record(records,
+            record(records,
                     f"compose/{kind}/devices={ndev}/shard_map", t_flat,
                     bp_rounds=rounds_f)
             t_tiled, rounds_t, tiles, ovf = _run_child(
                 ndev, mesh_shape, size, sparse=sparse, tiled=True, tile=tile,
                 iters=iters)
-            _record(records,
+            record(records,
                     f"compose/{kind}/devices={ndev}/shard_map-tiled", t_tiled,
                     bp_rounds=rounds_t, tiles=tiles, overflows=ovf,
                     speedup_vs_flat=round(t_flat / t_tiled, 2))
@@ -193,20 +186,13 @@ def main(size: int = 512, json_path: str | None = None, smoke: bool = False):
         scheduler_scaling(size, records)
         flat = mesh_scaling(size, records, meshes)
         composition_comparison(size, records, meshes, flat_dense=flat)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(records, f, indent=2)
-        print(f"# wrote {len(records)} records to {json_path}", flush=True)
+    write_json(records, json_path)
     return records
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--size", type=int, default=512)
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI profile: small grid, 1+8 device meshes, 1 iter")
-    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
-                    metavar="PATH",
-                    help=f"write records as JSON (default path {DEFAULT_JSON})")
+    ap = bench_argparser(
+        DEFAULT_JSON,
+        smoke_help="CI profile: small grid, 1+8 device meshes, 1 iter")
     a = ap.parse_args()
     main(a.size, json_path=a.json, smoke=a.smoke)

@@ -31,21 +31,13 @@ the batch (K >= 4).
 
 from __future__ import annotations
 
-import argparse
-import json
-
 import jax.numpy as jnp
 
-from benchmarks.common import emit, morph_state, timeit
+from benchmarks.common import bench_argparser, morph_state, record, timeit, write_json
 from repro.core.tiles import initial_active_tiles
 from repro.solve import solve
 
 DEFAULT_JSON = "BENCH_tiled.json"
-
-
-def _record(records, name, seconds, **derived):
-    emit(name, seconds, ";".join(f"{k}={v}" for k, v in derived.items()))
-    records.append({"name": name, "seconds": seconds, **derived})
 
 
 def table1(size: int, records: list):
@@ -59,15 +51,15 @@ def table1(size: int, records: list):
         t2 = timeit(lambda: solve(op, state, engine="tiled",
                                   tile=128, queue_capacity=64)[0])
         _, s2 = solve(op, state, engine="tiled", tile=128, queue_capacity=64)
-        _record(records, f"table1/sweeps={n_sweeps}/E0_sweep", t0,
+        record(records, f"table1/sweeps={n_sweeps}/E0_sweep", t0,
                 init_q=init_q, total_q=total)
-        _record(records, f"table1/sweeps={n_sweeps}/E1_frontier", t1,
+        record(records, f"table1/sweeps={n_sweeps}/E1_frontier", t1,
                 rounds=st.rounds, speedup_vs_E0=round(t0 / t1, 2))
-        _record(records, f"table1/sweeps={n_sweeps}/E2_tiled", t2,
+        record(records, f"table1/sweeps={n_sweeps}/E2_tiled", t2,
                 drains=s2.tiles_processed, overflows=s2.overflow_events,
                 speedup_vs_E0=round(t0 / t2, 2), vs_E1=round(t1 / t2, 2))
         _, sa = solve(op, state, engine="auto")
-        _record(records, f"table1/sweeps={n_sweeps}/auto", 0.0,
+        record(records, f"table1/sweeps={n_sweeps}/auto", 0.0,
                 picked=sa.engine, tile=sa.tile,
                 predicted_cost=round(sa.predicted_cost))
 
@@ -89,7 +81,7 @@ def drain_comparison(size: int, records: list, tile: int = 32,
     _, s_seq = solve(op, state, engine="tiled", tile=tile,
                      queue_capacity=queue_capacity, drain_batch=1)
     occupancy = s_seq.tiles_processed / max(s_seq.rounds, 1)
-    _record(records, f"drain/size={size}/tile={tile}/sequential", t_seq,
+    record(records, f"drain/size={size}/tile={tile}/sequential", t_seq,
             drain_batch=1, rounds=s_seq.rounds, drains=s_seq.tiles_processed,
             active0=active0, occupancy=round(occupancy, 1))
     for db in (4, 8, 16):
@@ -98,7 +90,7 @@ def drain_comparison(size: int, records: list, tile: int = 32,
                                    drain_batch=db)[0])
         _, s_b = solve(op, state, engine="tiled", tile=tile,
                        queue_capacity=queue_capacity, drain_batch=db)
-        _record(records, f"drain/size={size}/tile={tile}/batched", t_b,
+        record(records, f"drain/size={size}/tile={tile}/batched", t_b,
                 drain_batch=db, rounds=s_b.rounds, drains=s_b.tiles_processed,
                 occupancy=round(s_b.tiles_processed / max(s_b.rounds, 1), 1),
                 speedup_vs_seq=round(t_seq / t_b, 2))
@@ -110,21 +102,14 @@ def main(size: int = 512, json_path: str | None = None,
     table1(size, records)
     drain_comparison(drain_size if drain_size is not None else max(size, 1024),
                      records)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(records, f, indent=2)
-        print(f"# wrote {len(records)} records to {json_path}", flush=True)
+    write_json(records, json_path)
     return records
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--size", type=int, default=512)
+    ap = bench_argparser(DEFAULT_JSON)
     ap.add_argument("--drain-size", type=int, default=None,
                     help="grid side for the drain comparison (default: "
                          "max(size, 1024))")
-    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
-                    metavar="PATH",
-                    help=f"write records as JSON (default path {DEFAULT_JSON})")
     a = ap.parse_args()
     main(a.size, json_path=a.json, drain_size=a.drain_size)

@@ -1,9 +1,13 @@
-"""Shared benchmark helpers: timing, CSV emission, workload builders."""
+"""Shared benchmark helpers: timing, CSV emission, the ``--json``/``--smoke``
+record plumbing (one JSON schema for every ``BENCH_*.json`` — see
+EXPERIMENTS.md §BENCH JSON schema), and workload builders."""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +32,41 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.0f},{derived}", flush=True)
+
+
+def record(records: list, name: str, seconds: float, **derived):
+    """Emit one CSV row and append the matching JSON record.
+
+    This is the single writer behind every ``BENCH_*.json`` row:
+    ``{"name": ..., "seconds": ..., <derived fields>}`` — keep the schema in
+    sync with EXPERIMENTS.md §BENCH JSON schema.
+    """
+    emit(name, seconds, ";".join(f"{k}={v}" for k, v in derived.items()))
+    records.append({"name": name, "seconds": seconds, **derived})
+
+
+def write_json(records: list, json_path: Optional[str]):
+    """Write the collected records if ``--json`` was requested (no-op else)."""
+    if not json_path:
+        return
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"# wrote {len(records)} records to {json_path}", flush=True)
+
+
+def bench_argparser(default_json: str, *, size: int = 512,
+                    smoke_help: Optional[str] = None) -> argparse.ArgumentParser:
+    """The shared benchmark CLI: ``--size``, ``--json [PATH]`` and (when
+    ``smoke_help`` is given) the ``--smoke`` CI profile flag.  Callers add
+    their bench-specific arguments on the returned parser."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=size)
+    ap.add_argument("--json", nargs="?", const=default_json, default=None,
+                    metavar="PATH",
+                    help=f"write records as JSON (default path {default_json})")
+    if smoke_help is not None:
+        ap.add_argument("--smoke", action="store_true", help=smoke_help)
+    return ap
 
 
 def morph_state(size: int, coverage: float, seed: int = 0, n_sweeps: int = 0,

@@ -6,7 +6,8 @@ Builds a synthetic tissue image, runs morphological reconstruction and the
 euclidean distance transform through the unified ``solve()`` dispatcher —
 named engines plus cost-model ``engine="auto"`` — and checks every result
 against the paper's sequential algorithms.  README.md has the engine
-matrix; DESIGN.md §4 the dispatch architecture.
+matrix, docs/ENGINES.md the per-engine reference; DESIGN.md §4 the
+dispatch architecture.
 """
 
 import jax.numpy as jnp
@@ -33,7 +34,12 @@ def main():
     for engine, kw in [("frontier", {}),
                        ("tiled", dict(tile=64, queue_capacity=16)),
                        ("tiled-pallas", dict(tile=64, queue_capacity=16)),
-                       ("scheduler", dict(tile=64, n_workers=2))]:
+                       ("scheduler", dict(tile=64, n_workers=2)),
+                       # the paper's cooperative CPU+device pool: host
+                       # threads + a batched device drain stream on ONE
+                       # demand-driven queue (DESIGN.md §2.3)
+                       ("hybrid", dict(tile=64, n_workers=2,
+                                       n_device_workers=1))]:
         out, s = solve(op, state, engine=engine, **kw)
         assert np.array_equal(np.asarray(out["J"]), ref)
         print(f"morph / {engine:13s}: rounds={s.rounds} "

@@ -3,14 +3,18 @@
 The paper dispatches Tile-Propagation (TP) task instances to CPU cores and
 GPUs demand-driven (FCFS) and re-instantiates the pipeline when Border
 Propagation (BP) finds cross-tile waves.  This module reproduces that
-runtime at the host level with worker threads over jitted tile tasks.  It
-is the *CPU path* of the framework and the substrate of the fault-tolerance
-story:
+runtime at the host level with worker threads over jitted tile tasks, and
+— via :class:`DeviceWorker` — the paper's *cooperative* CPU+GPU execution:
+host threads and accelerator drain streams consume the **same** FCFS queue
+(DESIGN.md §2.3, the `hybrid` engine's substrate).
 
 * demand-driven FCFS queue -> natural straggler mitigation (fast workers
   take more tiles, exactly the paper's load-balance argument);
+* device workers claim variable-size *chunks* of the queue per request —
+  the paper's larger-GPU-chunk policy — sized by a measured relative-speed
+  estimate (:class:`ChunkPolicy`: cost-model seed, online EWMA refinement);
 * IWPP updates are monotone + commutative and tiles are re-executable from
-  current state, so a worker failure is handled by re-queuing its tile —
+  current state, so a worker failure is handled by re-queuing its tile(s) —
   the same §5.2.4 argument that makes queue overflow benign.
 
 Threads genuinely overlap because jitted JAX CPU computations release the
@@ -22,9 +26,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -34,11 +39,80 @@ class SchedulerStats:
     tiles_processed: int = 0
     rounds: int = 0
     requeues_from_failures: int = 0
+    tiles_requeued: int = 0        # unconverged (partial) drains re-queued
     per_worker: Dict[int, int] = field(default_factory=dict)
     # True iff run() gave up with work still queued (every survivor wave
     # died, max_survivor_waves exhausted): the state is NOT at its fixed
     # point and must not be treated as one.
     incomplete: bool = False
+
+
+class ChunkPolicy:
+    """The paper's larger-GPU-chunk policy (§4): how many queue entries a
+    device worker claims per FCFS request.
+
+    A device consumer amortizes its dispatch overhead over a whole chunk,
+    so it should claim ``rel_speed`` tiles for every single tile a host
+    thread claims, where ``rel_speed`` is the device:host throughput ratio.
+    The ratio is *seeded* analytically (the CostModel's per-drain unit
+    costs) and *refined online*: every worker reports its measured
+    seconds-per-tile and the policy keeps one EWMA per worker class —
+    demand-driven FCFS then converges the split to the actual relative
+    speeds, the paper's load-balance argument made quantitative.
+    """
+
+    def __init__(self, rel_speed: float = 4.0, max_chunk: int = 16,
+                 alpha: float = 0.25):
+        self.seed_rel_speed = max(1.0, float(rel_speed))
+        self.max_chunk = max(1, int(max_chunk))
+        self.alpha = alpha
+        self._host_spt: Optional[float] = None    # EWMA host seconds/tile
+        self._dev_spt: Optional[float] = None     # EWMA device seconds/tile
+        self._lock = threading.Lock()
+
+    def _ewma(self, old: Optional[float], x: float) -> float:
+        return x if old is None else (1 - self.alpha) * old + self.alpha * x
+
+    def observe_host(self, seconds_per_tile: float) -> None:
+        with self._lock:
+            self._host_spt = self._ewma(self._host_spt, seconds_per_tile)
+
+    def observe_device(self, seconds_per_tile: float) -> None:
+        with self._lock:
+            self._dev_spt = self._ewma(self._dev_spt, seconds_per_tile)
+
+    @property
+    def rel_speed(self) -> float:
+        """Measured host:device seconds-per-tile ratio (falls back to the
+        analytic seed until both classes have been observed)."""
+        with self._lock:
+            if self._host_spt is None or self._dev_spt is None or \
+                    self._dev_spt <= 0.0:
+                return self.seed_rel_speed
+            return self._host_spt / self._dev_spt
+
+    def chunk(self) -> int:
+        """Tiles a device worker should claim per FCFS request."""
+        return int(np.clip(round(self.rel_speed), 1, self.max_chunk))
+
+
+@dataclass
+class DeviceWorker:
+    """One accelerator consumer of the shared FCFS queue (DESIGN.md §2.3).
+
+    ``batch_fn`` is the tiled engine's ``batched_tile_solver`` contract:
+    a pytree of halo blocks with a leading (K,) batch dim maps to
+    ``(drained blocks, unconverged (K,) bools)`` — the same solvers that
+    back ``run_tiled(drain_batch=K)`` (plain ``jax.vmap`` of the per-tile
+    solve, or the Pallas grid-over-batch kernels) plug in unchanged.  The
+    worker splits its claimed chunk into groups of exactly ``drain_batch``
+    blocks (short groups padded with neutral blocks from ``pad_block``),
+    so the jitted solver sees a single static batch shape.
+    """
+
+    batch_fn: Callable
+    drain_batch: int = 4
+    name: str = "device"
 
 
 class TileScheduler:
@@ -47,9 +121,13 @@ class TileScheduler:
     Parameters
     ----------
     state : dict of str -> np.ndarray, all (H, W)-shaped trailing dims.
-    tile_fn : callable (block_state, ) -> (new_block_state, border_changed)
-        Drains one (T+2, T+2) halo block to local stability.  ``border_changed``
-        is a dict with keys 'top','bottom','left','right' of python bools.
+    tile_fn : callable (block_state, ) -> (new_block_state, info)
+        Drains one (T+2, T+2) halo block to local stability.  ``info`` may
+        be ``True`` to signal an *unconverged* (partial) drain — the
+        scheduler then writes the partial progress back (monotone updates
+        make that safe) and re-queues the tile, the host-side analogue of
+        the tiled engine's truncation self-requeue.  Any other value
+        (``None``, a border-changed dict) is ignored.
     init_active : boolean (nty, ntx) array of initially-active tiles.
     merge_block_fn : optional coordinate-aware merge: called as
         ``merge_block_fn((r0, c0), old_inner, new_inner) -> merged`` with
@@ -62,14 +140,23 @@ class TileScheduler:
         scheduler falls back to dtype-min/``-inf`` (False for bool), which is
         only correct for max-propagating payloads — EDT's coordinate planes,
         for instance, need their far-sentinel fill instead.
+    device_workers : optional sequence of :class:`DeviceWorker` — batched
+        accelerator consumers sharing this queue with the host threads (the
+        cooperative `hybrid` pool).  ``n_workers`` may be 0 for a
+        device-only pool; at least one worker of either kind must exist.
+    chunk_policy : optional :class:`ChunkPolicy` sizing device claims
+        (default: a fresh policy with the seed ratio 4).  Pass a shared
+        instance to keep the EWMA learning across scheduler passes.
     """
 
     def __init__(self, state: Dict[str, np.ndarray], tile: int,
-                 tile_fn: Callable, init_active: np.ndarray,
+                 tile_fn: Optional[Callable], init_active: np.ndarray,
                  n_workers: int = 4, mutable=("J",),
                  merge_fn: Optional[Callable] = None,
                  merge_block_fn: Optional[Callable] = None,
                  pad_values: Optional[Dict[str, object]] = None,
+                 device_workers: Sequence[DeviceWorker] = (),
+                 chunk_policy: Optional[ChunkPolicy] = None,
                  fail_worker: Optional[int] = None, fail_after: int = 3):
         H, W = next(iter(state.values())).shape[-2:]
         assert H % tile == 0 and W % tile == 0, "host scheduler expects tile-aligned grids"
@@ -78,6 +165,13 @@ class TileScheduler:
         self.tile_fn = tile_fn
         self.nty, self.ntx = H // tile, W // tile
         self.n_workers = n_workers
+        self.device_workers = list(device_workers)
+        if n_workers <= 0 and not self.device_workers:
+            raise ValueError("TileScheduler needs at least one worker "
+                             "(n_workers >= 1 or a DeviceWorker)")
+        if n_workers > 0 and tile_fn is None:
+            raise ValueError("host workers need a tile_fn")
+        self.chunk_policy = chunk_policy or ChunkPolicy()
         self.mutable = mutable
         # Commutative merge at write-back — the scheduler analogue of the
         # paper's atomicMax/atomicCAS: a worker that raced with a fresher
@@ -85,7 +179,7 @@ class TileScheduler:
         self.merge_fn = merge_fn or (lambda key, old, new: np.maximum(old, new))
         self.merge_block_fn = merge_block_fn
         self.pad_values = pad_values or {}
-        self.fail_worker = fail_worker
+        self.fail_worker = fail_worker     # a worker id, or "all"
         self.fail_after = fail_after
         self._lock = threading.Lock()
         self._q: "queue.Queue[Tuple[int, int]]" = queue.Queue()
@@ -106,16 +200,20 @@ class TileScheduler:
             self._q.put(tid)
             self._done.notify_all()   # wake idle workers waiting for work
 
+    def _pad_value_for(self, k, arr):
+        pad_val = self.pad_values.get(k)
+        if pad_val is None:
+            pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
+                                                   if arr.dtype.kind in "iu" else -np.inf)
+        return pad_val
+
     def _slice_block(self, ty, tx):
         T = self.tile
         H, W = next(iter(self.state.values())).shape[-2:]
         r0, c0 = ty * T, tx * T
         out = {}
         for k, arr in self.state.items():
-            pad_val = self.pad_values.get(k)
-            if pad_val is None:
-                pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
-                                                       if arr.dtype.kind in "iu" else -np.inf)
+            pad_val = self._pad_value_for(k, arr)
             blk = np.full(arr.shape[:-2] + (T + 2, T + 2), pad_val, dtype=arr.dtype)
             rs, re = max(0, r0 - 1), min(H, r0 + T + 1)
             cs, ce = max(0, c0 - 1), min(W, c0 + T + 1)
@@ -123,6 +221,18 @@ class TileScheduler:
                 cs - (c0 - 1): cs - (c0 - 1) + (ce - cs)] = arr[..., rs:re, cs:ce]
             out[k] = blk
         return out
+
+    def pad_block(self):
+        """A fully-neutral halo block: converges immediately, marks nothing.
+
+        Device workers use it to pad short chunks up to their static
+        ``drain_batch`` shape (the same dead-slot neutralization as
+        `run_tiled`'s batched drain).
+        """
+        T = self.tile
+        return {k: np.full(arr.shape[:-2] + (T + 2, T + 2),
+                           self._pad_value_for(k, arr), dtype=arr.dtype)
+                for k, arr in self.state.items()}
 
     def _write_back(self, ty, tx, block) -> Dict[str, bool]:
         T = self.tile
@@ -163,7 +273,27 @@ class TileScheduler:
         if edges["right"]:
             m(-1, 1); m(0, 1); m(1, 1)
 
-    # -- worker loop ---------------------------------------------------------
+    def _commit(self, tid, block, unconverged: bool, wid: int):
+        """Write one drained block back and update marks/stats (lock held)."""
+        edges = self._write_back(*tid, block)
+        self._mark_neighbors(*tid, edges)
+        if unconverged:
+            # Partial drain (cut off at the solver's iteration bound): the
+            # written-back progress is monotone-safe, but the tile is NOT at
+            # its fixed point — keep it queued (truncation self-requeue).
+            self._push(tid)
+            self.stats.tiles_requeued += 1
+        self.stats.tiles_processed += 1
+        self.stats.per_worker[wid] = self.stats.per_worker.get(wid, 0) + 1
+
+    def _should_fail(self, wid: int, n_done: int) -> bool:
+        """Fault-injection hook: kill worker ``fail_worker`` (or every
+        worker, ``"all"``) after it has processed ``fail_after`` tiles."""
+        return (self.fail_worker is not None
+                and (self.fail_worker == "all" or self.fail_worker == wid)
+                and n_done >= self.fail_after)
+
+    # -- host worker loop ----------------------------------------------------
     def _worker(self, wid: int):
         n_done = 0
         while True:
@@ -191,14 +321,13 @@ class TileScheduler:
             if tid is None:
                 continue
             try:
-                if self.fail_worker == wid and n_done >= self.fail_after:
+                if self._should_fail(wid, n_done):
                     raise RuntimeError(f"injected failure on worker {wid}")
-                new_block, _ = self.tile_fn(block)
+                t0 = time.perf_counter()
+                new_block, info = self.tile_fn(block)
+                self.chunk_policy.observe_host(time.perf_counter() - t0)
                 with self._lock:
-                    edges = self._write_back(*tid, new_block)
-                    self._mark_neighbors(*tid, edges)
-                    self.stats.tiles_processed += 1
-                    self.stats.per_worker[wid] = self.stats.per_worker.get(wid, 0) + 1
+                    self._commit(tid, new_block, info is True, wid)
                     n_done += 1
             except Exception:
                 # Fault tolerance: re-queue the tile; state untouched (tiles
@@ -213,27 +342,131 @@ class TileScheduler:
                 self._inflight -= 1
                 self._done.notify_all()   # idle peers re-check the exit condition
 
+    # -- device worker loop --------------------------------------------------
+    def _device_worker(self, wid: int, dev: DeviceWorker):
+        """Batched accelerator consumer: claim a chunk, drain it, merge back.
+
+        The chunk is claimed under ONE lock acquisition (the same atomic
+        claim-then-get invariant as the host loop, generalized to K tiles).
+        Tiles within a chunk drain concurrently from pre-chunk snapshots —
+        two adjacent claimed tiles read each other's *stale* halos — which
+        is exactly `run_tiled`'s batched-drain seam: interior writes are
+        disjoint, writeback goes through the commutative merge, and a
+        changed edge re-marks the neighbor, so a stale read at worst costs
+        a re-drain, never a wrong fixed point (DESIGN.md §2.1/§2.3).
+        """
+        n_done = 0
+        while True:
+            with self._lock:
+                # Claim at most half the queue (ceil): a chunk bigger than
+                # the device's measured speed advantage starves the other
+                # consumers and serializes the wavefront — demand-driven
+                # means leaving work for whoever is free.
+                want = min(self.chunk_policy.chunk(),
+                           max(1, -(-self._q.qsize() // 2)))
+                tids: List[Tuple[int, int]] = []
+                while len(tids) < want:
+                    try:
+                        tids.append(self._q.get_nowait())
+                    except queue.Empty:
+                        break
+                if not tids:
+                    if self._inflight == 0:
+                        return
+                    self._done.wait(timeout=0.05)
+                    continue
+                self._inflight += len(tids)
+                for t in tids:
+                    self._in_queue.discard(t)
+                blocks = [self._slice_block(*t) for t in tids]
+            t0 = time.perf_counter()
+            try:
+                if self._should_fail(wid, n_done):
+                    raise RuntimeError(f"injected failure on device worker {wid}")
+                results = self._drain_chunk(dev, blocks)
+            except Exception:
+                with self._lock:
+                    for t in tids:
+                        self._push(t)
+                    self.stats.requeues_from_failures += len(tids)
+                    self._inflight -= len(tids)
+                    self._done.notify_all()
+                return  # device worker dies; host/survivor workers take over
+            self.chunk_policy.observe_device(
+                (time.perf_counter() - t0) / len(tids))
+            with self._lock:
+                for t, (nb, unconv) in zip(tids, results):
+                    self._commit(t, nb, unconv, wid)
+                n_done += len(tids)
+                self._inflight -= len(tids)
+                self._done.notify_all()
+
+    def _drain_chunk(self, dev: DeviceWorker, blocks):
+        """Drain a claimed chunk in groups of exactly ``drain_batch`` blocks.
+
+        Short groups are padded with neutral blocks (see :meth:`pad_block`)
+        so the jitted batched solver only ever sees one static (K, T+2, T+2)
+        shape; pad slots converge immediately and are dropped unmerged.
+        """
+        K = max(1, dev.drain_batch)
+        results = []
+        neutral = None
+        for g0 in range(0, len(blocks), K):
+            group = blocks[g0:g0 + K]
+            n_live = len(group)
+            if n_live < K:
+                if neutral is None:
+                    neutral = self.pad_block()
+                group = group + [neutral] * (K - n_live)
+            stacked = {k: np.stack([b[k] for b in group])
+                       for k in group[0].keys()}
+            out, unconv = dev.batch_fn(stacked)
+            out = {k: np.asarray(v) for k, v in out.items()}
+            unconv = np.asarray(unconv)
+            for i in range(n_live):
+                results.append(({k: v[i] for k, v in out.items()},
+                                bool(unconv[i])))
+        return results
+
+    # -- pool composition ----------------------------------------------------
+    def _roles(self):
+        """The mixed worker pool: ('host', None) x n_workers + device specs."""
+        return ([("host", None)] * self.n_workers
+                + [("device", d) for d in self.device_workers])
+
+    def _spawn(self, role, wid: int) -> threading.Thread:
+        kind, dev = role
+        if kind == "host":
+            return threading.Thread(target=self._worker, args=(wid,),
+                                    daemon=True)
+        return threading.Thread(target=self._device_worker, args=(wid, dev),
+                                daemon=True)
+
     # Survivor waves after the initial pass (fault tolerance); bounds the
     # pathological case of a tile_fn that fails deterministically forever.
     max_survivor_waves = 32
 
     def run(self) -> SchedulerStats:
-        workers = [threading.Thread(target=self._worker, args=(w,), daemon=True)
-                   for w in range(self.n_workers)]
+        roles = self._roles()
+        workers = [self._spawn(role, w) for w, role in enumerate(roles)]
         for t in workers:
             t.start()
         for t in workers:
             t.join()
-        # Killed workers re-queue their tile and die, so a wave can end with
-        # work still pending — and a survivor wave can *itself* lose workers.
-        # Re-check after every wave (the old single survivor pass returned
-        # with a non-empty queue if its workers also died).
-        next_wid = self.n_workers
+        # Killed workers re-queue their tile(s) and die, so a wave can end
+        # with work still pending — and a survivor wave can *itself* lose
+        # workers.  Re-check after every wave (the old single survivor pass
+        # returned with a non-empty queue if its workers also died).  Waves
+        # respawn from the same mixed role pool, one short of the original
+        # (the model: one worker died).  The dropped role is the *first*
+        # one — a host thread when any exist (roles list hosts first) — so
+        # a hybrid pool keeps its device consumers alive across waves.
+        next_wid = len(roles)
+        surv_roles = roles[1:] if len(roles) > 1 else roles
         waves = 0
         while not self._q.empty() and waves < self.max_survivor_waves:
-            survivors = [threading.Thread(target=self._worker,
-                                          args=(next_wid + w,), daemon=True)
-                         for w in range(max(1, self.n_workers - 1))]
+            survivors = [self._spawn(role, next_wid + w)
+                         for w, role in enumerate(surv_roles)]
             for t in survivors:
                 t.start()
             for t in survivors:

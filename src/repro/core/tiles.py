@@ -122,6 +122,23 @@ def initial_active_tiles(op: PropagationOp, state, tile: int,
     return active_tiles_from_frontier(op, op.init_frontier(state), tile, nty, ntx)
 
 
+def default_tile_solver(op: PropagationOp, tile: int) -> Callable:
+    """The plain dense drain at the engine's (T+2)² geodesic bound.
+
+    This is `run_tiled`'s default per-tile solver, exposed so other queue
+    consumers (the host scheduler's jitted drain, the hybrid engine's
+    device workers — DESIGN.md §2.3) run the *same* solver under the same
+    truncation contract: returns ``(block, unconverged)``.
+    """
+    return lambda blk: _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
+
+
+def default_batched_solver(op: PropagationOp, tile: int) -> Callable:
+    """`jax.vmap` of :func:`default_tile_solver` over a leading (K,) batch
+    dim — the `batched_tile_solver` contract (blocks, unconverged[K])."""
+    return jax.vmap(default_tile_solver(op, tile))
+
+
 def _gather_block(padded, ty, tx, tile: int):
     start = (ty * tile, tx * tile)
     return jax.tree_util.tree_map(
@@ -208,8 +225,7 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     """
     # (T+2)^2 bounds the longest geodesic inside one halo block (a spiral
     # path); the while_loop exits at stability so the bound is free normally.
-    solver = tile_solver or (lambda blk: _tile_local_solve(op, blk,
-                                                           max_iters=(tile + 2) ** 2))
+    solver = tile_solver or default_tile_solver(op, tile)
     padded, (H, W, nty, ntx) = _pad_state(op, state, tile)
     # a queue longer than the tile grid only adds dead scan slots
     queue_capacity = min(queue_capacity, nty * ntx)

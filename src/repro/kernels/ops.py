@@ -7,7 +7,10 @@
   engine's `tile_solver` interface (block pytree -> (block pytree,
   unconverged)); the `*_batched` variants adapt the grid-over-batch kernels
   to the engine's `batched_tile_solver` interface (leaves carry a leading
-  (K,) batch dim — the paper's parallel queue drain, DESIGN.md §2).
+  (K,) batch dim — the paper's parallel queue drain, DESIGN.md §2).  The
+  same batched contract backs the hybrid engine's device workers
+  (`solve(engine="hybrid", hybrid_pallas=True)` — DESIGN.md §2.3), so a
+  `DeviceWorker` drains its claimed chunks through these kernels unchanged.
 * the adapters take the engine's iteration bound as ``max_iters`` (the
   tiled engine passes its (T+2)² geodesic bound) and report
   ``iters >= max_iters`` as the *unconverged* flag, so a drain cut off at

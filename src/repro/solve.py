@@ -16,6 +16,8 @@ them:
   "shard_map-tiled"  run_sharded w/ per-shard run_tiled    §4 pipeline over
                      TP drains (E3∘E2, DESIGN.md §2.2)     §3.2 queues
   "scheduler"        core.scheduler.TileScheduler          §4 Fig. 8 host FCFS
+  "hybrid"           TileScheduler + DeviceWorker pool     §4 cooperative
+                     (DESIGN.md §2.3)                      CPU+GPU execution
   "auto"             CostModel ranking (+ autotune)        §4 demand-driven map
 
 ``engine="auto"`` ranks candidate ``(engine, tile, queue_capacity)``
@@ -46,11 +48,13 @@ import numpy as np
 from repro.core.distributed import run_sharded
 from repro.core.frontier import run_dense
 from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
-from repro.core.scheduler import TileScheduler
-from repro.core.tiles import _tile_local_solve, initial_active_tiles, run_tiled
+from repro.core.scheduler import ChunkPolicy, DeviceWorker, TileScheduler
+from repro.core.tiles import (active_tiles_from_frontier, default_batched_solver,
+                              default_tile_solver, initial_active_tiles,
+                              run_tiled)
 
 ENGINES = ("sweep", "frontier", "tiled", "tiled-pallas", "shard_map",
-           "shard_map-tiled", "scheduler", "auto")
+           "shard_map-tiled", "scheduler", "hybrid", "auto")
 
 DEFAULT_TILES = (32, 64, 128)
 DEFAULT_QUEUE_CAPACITY = 64
@@ -96,6 +100,12 @@ class SolveStats:
     n_devices: int = 1
     predicted_cost: Optional[float] = None   # CostModel units (auto only)
     autotuned: bool = False
+    # True iff the engine gave up before reaching (and verifying) the fixed
+    # point — the result is a monotone-valid *partial* state, never to be
+    # treated as converged.  Filled by the `hybrid` engine when its BP
+    # verification round still finds a residual frontier at max_rounds; the
+    # `scheduler` engine raises instead (no BP loop to recover through).
+    incomplete: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +289,9 @@ class CostModel:
     # Pallas interpret mode executes the kernel body in Python — only ever
     # competitive when compiled for a real TPU.
     interpret_penalty = 50.0
+    # Host threads assumed alongside the device stream in the `hybrid`
+    # cooperative pool (solve()'s n_workers default).
+    hybrid_host_workers = 4
 
     def __init__(self, interpret: bool = True):
         self.interpret = interpret
@@ -298,7 +311,7 @@ class CostModel:
             return stats.depth_est * stats.area
         if e == "sweep":
             return (stats.depth_est + 2) * stats.area * self.sweep_penalty
-        if e in ("tiled", "tiled-pallas", "scheduler"):
+        if e in ("tiled", "tiled-pallas", "scheduler", "hybrid"):
             block = (cfg.tile + 2) ** 2
             return self._drains(stats, cfg.tile) * block
         if e == "shard_map":
@@ -337,6 +350,19 @@ class CostModel:
             drains = self._drains(stats, cfg.tile)
             return (drains * block * cfg.tile * self.vmem_discount
                     * self.host_penalty + drains * self.host_dispatch)
+        if e == "hybrid":
+            # Cooperative pool: host threads and the batched device stream
+            # consume one queue, so throughputs *add* (harmonic combination
+            # of the per-drain unit costs) — the paper's §4 claim that the
+            # hybrid split beats either processor alone.  Plus a
+            # conservative O(area) charge for the pass's host-side overhead
+            # (padded-state copies, and the BP recovery probe when a pass
+            # loses its workers).
+            host_unit, dev_unit = self._hybrid_units(cfg.tile,
+                                                     cfg.drain_batch or 1)
+            drains = self._drains(stats, cfg.tile)
+            rate = self.hybrid_host_workers / host_unit + 1.0 / dev_unit
+            return drains / rate + stats.area
         if e == "shard_map":
             return self._bp_rounds(stats) * self.collective_latency * stats.n_devices
         if e == "shard_map-tiled":
@@ -351,6 +377,27 @@ class CostModel:
                     + self._bp_rounds(stats) * self.collective_latency
                     * stats.n_devices)
         raise ValueError(f"unknown engine {e!r}")
+
+    def _hybrid_units(self, tile: int, drain_batch: int) -> Tuple[float, float]:
+        """Per-drain unit costs of the hybrid pool's two worker classes."""
+        block = (tile + 2) ** 2
+        inner = block * tile * self.vmem_discount
+        host_unit = inner * self.host_penalty + self.host_dispatch
+        dev_unit = inner + self.tile_dispatch / max(1, drain_batch)
+        return host_unit, dev_unit
+
+    def hybrid_rel_speed(self, tile: int, drain_batch: int = 1) -> float:
+        """Analytic seed for the hybrid engine's :class:`ChunkPolicy`: how
+        many tiles the device stream should claim per host-thread tile.
+
+        Both worker classes run the same jitted drain, so the only *a
+        priori* device advantage is dispatch amortization — one host-side
+        dispatch per ``drain_batch`` blocks instead of per block.  (A real
+        accelerator's compute advantage is discovered by the online EWMA,
+        not assumed: a wrong seed only costs the first few claims.)"""
+        inner = (tile + 2) ** 2 * tile * self.vmem_discount
+        return ((inner + self.host_dispatch)
+                / (inner + self.host_dispatch / max(1, drain_batch)))
 
     def _bp_rounds(self, stats: InputStats) -> float:
         side = max(1.0, math.sqrt(stats.n_devices))
@@ -371,6 +418,7 @@ class CostModel:
             out.append(EngineConfig("tiled", t, cap, db))
             out.append(EngineConfig("tiled-pallas", t, cap, db))
             out.append(EngineConfig("scheduler", t, cap))
+            out.append(EngineConfig("hybrid", t, cap, db))
             if stats.n_devices > 1:
                 out.append(EngineConfig("shard_map-tiled", t, cap, db))
         if stats.n_devices > 1:
@@ -589,38 +637,79 @@ _DRAIN_MEMO: Dict[tuple, Callable] = {}
 def _scheduler_drain_for(op, tile: int):
     key = (type(op), op.connectivity, tile)
     if key not in _DRAIN_MEMO:
-        @jax.jit
-        def _drain(blk):
-            # (T+2)^2 iterations bound the longest geodesic inside one block
-            # (e.g. a spiral mask); the while_loop exits at stability, so the
-            # generous bound costs nothing in the common case.  Out-of-array
-            # halo cells arrive already holding the op's neutral pad values
-            # (TileScheduler pad_values), so no sanitize pass is needed.
-            out, _ = _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
-            return out
-        _DRAIN_MEMO[key] = _drain
+        # (T+2)^2 iterations bound the longest geodesic inside one block
+        # (e.g. a spiral mask); the while_loop exits at stability, so the
+        # generous bound costs nothing in the common case.  Out-of-array
+        # halo cells arrive already holding the op's neutral pad values
+        # (TileScheduler pad_values), so no sanitize pass is needed.  The
+        # (block, unconverged) pair is the truncation contract: the host
+        # scheduler self-requeues an unconverged drain like run_tiled does.
+        _DRAIN_MEMO[key] = jax.jit(default_tile_solver(op, tile))
     return _DRAIN_MEMO[key]
 
 
-def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
-    tile = cfg.tile or DEFAULT_TILES[1]
+def _batched_drain_for(op, tile: int, interpret: bool, pallas: bool,
+                       drain_batch: int = 1):
+    """Jitted `batched_tile_solver` for the hybrid engine's device workers:
+    plain `jax.vmap` of the dense drain, or the Pallas grid-over-batch
+    kernels — both at the (T+2)² truncation bound.
+
+    ``drain_batch <= 1`` adapts the *unbatched* jitted solver instead of a
+    degenerate K=1 vmap: vmapping `lax.while_loop` re-lowers the drain body
+    in batched form, which measures several times slower than the plain
+    drain even at batch 1 (the same reason `run_tiled` keeps a sequential
+    scan path).
+    """
+    if pallas:
+        return _pallas_solver_for(op, interpret, batched=True,
+                                  max_iters=(tile + 2) ** 2)
+    if drain_batch <= 1:
+        per = _scheduler_drain_for(op, tile)
+
+        def batch_fn(stacked):
+            out, unconv = per({k: jnp.asarray(v)[0]
+                               for k, v in stacked.items()})
+            return ({k: np.asarray(v)[None] for k, v in out.items()},
+                    np.asarray(unconv)[None])
+
+        return batch_fn
+    key = (type(op), op.connectivity, tile, "hybrid-batched")
+    if key not in _DRAIN_MEMO:
+        _DRAIN_MEMO[key] = jax.jit(default_batched_solver(op, tile))
+    return _DRAIN_MEMO[key]
+
+
+def _host_tile_fn_for(op, tile: int):
+    """Host-thread tile task: jitted dense drain over a numpy halo block."""
+    _drain = _scheduler_drain_for(op, tile)
+
+    def tile_fn(block):
+        out, unconv = _drain({k: jnp.asarray(b) for k, b in block.items()})
+        return {k: np.asarray(b) for k, b in out.items()}, bool(unconv)
+
+    return tile_fn
+
+
+def _scheduler_state_for(op, state, tile: int):
+    """Shared host-engine setup: padded numpy state + scheduler plumbing."""
     padded, (H, W) = _pad_to_multiple(op, state, tile, tile)
     # np.array (not asarray): JAX buffers give read-only numpy views, and the
     # scheduler writes tile interiors back into this state in place.
     np_state = {k: np.array(v) for k, v in padded.items()}
     active = np.asarray(initial_active_tiles(op, padded, tile))
-    _drain = _scheduler_drain_for(op, tile)
-
-    def tile_fn(block):
-        out = _drain({k: jnp.asarray(b) for k, b in block.items()})
-        return {k: np.asarray(b) for k, b in out.items()}, None
-
     merge_factory = _registry_lookup(_SCHEDULER_MERGES, op)
     merge_block_fn = merge_factory(op) if merge_factory is not None else None
     mutable = tuple(k for k in np_state if k not in op.static_leaves)
     pad_values = {k: np.asarray(v).item()
                   for k, v in op.pad_value(padded).items()}
-    sched = TileScheduler(np_state, tile, tile_fn, active,
+    return np_state, active, merge_block_fn, mutable, pad_values, (H, W)
+
+
+def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
+    tile = cfg.tile or DEFAULT_TILES[1]
+    (np_state, active, merge_block_fn, mutable, pad_values,
+     (H, W)) = _scheduler_state_for(op, state, tile)
+    sched = TileScheduler(np_state, tile, _host_tile_fn_for(op, tile), active,
                           n_workers=n_workers, mutable=mutable,
                           merge_block_fn=merge_block_fn,
                           pad_values=pad_values)
@@ -638,7 +727,134 @@ def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
     return out, SolveStats("scheduler", rounds=1,
                            tiles_processed=st.tiles_processed,
                            requeues=st.requeues_from_failures,
+                           tiles_requeued=st.tiles_requeued,
                            tile=tile)
+
+
+# Memoized one-round residual check for the hybrid engine's BP loop.
+_BP_ROUND_MEMO: Dict[tuple, Callable] = {}
+
+
+def _bp_residual_for(op):
+    """One dense round sourcing from every valid pixel.
+
+    ``state`` is at its fixed point iff this round changes nothing — the
+    returned frontier is exactly the set of pixels it improved (the
+    "halo-improved" seed of the next hybrid pass, DESIGN.md §2.3).
+    """
+    key = (type(op), op.connectivity)
+    if key not in _BP_ROUND_MEMO:
+        @jax.jit
+        def _residual(state):
+            f0 = jnp.ones(tree_shape(state), dtype=bool)
+            if "valid" in state:
+                f0 = f0 & state["valid"]
+            return op.round(state, f0)
+        _BP_ROUND_MEMO[key] = _residual
+    return _BP_ROUND_MEMO[key]
+
+
+# Test hook: (worker_id | "all", fail_after) injected into every hybrid
+# scheduler pass — exercises the cooperative pool's fault tolerance without
+# widening the public solve() signature.
+_HYBRID_FAIL_INJECT: Optional[Tuple[Any, int]] = None
+
+
+def _run_hybrid_engine(op, state, cfg, max_rounds, interpret=True,
+                       n_workers=4, n_device_workers=1,
+                       hybrid_pallas=False, cost_model=None, **_):
+    """The cooperative CPU+device engine (paper §4, DESIGN.md §2.3).
+
+    One demand-driven FCFS tile queue, consumed concurrently by
+    ``n_workers`` host threads (jitted per-tile drains with commutative
+    merge writeback) and ``n_device_workers`` device streams (batched
+    `run_tiled`-style drains, ``drain_batch`` blocks per dispatch, chunks
+    sized by the ChunkPolicy's measured relative speed).  ``queue_capacity``
+    does not apply — the host FCFS queue is unbounded, so the stats report
+    it as None rather than echoing an inert knob.  A completed pass
+    certifies the fixed point; a pass that lost every worker wave triggers
+    a BP recovery round (one dense valid-sourced round) that re-seeds the
+    queue with only the tiles it improved (`active_tiles_from_frontier` —
+    the same seam as the composed `shard_map-tiled` engine's BP re-seed).
+    """
+    tile, _, drain_batch = _tiled_cfg_defaults(cfg)
+    if n_workers <= 0 and n_device_workers <= 0:
+        raise ValueError("hybrid engine needs n_workers >= 1 or "
+                         "n_device_workers >= 1")
+    (np_state, active, merge_block_fn, mutable, pad_values,
+     (H, W)) = _scheduler_state_for(op, state, tile)
+    nty, ntx = (np_state[mutable[0]].shape[-2] // tile,
+                np_state[mutable[0]].shape[-1] // tile)
+
+    tile_fn = _host_tile_fn_for(op, tile) if n_workers > 0 else None
+    batch_fn = _batched_drain_for(op, tile, interpret, hybrid_pallas,
+                                  drain_batch)
+    devs = [DeviceWorker(batch_fn, drain_batch=drain_batch,
+                         name=f"device{d}") for d in range(n_device_workers)]
+    model = cost_model if cost_model is not None else CostModel(interpret)
+    # One policy across all BP passes: the EWMA keeps learning the real
+    # host:device speed ratio over the whole solve.
+    # max_chunk ~ two batched dispatches ahead: more claim-ahead only adds
+    # halo staleness without further dispatch amortization.
+    policy = ChunkPolicy(model.hybrid_rel_speed(tile, drain_batch),
+                         max_chunk=max(2 * max(1, drain_batch), 4))
+    residual = _bp_residual_for(op)
+    fail = _HYBRID_FAIL_INJECT
+
+    tiles_processed = requeues = tiles_requeued = 0
+    bp_rounds = 0
+    incomplete = True
+    while True:
+        sched = TileScheduler(
+            np_state, tile, tile_fn, active, n_workers=n_workers,
+            mutable=mutable, merge_block_fn=merge_block_fn,
+            pad_values=pad_values, device_workers=devs, chunk_policy=policy,
+            fail_worker=fail[0] if fail else None,
+            fail_after=fail[1] if fail else 3)
+        st = sched.run()
+        tiles_processed += st.tiles_processed
+        requeues += st.requeues_from_failures
+        tiles_requeued += st.tiles_requeued
+        bp_rounds += 1
+        if not st.incomplete:
+            # A completed pass certifies the fixed point by construction:
+            # queue empty + nothing inflight means no pending dirty marks,
+            # so every tile is locally stable against its current halos —
+            # the same guarantee the solo scheduler engine rests on.
+            incomplete = False
+            break
+        if bp_rounds >= max(1, max_rounds):
+            break
+        # BP recovery round (the pass lost every worker wave): one dense
+        # valid-sourced round makes monotone progress and yields the
+        # improved-pixel frontier, which re-seeds the shared queue with
+        # only the tiles it touches.  Re-draining any superset of the
+        # dirty tiles is exact (monotone commutative updates), so worker
+        # death costs extra rounds, never a wrong result — total failure
+        # degrades to E1's dense rounds rather than a partial answer.
+        new_state, f_in = residual({k: jnp.asarray(v)
+                                    for k, v in np_state.items()})
+        if not bool(jnp.any(f_in)):
+            incomplete = False
+            break
+        for k in mutable:
+            np_state[k] = np.array(new_state[k])
+        active = np.asarray(active_tiles_from_frontier(op, f_in, tile,
+                                                       nty, ntx))
+    if incomplete:
+        warnings.warn(
+            f"hybrid engine stopped after {bp_rounds} BP rounds with a "
+            "non-empty residual frontier; the state is NOT at its fixed "
+            "point (SolveStats.incomplete=True)", RuntimeWarning,
+            stacklevel=2)
+    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
+    # Engine output contract: invalid cells hold their input values.
+    out = restore_invalid(op, state, out)
+    return out, SolveStats("hybrid", rounds=bp_rounds,
+                           tiles_processed=tiles_processed,
+                           requeues=requeues, tiles_requeued=tiles_requeued,
+                           tile=tile, drain_batch=drain_batch,
+                           incomplete=incomplete)
 
 
 _ENGINE_RUNNERS = {
@@ -649,6 +865,7 @@ _ENGINE_RUNNERS = {
     "shard_map": _run_shard_map_engine,
     "shard_map-tiled": _run_shard_map_engine,
     "scheduler": _run_scheduler_engine,
+    "hybrid": _run_hybrid_engine,
 }
 
 
@@ -671,7 +888,9 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
           autotune_top_k: int = 3,
           autotune_repeats: int = 2,
           interpret: bool = True,
-          n_workers: int = 4) -> Tuple[Any, SolveStats]:
+          n_workers: int = 4,
+          n_device_workers: int = 1,
+          hybrid_pallas: bool = False) -> Tuple[Any, SolveStats]:
     """Run ``op`` on ``state`` to its fixed point; return (state, SolveStats).
 
     Parameters
@@ -700,12 +919,20 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
         timed runs each after a warm-up) and cache the winner keyed by
         :func:`autotune_signature`.
     interpret : run Pallas kernels in interpret mode (required off-TPU).
-    n_workers : host threads for the ``"scheduler"`` engine.
+    n_workers : host threads for the ``"scheduler"`` and ``"hybrid"``
+        engines (``"hybrid"`` accepts 0 for a device-only pool).
+    n_device_workers : batched device drain streams sharing the
+        ``"hybrid"`` engine's queue with the host threads (0 for a
+        host-only pool; at least one worker of either kind is required).
+    hybrid_pallas : back the ``"hybrid"`` device workers with the Pallas
+        grid-over-batch kernels instead of the vmapped dense drain.
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     run_kw = dict(max_rounds=max_rounds, devices=devices,
-                  interpret=interpret, n_workers=n_workers)
+                  interpret=interpret, n_workers=n_workers,
+                  n_device_workers=n_device_workers,
+                  hybrid_pallas=hybrid_pallas, cost_model=cost_model)
 
     if engine != "auto":
         cfg = EngineConfig(engine, tile, queue_capacity, drain_batch)
@@ -722,7 +949,8 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
                  if c.queue_capacity is not None else c for c in cands]
     if drain_batch is not None:
         cands = [dataclasses.replace(c, drain_batch=drain_batch)
-                 if c.engine in ("tiled", "tiled-pallas", "shard_map-tiled")
+                 if c.engine in ("tiled", "tiled-pallas", "shard_map-tiled",
+                                 "hybrid")
                  else c for c in cands]
 
     if autotune:

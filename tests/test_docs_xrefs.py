@@ -1,0 +1,99 @@
+"""Docs cross-reference check: every `DESIGN.md §x` citation and every
+`docs/ENGINES.md` reference found in the tree must resolve to a real
+heading/file, so code comments and docs cannot silently drift apart.
+
+Scope: all .py and .md files under src/, tests/, benchmarks/, examples/,
+docs/ plus the top-level .md files.  Only references that *name the
+document* are checked (`DESIGN.md §2.3`, `docs/ENGINES.md#anchor`);
+bare `§4` citations refer to the source paper and are left alone.
+"""
+
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "docs")
+# DESIGN.md §2.3 / DESIGN.md §2.1/§2.3 (slash-chained citations)
+_DESIGN_REF = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)*(?:/§\d+(?:\.\d+)*)*)")
+_DESIGN_HEADING = re.compile(r"^#{1,6}\s+§(\d+(?:\.\d+)*)\b", re.M)
+# markdown headings also allow a literal-section prefix, e.g. "## §BENCH ..."
+_ENGINES_ANCHOR_REF = re.compile(r"docs/ENGINES\.md#([A-Za-z0-9\-_]+)")
+_ENGINES_FILE_REF = re.compile(r"docs/ENGINES\.md")
+
+
+def _scan_files():
+    self_path = os.path.abspath(__file__)
+    for d in _SCAN_DIRS:
+        for dirpath, _, names in os.walk(os.path.join(ROOT, d)):
+            for n in names:
+                path = os.path.join(dirpath, n)
+                # skip this checker itself: its docstrings hold pattern
+                # examples, not real references
+                if n.endswith((".py", ".md")) and path != self_path:
+                    yield path
+    for n in os.listdir(ROOT):
+        if n.endswith(".md"):
+            yield os.path.join(ROOT, n)
+
+
+def _read(path):
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def _github_anchor(heading: str) -> str:
+    """GitHub-style markdown anchor slug for a heading line."""
+    text = heading.strip().lstrip("#").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def test_design_section_citations_resolve():
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    headings = set(_DESIGN_HEADING.findall(design))
+    assert headings, "DESIGN.md has no §-numbered headings?"
+    missing = []
+    for path in _scan_files():
+        if path.endswith("DESIGN.md"):
+            continue
+        for m in _DESIGN_REF.finditer(_read(path)):
+            for sec in m.group(1).split("/§"):
+                if sec not in headings:
+                    missing.append((os.path.relpath(path, ROOT), sec))
+    assert not missing, (
+        f"citations of nonexistent DESIGN.md sections: {missing}; "
+        f"existing sections: {sorted(headings)}")
+
+
+def test_engines_md_references_resolve():
+    engines_path = os.path.join(ROOT, "docs", "ENGINES.md")
+    assert os.path.exists(engines_path), "docs/ENGINES.md is missing"
+    anchors = {_github_anchor(line)
+               for line in _read(engines_path).splitlines()
+               if line.startswith("#")}
+    referenced = False
+    missing = []
+    for path in _scan_files():
+        if os.path.samefile(path, engines_path):
+            continue
+        text = _read(path)
+        if _ENGINES_FILE_REF.search(text):
+            referenced = True
+        for m in _ENGINES_ANCHOR_REF.finditer(text):
+            if m.group(1).lower() not in anchors:
+                missing.append((os.path.relpath(path, ROOT), m.group(1)))
+    assert referenced, "nothing links to docs/ENGINES.md (README should)"
+    assert not missing, (
+        f"references to nonexistent docs/ENGINES.md anchors: {missing}; "
+        f"existing anchors: {sorted(anchors)}")
+
+
+def test_every_engine_has_a_reference_section():
+    """docs/ENGINES.md must stay complete: one `## \\`engine\\`` section per
+    member of repro.solve.ENGINES."""
+    from repro.solve import ENGINES
+    text = _read(os.path.join(ROOT, "docs", "ENGINES.md"))
+    missing = [e for e in ENGINES
+               if not re.search(rf"^##\s+`{re.escape(e)}`", text, re.M)]
+    assert not missing, f"docs/ENGINES.md lacks sections for: {missing}"

@@ -88,7 +88,8 @@ def test_auto_picks_tiled_for_sparse_seeds():
     stats_in = collect_input_stats(op, state)
     assert stats_in.density < 0.05            # the premise: sparse wavefront
     _, stats = solve(op, state, engine="auto")
-    assert stats.engine in ("tiled", "tiled-pallas", "scheduler")
+    # any member of the tiled hierarchy (incl. its cooperative consumer)
+    assert stats.engine in ("tiled", "tiled-pallas", "scheduler", "hybrid")
 
 
 def test_auto_picks_dense_for_near_full_frontier():
