@@ -1,0 +1,94 @@
+"""Per-op solve time across engines: the op-catalog benchmark.
+
+The plugin API's promise (DESIGN.md §2.4) is that every registered op rides
+every engine; this benchmark makes the promise measurable: for each op in
+``repro.ops.list_ops()`` it times a representative sparse-wavefront input
+through the frontier / tiled / scheduler / hybrid engines, back to back in
+one process, and derives per-row ``speedup_vs_frontier`` (>= 1.0 means the
+engine beat the dense baseline on that op).
+
+``--json [PATH]`` writes the records to ``BENCH_ops.json`` (schema:
+EXPERIMENTS.md §BENCH JSON schema); ``--smoke`` shrinks to the CI profile
+(256², frontier + tiled only, single timed iteration).  CPU-host caveat
+applies (EXPERIMENTS.md): magnitudes calibrate the CPU backend; the
+cross-op/cross-engine *shape* is the reproducible claim.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (bench_argparser, edt_state, fill_state,
+                               label_state, morph_state, record, timeit,
+                               write_json)
+from repro.solve import solve
+
+DEFAULT_JSON = "BENCH_ops.json"
+
+# One representative sparse-wavefront workload per registered op.
+WORKLOADS = {
+    "morph": lambda size: morph_state(size, coverage=1.0, seed=0,
+                                      marker_kind="seeded"),
+    "edt": lambda size: edt_state(size, coverage=0.9, seed=0),
+    "fill_holes": lambda size: fill_state(size, coverage=0.5, seed=0),
+    "label": lambda size: label_state(size, coverage=0.55, seed=0),
+}
+
+ENGINE_KW = {
+    "frontier": {},
+    "tiled": dict(tile=128, queue_capacity=64, drain_batch=4),
+    "scheduler": dict(tile=128, n_workers=2),
+    "hybrid": dict(tile=128, n_workers=2, n_device_workers=1, drain_batch=4),
+}
+
+
+def bench_op(records: list, op_name: str, size: int, engines, iters: int = 3,
+             tile: int = 128):
+    op, state = WORKLOADS[op_name](size)
+    base = f"ops/{op_name}/size={size}/tile={tile}"
+    t_frontier = None
+    for engine in engines:
+        kw = dict(ENGINE_KW[engine])
+        for k in ("tile",):
+            if k in kw:
+                kw[k] = tile
+        last = {}
+
+        def run():
+            out, last["stats"] = solve(op, state, engine=engine, **kw)
+            return out
+
+        t = timeit(run, iters=iters)
+        s = last["stats"]
+        derived = dict(engine=engine, rounds=s.rounds,
+                       tiles=s.tiles_processed, sources=s.sources_processed)
+        if engine == "frontier":
+            t_frontier = t
+        elif t_frontier is not None:
+            derived["speedup_vs_frontier"] = round(t_frontier / t, 2)
+        if kw.get("tile"):
+            derived["tile"] = kw["tile"]
+        if kw.get("drain_batch"):
+            derived["drain_batch"] = kw["drain_batch"]
+        record(records, f"{base}/{engine}", t, **derived)
+
+
+def main(size: int = 1024, json_path: str | None = None, smoke: bool = False):
+    records: list = []
+    if smoke:
+        # CI profile: every op, the two cheap engines, one timed iteration.
+        for op_name in WORKLOADS:
+            bench_op(records, op_name, min(size, 256),
+                     engines=("frontier", "tiled"), iters=1, tile=64)
+    else:
+        for op_name in WORKLOADS:
+            bench_op(records, op_name, size,
+                     engines=("frontier", "tiled", "scheduler", "hybrid"))
+    write_json(records, json_path)
+    return records
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(
+        DEFAULT_JSON, size=1024,
+        smoke_help="CI profile: 256², frontier+tiled only, 1 timed iteration")
+    a = ap.parse_args()
+    main(a.size, json_path=a.json, smoke=a.smoke)

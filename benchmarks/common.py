@@ -93,3 +93,21 @@ def edt_state(size: int, coverage: float, seed: int = 0):
     fg = bg_disks(size, size, min(coverage, 0.97), n_disks=6, seed=seed)
     op = EdtOp(connectivity=8)
     return op, op.make_state(jnp.asarray(fg))
+
+
+def fill_state(size: int, coverage: float = 0.5, seed: int = 0):
+    """Blob image whose background splits into border-reachable sea plus
+    enclosed holes — the fill-holes regime (border flood depth O(size))."""
+    from repro.fill.ops import FillHolesOp
+    img = binary_blobs(size, size, coverage, seed)
+    op = FillHolesOp()
+    return op, op.make_state(jnp.asarray(img))
+
+
+def label_state(size: int, coverage: float = 0.55, seed: int = 0):
+    """Blob foreground with many components of mixed scales — the labeling
+    regime (per-component flood depth ~ component diameter)."""
+    from repro.label.ops import LabelPropagationOp
+    fg = binary_blobs(size, size, coverage, seed)
+    op = LabelPropagationOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(fg))

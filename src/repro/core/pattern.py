@@ -18,10 +18,16 @@ A `PropagationOp` owns:
   * ``pad_value``  — pytree of scalars: *neutral* halo fill per leaf.  A cell
     holding its neutral value can never propagate (morph: dtype-min; EDT:
     far sentinel coords).
+  * ``make_state(*inputs)``  — state pytree from the op's raw input(s).
   * ``init_frontier(state)`` — initial wavefront (paper line 3).
   * ``round(state, frontier)`` — one bulk propagation round (lines 5-12).
   * ``stable_leaves``          — names of leaves that never change (masks),
     used by engines to skip writeback work.
+
+Ops become engine-reachable *by name* through the `repro.ops` plugin
+registry: an `OpSpec` (DESIGN.md §2.4, docs/OPS.md) bundles the op factory
+with its per-engine plug points (Pallas tile solvers, scheduler merge) and
+cost-model hints, so `solve("edt", image)` needs no engine edits per op.
 """
 
 from __future__ import annotations
@@ -75,6 +81,12 @@ class PropagationOp:
         return ("valid",)
 
     # -- interface ---------------------------------------------------------
+    def make_state(self, *inputs, **kw):
+        """State pytree from the op's natural raw input(s) (op-specific
+        signature; the registry's ``OpSpec.build_state`` delegates here
+        unless the spec overrides it)."""
+        raise NotImplementedError
+
     def init_frontier(self, state) -> jnp.ndarray:
         raise NotImplementedError
 

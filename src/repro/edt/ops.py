@@ -112,13 +112,12 @@ def edt(fg, *, connectivity: int = 8, engine: str = "auto", **solve_kw):
 
     ``fg``: bool (H, W), True = foreground; distances are to the nearest
     background pixel.  Returns (squared distance map, SolveStats); see
-    repro.solve.ENGINES for the engine names.
+    repro.solve.ENGINES for the engine names.  Thin registry-backed
+    wrapper over the ``"edt"`` :class:`~repro.ops.OpSpec`.
     """
-    from repro.solve import solve
-    op = EdtOp(connectivity=connectivity)
-    out, stats = solve(op, op.make_state(jnp.asarray(fg)), engine=engine,
-                       **solve_kw)
-    return distance_map(out), stats
+    from repro.ops import run_op
+    return run_op("edt", jnp.asarray(fg), connectivity=connectivity,
+                  engine=engine, **solve_kw)
 
 
 def distance_map(state) -> jnp.ndarray:

@@ -1,0 +1,78 @@
+"""Binary fill-holes as a *derived* IWPP op (paper §2's third instance).
+
+Hole filling is border-seeded morphological reconstruction of the
+complement: reconstruct, inside the background (``~image``), from seeds on
+the image border; background the reconstruction never reaches has no path
+to the border — i.e. it is a hole.  ``FillHolesOp`` therefore **derives
+from** :class:`~repro.morph.ops.MorphReconstructOp` and adds no propagation
+code at all: it only swaps in a state builder (complement mask + border
+marker) and a result extractor (``J == 0``).  Its registry spec
+(`repro/ops/builtin.py`) reuses the morph Pallas tile solvers *through the
+registry* (``get_op("morph").pallas_solver``) — the spec-level composition
+the plugin API exists for (DESIGN.md §2.4, docs/OPS.md).
+
+``connectivity`` is the connectivity of the **background flood** (the
+complement), matching scipy's structure-element convention: scipy's default
+cross structure == ``connectivity=4``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.morph.ops import MorphReconstructOp
+
+
+@dataclasses.dataclass(frozen=True)
+class FillHolesOp(MorphReconstructOp):
+    """Border-seeded reconstruction of the complement (binary fill-holes)."""
+
+    connectivity: int = 4
+
+    def make_state(self, image, valid=None):
+        """State from a boolean image (True = foreground).
+
+        The morph state leaves get: ``I`` = the full complement as int32
+        (1 on background — the reconstruction mask; invalid cells keep
+        their complement value so :meth:`filled` can report the *input*
+        there, while the valid mask keeps them out of the flood), ``J`` =
+        1 only on *valid border* background pixels (the seeds).  ``J <= I``
+        holds by construction, so the inherited round/frontier/pad
+        machinery applies unchanged.
+        """
+        img = jnp.asarray(image, bool)
+        H, W = img.shape
+        if valid is None:
+            valid = jnp.ones((H, W), dtype=bool)
+        border = jnp.zeros((H, W), dtype=bool)
+        border = border.at[0, :].set(True).at[-1, :].set(True)
+        border = border.at[:, 0].set(True).at[:, -1].set(True)
+        I = (~img).astype(jnp.int32)
+        J = ((~img) & valid & border).astype(jnp.int32)
+        return {"J": J, "I": I, "valid": valid}
+
+    def filled(self, state) -> jnp.ndarray:
+        """Extract the filled image from a converged state: foreground
+        (``I == 0``) plus every *valid* background pixel the border flood
+        never reached (``J == 0`` — a hole).  Invalid cells report the
+        input image value (foreground as-is, background never filled),
+        honoring the engines' invalid-restore contract at the user-facing
+        surface too."""
+        return (state["I"] == 0) | ((state["J"] == 0) & state["valid"])
+
+
+def fill_holes(image, *, connectivity: int = 4, engine: str = "auto",
+               **solve_kw):
+    """One-call binary hole filling through the solve() dispatcher.
+
+    ``image``: bool (H, W), True = foreground.  ``connectivity`` is the
+    background-flood connectivity (4 == scipy's default structure).
+    Returns (filled bool image, SolveStats).  Thin registry-backed wrapper:
+    equivalent to ``solve("fill_holes", image, ...)`` plus the spec's
+    ``finalize``.
+    """
+    from repro.ops import run_op
+    return run_op("fill_holes", image, connectivity=connectivity,
+                  engine=engine, **solve_kw)

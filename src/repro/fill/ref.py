@@ -1,0 +1,51 @@
+"""Sequential reference for binary hole filling (paper §2: fill-holes is
+named as a further IWPP instance alongside reconstruction and EDT).
+
+``fill_holes_bfs`` — the definitional algorithm: flood-fill the background
+from the image border (a FIFO wavefront over the complement), then mark
+every background pixel the flood never reached as a hole.  This is exactly
+``scipy.ndimage.binary_fill_holes`` (same structure-element convention:
+``connectivity`` is the connectivity of the *background* flood — scipy's
+default cross structure corresponds to ``connectivity=4``), kept here
+scipy-free so examples and the conformance suite run on the bare runtime
+deps.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.morph.ref import N4, N8
+
+
+def fill_holes_bfs(image: np.ndarray, connectivity: int = 4) -> np.ndarray:
+    """Fill holes of a boolean image; returns the filled boolean image.
+
+    A *hole* is a background component with no path (through background,
+    under ``connectivity``) to the image border.
+    """
+    img = np.asarray(image, bool)
+    nbrs = N4 if connectivity == 4 else N8
+    H, W = img.shape
+    reached = np.zeros((H, W), bool)
+    q: deque = deque()
+    for r in range(H):
+        for c in (0, W - 1):
+            if not img[r, c] and not reached[r, c]:
+                reached[r, c] = True
+                q.append((r, c))
+    for c in range(W):
+        for r in (0, H - 1):
+            if not img[r, c] and not reached[r, c]:
+                reached[r, c] = True
+                q.append((r, c))
+    while q:
+        r, c = q.popleft()
+        for dr, dc in nbrs:
+            rr, cc = r + dr, c + dc
+            if 0 <= rr < H and 0 <= cc < W and not img[rr, cc] and not reached[rr, cc]:
+                reached[rr, cc] = True
+                q.append((rr, cc))
+    return img | ~reached

@@ -3,9 +3,11 @@
 * dtype policy: TPU vector units want >=int16 payloads; uint8 images are
   upcast to int32 for the kernel and cast back (exactness preserved — the
   ops are min/max/compare).
-* `tile_solver_morph` / `tile_solver_edt` adapt the kernels to the tiled
-  engine's `tile_solver` interface (block pytree -> (block pytree,
-  unconverged)); the `*_batched` variants adapt the grid-over-batch kernels
+* `tile_solver_morph` / `tile_solver_edt` / `tile_solver_label` adapt the
+  kernels to the tiled engine's `tile_solver` interface (block pytree ->
+  (block pytree, unconverged)) — the label solver is the *morph kernel
+  parametrized* (mask = fg ? LABEL_CAP : 0), the registry-level kernel
+  reuse of DESIGN.md §2.4; the `*_batched` variants adapt the grid-over-batch kernels
   to the engine's `batched_tile_solver` interface (leaves carry a leading
   (K,) batch dim — the paper's parallel queue drain, DESIGN.md §2).  The
   same batched contract backs the hybrid engine's device workers
@@ -31,6 +33,7 @@ import jax.numpy as jnp
 from repro.kernels.edt_tile import edt_tile_solve, edt_tile_solve_batched
 from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_batched
 from repro.kernels.raster_scan import raster_down
+from repro.label.ops import LABEL_CAP
 
 DEFAULT_MAX_ITERS = 1024
 
@@ -84,6 +87,48 @@ def tile_solver_morph_batched(connectivity: int = 8, interpret: bool = True,
                                              interpret, max_iters)
         out = dict(blocks)
         out["J"] = J
+        return out, iters >= max_iters
+    return solver
+
+
+# LABEL_CAP is an op-level invariant (label_seeds raises above it); here
+# it is the "mask" plane value when the morph kernel is parametrized into
+# the label solver: min(LABEL_CAP, ·) is then the identity on foreground,
+# and 0 clamps background — the masked-max label update.
+def _label_as_morph(blocks):
+    """Express a label block in morph-kernel terms: J = lab, I = fg-mask."""
+    I = jnp.where(blocks["fg"], jnp.int32(LABEL_CAP), jnp.int32(0))
+    return blocks["lab"], I
+
+
+def tile_solver_label(connectivity: int = 8, interpret: bool = True,
+                      max_iters: int = DEFAULT_MAX_ITERS):
+    """Adapter: the *morph* Pallas kernel, parametrized into the label op's
+    masked-max update (DESIGN.md §2.4 — new ops reuse kernels through the
+    registry instead of shipping their own)."""
+    def solver(block):
+        J, I = _label_as_morph(block)
+        lab, iters = morph_tile_solve(J, I, block["valid"],
+                                      connectivity=connectivity,
+                                      max_iters=max_iters,
+                                      interpret=interpret)
+        out = dict(block)
+        out["lab"] = lab
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_label_batched(connectivity: int = 8, interpret: bool = True,
+                              max_iters: int = DEFAULT_MAX_ITERS):
+    """Batched (K, T+2, T+2) variant over the morph grid-over-batch kernel."""
+    def solver(blocks):
+        J, I = _label_as_morph(blocks)
+        lab, iters = morph_tile_solve_batched(J, I, blocks["valid"],
+                                              connectivity=connectivity,
+                                              max_iters=max_iters,
+                                              interpret=interpret)
+        out = dict(blocks)
+        out["lab"] = lab
         return out, iters >= max_iters
     return solver
 

@@ -1,0 +1,115 @@
+"""Connected-component labeling as an IWPP `PropagationOp`.
+
+The paper's point (§2, and the MIC follow-up, Gomes & Teodoro 2016) is that
+IWPP instances differ only in the propagation condition.  Labeling is the
+max-label flood fill: seed every foreground pixel with a unique label (its
+linear index + 1) and propagate the **maximum** label within each
+foreground-connected region:
+
+    lab'(q) = max(lab(q), max_{p in N(q) & frontier & fg} lab(p))   if fg(q)
+
+Updates only ever increase ``lab`` and max is commutative — the IWPP
+contract — so every engine converges to the same fixed point: each
+component uniformly holds the max linear index among its pixels
+(bit-comparable to ``repro.label.ref.label_wavefront``; compare to scipy
+up to relabeling with ``repro.label.ref.same_components``).
+
+State pytree: {"lab": int32 (H, W) labels (mutable), "fg": bool (static
+foreground mask), "valid": bool (static)}.  Background keeps ``lab == 0``
+(the neutral value: 0 can never beat a real label, so the `pad_value`
+halo/padding fill can never source propagation).
+
+The Pallas tile solver for this op is the **morph kernel, parametrized**
+(`kernels/ops.py: tile_solver_label`): with mask ``I = fg ? LABEL_CAP : 0``
+the morph update ``min(I, max(J, max_nbr J))`` *is* the masked-max label
+update — the registry-level kernel reuse DESIGN.md §2.4 describes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pattern import PropagationOp, shift2d
+
+
+# Upper bound on any label value.  The Pallas label solver runs the morph
+# kernel with mask plane `fg ? LABEL_CAP : 0`, so a seed above the cap
+# would be silently clamped there (collapsing distinct components) while
+# the dense engines would not — hence the hard guard in label_seeds.
+LABEL_CAP = 1 << 30
+
+
+def label_seeds(fg: jnp.ndarray) -> jnp.ndarray:
+    """Unique int32 seed labels: linear index + 1 on fg, 0 elsewhere."""
+    H, W = fg.shape
+    if H * W + 1 > LABEL_CAP:
+        raise ValueError(
+            f"grid {H}x{W} needs labels up to {H * W + 1}, above "
+            f"LABEL_CAP={LABEL_CAP} (the Pallas label solver's mask value); "
+            "label propagation is limited to grids below 2^30 pixels")
+    r = jax.lax.broadcasted_iota(jnp.int32, (H, W), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (H, W), 1)
+    return jnp.where(fg, r * jnp.int32(W) + c + 1, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelPropagationOp(PropagationOp):
+    """Monotone max-label flood fill (connected-component labeling)."""
+
+    @property
+    def static_leaves(self):
+        return ("fg", "valid")
+
+    def make_state(self, fg, valid=None):
+        """fg: bool (H, W), True = foreground to be labeled.
+
+        Labels are *global* linear indices assigned here once, so tiled and
+        sharded engines — which see local blocks — propagate globally
+        meaningful values (the same reason EDT carries coordinate leaves).
+        """
+        fg = jnp.asarray(fg, bool)
+        if valid is None:
+            valid = jnp.ones(fg.shape, dtype=bool)
+        return {"lab": label_seeds(fg & valid), "fg": fg, "valid": valid}
+
+    def pad_value(self, state):
+        return {"lab": jnp.int32(0), "fg": False, "valid": False}
+
+    def init_frontier(self, state) -> jnp.ndarray:
+        """p is queued iff it can still improve some neighbor: a foreground
+        neighbor q with lab(q) < lab(p) (the FH queue condition with the
+        morph propagation test swapped for the label one)."""
+        lab, fg = state["lab"], state["fg"]
+        can = jnp.zeros(lab.shape, dtype=bool)
+        for dr, dc in self.offsets:
+            lq = shift2d(lab, dr, dc, jnp.int32(0))
+            fq = shift2d(fg & state["valid"], dr, dc, False)
+            can = can | (fq & (lq < lab))
+        return can & fg & state["valid"]
+
+    def round(self, state, frontier) -> Tuple[dict, jnp.ndarray]:
+        lab, fg = state["lab"], state["fg"]
+        src = jnp.where(frontier, lab, 0)
+        cand = jnp.zeros_like(lab)
+        for dr, dc in self.offsets:
+            cand = jnp.maximum(cand, shift2d(src, dr, dc, jnp.int32(0)))
+        new = jnp.where(fg, jnp.maximum(lab, cand), lab)
+        changed = (new > lab) & state["valid"]
+        return {"lab": new, "fg": fg, "valid": state["valid"]}, changed
+
+
+def label(fg, *, connectivity: int = 8, engine: str = "auto", **solve_kw):
+    """One-call connected-component labeling through solve().
+
+    ``fg``: bool (H, W), True = foreground.  Returns (int32 label map with
+    per-component max-linear-index labels, SolveStats); compact to 1..K
+    with ``repro.label.ref.relabel_sequential`` if sequential ids are
+    wanted.  Thin registry-backed wrapper over ``solve("label", fg, ...)``.
+    """
+    from repro.ops import run_op
+    return run_op("label", fg, connectivity=connectivity, engine=engine,
+                  **solve_kw)

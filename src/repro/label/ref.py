@@ -1,0 +1,73 @@
+"""Sequential reference for connected-component labeling as IWPP.
+
+``label_wavefront`` — queue-based flood fill that assigns every foreground
+component the **maximum linear index** (``r * W + c + 1``) among its
+pixels.  That is exactly the fixed point of
+:class:`repro.label.ops.LabelPropagationOp`'s monotone max-label
+propagation, so engines must match it *bit-for-bit* (unlike scipy's
+``ndimage.label``, whose label values depend on scan order — compare to
+scipy with :func:`same_components`).
+
+``relabel_sequential`` — compact arbitrary positive labels to 1..K in
+first-appearance order (presentation helper; the IWPP fixed point itself
+keeps the max-index labels).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.morph.ref import N4, N8
+
+
+def label_wavefront(fg: np.ndarray, connectivity: int = 8) -> np.ndarray:
+    """Max-linear-index component labels; background = 0."""
+    img = np.asarray(fg, bool)
+    nbrs = N8 if connectivity == 8 else N4
+    H, W = img.shape
+    out = np.zeros((H, W), dtype=np.int32)
+    seen = np.zeros((H, W), bool)
+    for r in range(H):
+        for c in range(W):
+            if img[r, c] and not seen[r, c]:
+                comp = [(r, c)]
+                seen[r, c] = True
+                q: deque = deque(comp)
+                while q:
+                    cr, cc = q.popleft()
+                    for dr, dc in nbrs:
+                        rr, cc2 = cr + dr, cc + dc
+                        if (0 <= rr < H and 0 <= cc2 < W
+                                and img[rr, cc2] and not seen[rr, cc2]):
+                            seen[rr, cc2] = True
+                            comp.append((rr, cc2))
+                            q.append((rr, cc2))
+                lab = max(rr * W + cc2 + 1 for rr, cc2 in comp)
+                for rr, cc2 in comp:
+                    out[rr, cc2] = lab
+    return out
+
+
+def relabel_sequential(labels: np.ndarray) -> np.ndarray:
+    """Map positive labels to 1..K in first-appearance (raster) order."""
+    lab = np.asarray(labels)
+    out = np.zeros_like(lab, dtype=np.int32)
+    mapping: dict = {}
+    flat, oflat = lab.ravel(), out.ravel()
+    for i, v in enumerate(flat):
+        if v > 0:
+            oflat[i] = mapping.setdefault(int(v), len(mapping) + 1)
+    return out
+
+
+def same_components(a: np.ndarray, b: np.ndarray) -> bool:
+    """Component-membership equality up to relabeling: both labelings have
+    the same support and induce the same partition of it (the equivalence
+    scipy comparison needs — scipy's label *values* are scan-order
+    artifacts)."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape or not np.array_equal(a > 0, b > 0):
+        return False
+    return np.array_equal(relabel_sequential(a), relabel_sequential(b))

@@ -86,16 +86,17 @@ def reconstruct(marker, mask, *, connectivity: int = 8, engine: str = "auto",
     Optionally runs ``n_sweeps`` FH raster/anti-raster init passes first
     (paper Table 1's knob: deeper init -> smaller irregular wavefront), then
     dispatches to the engine picked by ``engine`` (see repro.solve.ENGINES).
-    Returns (reconstructed J, SolveStats).
+    Returns (reconstructed J, SolveStats).  Thin registry-backed wrapper:
+    op construction, state building and result extraction all go through
+    the ``"morph"`` :class:`~repro.ops.OpSpec`.
     """
-    from repro.solve import solve
-    op = MorphReconstructOp(connectivity=connectivity)
+    from repro.ops import run_op
     J = jnp.asarray(marker)
     I = jnp.asarray(mask)
     if n_sweeps:
         J = fh_init(J, I, n_sweeps=n_sweeps)
-    out, stats = solve(op, op.make_state(J, I), engine=engine, **solve_kw)
-    return out["J"], stats
+    return run_op("morph", J, I, connectivity=connectivity, engine=engine,
+                  **solve_kw)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,19 @@
+"""`repro.ops` — the first-class operation plugin API (DESIGN.md §2.4).
+
+Public surface:
+
+* :class:`~repro.ops.registry.OpSpec` — declarative op description (state
+  builder, result extractor, Pallas solver factories, scheduler merge,
+  cost-model hints, conformance example).
+* :func:`~repro.ops.registry.register_op` / :func:`get_op` /
+  :func:`list_ops` / :func:`spec_for` — the registry.
+* Importing this package registers the built-in catalog (morph, edt,
+  fill_holes, label) — see ``repro/ops/builtin.py`` and docs/OPS.md.
+"""
+
+from repro.ops.registry import (OpSpec, amend_op_class,  # noqa: F401
+                                default_scheduler_merge, get_op, list_ops,
+                                on_spec_change, register_op, run_op, spec_for)
+from repro.ops.builtin import ensure_builtin_ops  # noqa: F401
+
+ensure_builtin_ops()

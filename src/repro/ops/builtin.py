@@ -1,0 +1,167 @@
+"""Built-in `OpSpec` registrations: the op catalog shipped with the repo.
+
+One function per op builds and registers its spec; :func:`ensure_builtin_ops`
+is idempotent and is called by ``repro.solve`` (and ``repro.ops``) at import
+time, so ``list_ops()`` is populated before any dispatch happens.  The specs
+here are the reference examples for docs/OPS.md "add your own op":
+
+* ``morph``       — grayscale reconstruction-by-dilation (paper §2.1); the
+                    cost model's reference op (weights 1.0/4B).
+* ``edt``         — euclidean distance transform via Voronoi pointers
+                    (paper Alg. 3/6); coordinate-aware scheduler merge,
+                    2 int32 mutable planes, ~2x round arithmetic.
+* ``fill_holes``  — border-seeded reconstruction of the complement: a
+                    *derived* op whose spec reuses the morph Pallas solvers
+                    **through the registry** (spec-level composition).
+* ``label``       — connected-component labeling as monotone max-label
+                    flood fill; Pallas solver = the morph kernel
+                    parametrized (`kernels/ops.py: tile_solver_label`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ops.registry import OpSpec, get_op, register_op
+
+_REGISTERED = False
+
+
+def _rng_valid(rng, shape, frac: float = 0.85):
+    """Random non-rectangular valid mask for conformance examples."""
+    import jax.numpy as jnp
+    v = rng.random(shape) < frac
+    # keep the mask non-degenerate: at least one valid pixel
+    v[shape[0] // 2, shape[1] // 2] = True
+    return jnp.asarray(v)
+
+
+def _register_morph():
+    import jax.numpy as jnp
+    from repro.kernels.ops import tile_solver_morph, tile_solver_morph_batched
+    from repro.morph.ops import MorphReconstructOp
+
+    def example_state(rng, shape):
+        op = MorphReconstructOp(connectivity=8)
+        mask = rng.integers(0, 200, shape).astype(np.int32)
+        marker = np.where(rng.random(shape) < 0.03, mask, 0).astype(np.int32)
+        return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask),
+                                 _rng_valid(rng, shape))
+
+    register_op("morph", OpSpec(
+        op_cls=MorphReconstructOp,
+        factory=MorphReconstructOp,
+        finalize=lambda op, out: out["J"],
+        pallas_solver=lambda op, interpret, max_iters:
+            tile_solver_morph(op.connectivity, interpret, max_iters),
+        pallas_batch_solver=lambda op, interpret, max_iters:
+            tile_solver_morph_batched(op.connectivity, interpret, max_iters),
+        # default elementwise-max merge; single int32 mutable plane (J) and
+        # the 8-neighbor max round define the cost model's unit weights.
+        example_state=example_state,
+        bytes_per_pixel=4.0, round_cost_weight=1.0,
+        doc="grayscale morphological reconstruction-by-dilation (paper §2.1)"))
+
+
+def _register_edt():
+    import jax.numpy as jnp
+    from repro.edt.ops import EdtOp, distance_map
+    from repro.kernels.ops import tile_solver_edt, tile_solver_edt_batched
+
+    def merge_factory(op):
+        def merge(origin, old_inner, new_inner):
+            # Keep, per pixel, whichever Voronoi pointer is closer; the
+            # host-scheduler analogue of Algorithm 6's atomicCAS retry.
+            r0, c0 = origin
+            vo = old_inner["vr"].astype(np.int64)
+            vn = new_inner["vr"].astype(np.int64)
+            T_h, T_w = vo.shape[-2:]
+            rr = (r0 + np.arange(T_h))[:, None]
+            cc = (c0 + np.arange(T_w))[None, :]
+            d_old = (rr - vo[0]) ** 2 + (cc - vo[1]) ** 2
+            d_new = (rr - vn[0]) ** 2 + (cc - vn[1]) ** 2
+            take = d_new < d_old
+            return {"vr": np.where(take[None], new_inner["vr"], old_inner["vr"])}
+        return merge
+
+    def example_state(rng, shape):
+        op = EdtOp(connectivity=8)
+        fg = rng.random(shape) < 0.9
+        return op, op.make_state(jnp.asarray(fg), _rng_valid(rng, shape))
+
+    register_op("edt", OpSpec(
+        op_cls=EdtOp,
+        factory=EdtOp,
+        finalize=lambda op, out: distance_map(out),
+        pallas_solver=lambda op, interpret, max_iters:
+            tile_solver_edt(op.connectivity, interpret, max_iters),
+        pallas_batch_solver=lambda op, interpret, max_iters:
+            tile_solver_edt_batched(op.connectivity, interpret, max_iters),
+        scheduler_merge=merge_factory,
+        example_state=example_state,
+        # mutable payload = the (2, H, W) int32 vr pointer; one round does
+        # 8 squared-distance computes vs morph's 8 maxes.
+        bytes_per_pixel=8.0, round_cost_weight=2.0,
+        doc="squared euclidean distance transform (Danielsson/paper Alg. 3)"))
+
+
+def _register_fill_holes():
+    import jax.numpy as jnp
+    from repro.fill.ops import FillHolesOp
+
+    def example_state(rng, shape):
+        op = FillHolesOp(connectivity=4)
+        img = rng.random(shape) < 0.45
+        return op, op.make_state(jnp.asarray(img), _rng_valid(rng, shape))
+
+    register_op("fill_holes", OpSpec(
+        op_cls=FillHolesOp,
+        factory=FillHolesOp,
+        finalize=lambda op, out: op.filled(out),
+        # Spec-level composition: a derived op reuses its parent's Pallas
+        # kernels *through the registry* — fill-holes state is literally a
+        # morph state (J/I/valid), so the morph solvers apply verbatim.
+        pallas_solver=lambda op, interpret, max_iters:
+            get_op("morph").pallas_solver(op, interpret, max_iters),
+        pallas_batch_solver=lambda op, interpret, max_iters:
+            get_op("morph").pallas_batch_solver(op, interpret, max_iters),
+        example_state=example_state,
+        bytes_per_pixel=4.0, round_cost_weight=1.0,
+        doc="binary fill-holes = border-seeded reconstruction of the "
+            "complement (paper §2's named further IWPP instance)"))
+
+
+def _register_label():
+    import jax.numpy as jnp
+    from repro.kernels.ops import tile_solver_label, tile_solver_label_batched
+    from repro.label.ops import LabelPropagationOp
+
+    def example_state(rng, shape):
+        op = LabelPropagationOp(connectivity=8)
+        fg = rng.random(shape) < 0.55
+        return op, op.make_state(jnp.asarray(fg), _rng_valid(rng, shape))
+
+    register_op("label", OpSpec(
+        op_cls=LabelPropagationOp,
+        factory=LabelPropagationOp,
+        finalize=lambda op, out: out["lab"],
+        pallas_solver=lambda op, interpret, max_iters:
+            tile_solver_label(op.connectivity, interpret, max_iters),
+        pallas_batch_solver=lambda op, interpret, max_iters:
+            tile_solver_label_batched(op.connectivity, interpret, max_iters),
+        # default elementwise-max merge: lab is a single monotone-max plane
+        example_state=example_state,
+        bytes_per_pixel=4.0, round_cost_weight=1.0,
+        doc="connected-component labeling as monotone max-label flood fill"))
+
+
+def ensure_builtin_ops() -> None:
+    """Register the built-in op catalog (idempotent)."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    _REGISTERED = True
+    _register_morph()
+    _register_edt()
+    _register_fill_holes()
+    _register_label()

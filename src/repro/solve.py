@@ -31,6 +31,16 @@ input signature, so repeated solves of same-shaped inputs pay nothing.
 Every engine returns the same normalized :class:`SolveStats` record so
 benchmarks and docs can compare engines uniformly.  See DESIGN.md §4 for
 the architecture and README.md for the engine-selection matrix.
+
+Operations plug in through the first-class ``repro.ops`` registry
+(DESIGN.md §2.4, docs/OPS.md): an :class:`~repro.ops.OpSpec` declares the
+op factory, state builder, result extractor, Pallas tile-solver factories,
+the host scheduler's commutative merge, and the cost-model weights.
+``solve()`` accepts either a :class:`PropagationOp` instance or a
+registered op *name* — ``solve("edt", fg_image)`` builds the op and state
+through the spec.  The legacy per-plug-point registrars
+(:func:`register_pallas_solver`, :func:`register_scheduler_merge`) remain
+as shims over the registry.
 """
 
 from __future__ import annotations
@@ -52,6 +62,10 @@ from repro.core.scheduler import ChunkPolicy, DeviceWorker, TileScheduler
 from repro.core.tiles import (active_tiles_from_frontier, default_batched_solver,
                               default_tile_solver, initial_active_tiles,
                               run_tiled)
+# Importing repro.ops registers the built-in op catalog (morph, edt,
+# fill_holes, label) before any dispatch can happen.
+from repro.ops import (amend_op_class, get_op, list_ops, on_spec_change,
+                       spec_for)
 
 ENGINES = ("sweep", "frontier", "tiled", "tiled-pallas", "shard_map",
            "shard_map-tiled", "scheduler", "hybrid", "auto")
@@ -109,88 +123,42 @@ class SolveStats:
 
 
 # ---------------------------------------------------------------------------
-# Engine registries: per-op plug points for the non-generic engines.
+# Op plug points — backed by the repro.ops registry (DESIGN.md §2.4).
+#
+# The three legacy Dict[type, Callable] registries that used to live here
+# (_PALLAS_SOLVERS / _PALLAS_BATCH_SOLVERS / _SCHEDULER_MERGES) are gone:
+# every per-op plug point is a field of the op's OpSpec.  The two functions
+# below are compatibility shims re-exported for callers of the old API.
 # ---------------------------------------------------------------------------
-
-# op class -> factory(op, interpret, max_iters) -> tile_solver for run_tiled
-_PALLAS_SOLVERS: Dict[type, Callable] = {}
-# op class -> factory(op, interpret, max_iters) -> batched_tile_solver for
-# run_tiled (grid-over-batch kernel; absent -> jax.vmap of per-tile solver)
-_PALLAS_BATCH_SOLVERS: Dict[type, Callable] = {}
-# op class -> factory(op) -> merge_block_fn for TileScheduler (None = default
-# elementwise-max merge, valid for any single-plane monotone-max op)
-_SCHEDULER_MERGES: Dict[type, Callable] = {}
 
 
 def register_pallas_solver(op_cls: type, factory: Callable,
                            batched_factory: Optional[Callable] = None) -> None:
-    """Register ``factory(op, interpret, max_iters) -> tile_solver``.
+    """Shim over ``repro.ops``: patch ``OpSpec.pallas_solver`` (and
+    optionally ``pallas_batch_solver``) for ``op_cls``.
 
-    ``max_iters`` is the engine's per-drain iteration bound ((T+2)² — the
-    longest geodesic inside one halo block); solvers must return
-    ``(block, unconverged)`` with ``unconverged`` True when the drain was
-    cut off at the bound, so the engine re-queues instead of silently
-    accepting a partial drain.  ``batched_factory(op, interpret, max_iters)
-    -> batched_tile_solver`` (leaves carry a leading (K,) batch dim) backs
-    the batched drain; without one, the engine falls back to ``jax.vmap``
-    of the per-tile solver.
+    ``factory(op, interpret, max_iters) -> tile_solver``; ``max_iters`` is
+    the engine's per-drain iteration bound ((T+2)² — the longest geodesic
+    inside one halo block); solvers must return ``(block, unconverged)``
+    with ``unconverged`` True when the drain was cut off at the bound, so
+    the engine re-queues instead of silently accepting a partial drain.
+    ``batched_factory(op, interpret, max_iters) -> batched_tile_solver``
+    (leaves carry a leading (K,) batch dim) backs the batched drain;
+    without one, the engine falls back to ``jax.vmap`` of the per-tile
+    solver.  New code should ship a full ``OpSpec`` via
+    :func:`repro.ops.register_op` instead (docs/OPS.md).
     """
-    _PALLAS_SOLVERS[op_cls] = factory
+    fields: Dict[str, Callable] = {"pallas_solver": factory}
     if batched_factory is not None:
-        _PALLAS_BATCH_SOLVERS[op_cls] = batched_factory
+        fields["pallas_batch_solver"] = batched_factory
+    amend_op_class(op_cls, **fields)
 
 
 def register_scheduler_merge(op_cls: type, factory: Callable) -> None:
-    """Register ``factory(op) -> merge_block_fn`` for the host scheduler."""
-    _SCHEDULER_MERGES[op_cls] = factory
-
-
-def _registry_lookup(registry: Dict[type, Callable], op: PropagationOp):
-    for cls in type(op).__mro__:
-        if cls in registry:
-            return registry[cls]
-    return None
-
-
-def _register_builtin_ops():
-    from repro.edt.ops import EdtOp
-    from repro.kernels.ops import (tile_solver_edt, tile_solver_edt_batched,
-                                   tile_solver_morph, tile_solver_morph_batched)
-    from repro.morph.ops import MorphReconstructOp
-
-    register_pallas_solver(
-        MorphReconstructOp,
-        lambda op, interpret, max_iters:
-            tile_solver_morph(op.connectivity, interpret, max_iters),
-        lambda op, interpret, max_iters:
-            tile_solver_morph_batched(op.connectivity, interpret, max_iters))
-    register_pallas_solver(
-        EdtOp,
-        lambda op, interpret, max_iters:
-            tile_solver_edt(op.connectivity, interpret, max_iters),
-        lambda op, interpret, max_iters:
-            tile_solver_edt_batched(op.connectivity, interpret, max_iters))
-
-    # Morph: default elementwise max on "J" is the correct commutative merge.
-    register_scheduler_merge(MorphReconstructOp, lambda op: None)
-
-    def _edt_merge_factory(op):
-        def merge(origin, old_inner, new_inner):
-            # Keep, per pixel, whichever Voronoi pointer is closer; the
-            # host-scheduler analogue of Algorithm 6's atomicCAS retry.
-            r0, c0 = origin
-            vo = old_inner["vr"].astype(np.int64)
-            vn = new_inner["vr"].astype(np.int64)
-            T_h, T_w = vo.shape[-2:]
-            rr = (r0 + np.arange(T_h))[:, None]
-            cc = (c0 + np.arange(T_w))[None, :]
-            d_old = (rr - vo[0]) ** 2 + (cc - vo[1]) ** 2
-            d_new = (rr - vn[0]) ** 2 + (cc - vn[1]) ** 2
-            take = d_new < d_old
-            return {"vr": np.where(take[None], new_inner["vr"], old_inner["vr"])}
-        return merge
-
-    register_scheduler_merge(EdtOp, _edt_merge_factory)
+    """Shim over ``repro.ops``: patch ``OpSpec.scheduler_merge`` for
+    ``op_cls`` (``factory(op) -> merge_block_fn``; returning None selects
+    the scheduler's built-in elementwise-max merge)."""
+    amend_op_class(op_cls, scheduler_merge=factory)
 
 
 # ---------------------------------------------------------------------------
@@ -199,13 +167,21 @@ def _register_builtin_ops():
 
 @dataclasses.dataclass(frozen=True)
 class InputStats:
-    """What the cost model knows about one input (all O(N) probes)."""
+    """What the cost model knows about one input (all O(N) probes).
+
+    ``bytes_per_pixel`` / ``round_cost_weight`` are the *op's* cost hints,
+    copied from its :class:`~repro.ops.OpSpec` by
+    :func:`collect_input_stats` (defaults = the morph reference op).  They
+    let one CostModel price every registered op without per-op branches.
+    """
 
     height: int
     width: int
     n_sources: int                      # initial frontier population
     active_tiles: Dict[int, int]        # tile size -> initially-active tiles
     n_devices: int
+    bytes_per_pixel: float = 4.0        # mutable HBM payload per pixel
+    round_cost_weight: float = 1.0      # per-round compute vs morph's max
 
     @property
     def area(self) -> int:
@@ -237,7 +213,10 @@ def collect_input_stats(op: PropagationOp, state, n_devices: int = 1,
     n_sources = int(jnp.sum(f0))
     active = {t: int(jnp.sum(initial_active_tiles(op, state, t)))
               for t in tiles}
-    return InputStats(H, W, n_sources, active, n_devices)
+    spec = spec_for(op)
+    return InputStats(H, W, n_sources, active, n_devices,
+                      bytes_per_pixel=spec.bytes_per_pixel if spec else 4.0,
+                      round_cost_weight=spec.round_cost_weight if spec else 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -404,9 +383,19 @@ class CostModel:
         block_side = min(stats.height, stats.width) / side
         return max(1.0, stats.depth_est / max(block_side, 1.0))
 
+    # Reference op payload: morph's single int32 mutable plane.  OpSpec cost
+    # hints are scaled against this so the morph numbers match the model's
+    # historical calibration exactly.
+    ref_bytes_per_pixel = 4.0
+
     # -- ranking -----------------------------------------------------------
     def cost(self, stats: InputStats, cfg: EngineConfig) -> float:
-        return self.transfer_cost(stats, cfg) + self.drain_cost(stats, cfg)
+        """Total = op-weighted transfer + drain (OpSpec hints via InputStats):
+        transfer scales with the op's mutable bytes/pixel, drain with its
+        per-round arithmetic weight."""
+        scale_t = stats.bytes_per_pixel / self.ref_bytes_per_pixel
+        return (scale_t * self.transfer_cost(stats, cfg)
+                + stats.round_cost_weight * self.drain_cost(stats, cfg))
 
     def candidates(self, stats: InputStats,
                    tiles: Sequence[int] = DEFAULT_TILES) -> List[EngineConfig]:
@@ -546,29 +535,46 @@ def _run_dense_engine(op, state, cfg, max_rounds, **_):
 
 # Memoized per (op identity, interpret, batched, max_iters) so run_tiled's
 # static tile_solver arguments stay hash-stable across solve() calls (avoids
-# recompiles).
+# recompiles).  Re-registering/amending a spec invalidates the affected
+# entries via the registry's change hook, so a replaced Pallas solver is
+# picked up instead of the stale memo serving the old kernel forever.
 _SOLVER_MEMO: Dict[tuple, Callable] = {}
 
 
+def _invalidate_solver_memo(op_cls: type) -> None:
+    # A subclass may resolve its solver through the amended ancestor's
+    # spec, so drop every memo row whose op class sits below op_cls too.
+    for key in [k for k in _SOLVER_MEMO if issubclass(k[0], op_cls)]:
+        del _SOLVER_MEMO[key]
+
+
+on_spec_change(_invalidate_solver_memo)
+
+
 def _pallas_solver_for(op, interpret: bool, batched: bool = False,
-                       max_iters: int = None):
+                       max_iters: int = None, engine: str = "tiled-pallas"):
     from repro.kernels.ops import DEFAULT_MAX_ITERS
     if max_iters is None:
         max_iters = DEFAULT_MAX_ITERS
     key = (type(op), op.connectivity, interpret, batched, max_iters)
     if key not in _SOLVER_MEMO:
-        factory = _registry_lookup(
-            _PALLAS_BATCH_SOLVERS if batched else _PALLAS_SOLVERS, op)
+        spec = spec_for(op)
+        factory = (None if spec is None else
+                   (spec.pallas_batch_solver if batched else spec.pallas_solver))
         if factory is None:
-            if batched:
+            if batched and spec is not None and spec.pallas_solver is not None:
                 # Fall back to vmapping the per-tile kernel; a dedicated
                 # grid-over-batch kernel is only an optimization.
                 _SOLVER_MEMO[key] = jax.vmap(
-                    _pallas_solver_for(op, interpret, max_iters=max_iters))
+                    _pallas_solver_for(op, interpret, max_iters=max_iters,
+                                       engine=engine))
                 return _SOLVER_MEMO[key]
             raise ValueError(
-                f"no Pallas tile solver registered for {type(op).__name__}; "
-                "use register_pallas_solver() or engine='tiled'")
+                f"op {type(op).__name__} has no Pallas tile solver "
+                f"registered, which engine {engine!r} requires; registered "
+                f"ops: {list_ops()}.  Provide OpSpec.pallas_solver via "
+                "repro.ops.register_op() (or the register_pallas_solver "
+                "shim), or pick an op-generic engine such as 'tiled'.")
         _SOLVER_MEMO[key] = factory(op, interpret, max_iters)
     return _SOLVER_MEMO[key]
 
@@ -590,10 +596,12 @@ def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
         # kernel-default 1024 is *below* the bound for any tile >= 32, and a
         # drain cut off there must re-queue, not masquerade as converged.
         max_iters = (tile + 2) ** 2
-        solver = _pallas_solver_for(op, interpret, max_iters=max_iters)
+        solver = _pallas_solver_for(op, interpret, max_iters=max_iters,
+                                    engine=cfg.engine)
         if drain_batch > 1:
             batched_solver = _pallas_solver_for(op, interpret, batched=True,
-                                                max_iters=max_iters)
+                                                max_iters=max_iters,
+                                                engine=cfg.engine)
     out, st = run_tiled(op, state, tile=tile, queue_capacity=cap,
                         max_outer_rounds=max_rounds, tile_solver=solver,
                         drain_batch=drain_batch,
@@ -662,7 +670,7 @@ def _batched_drain_for(op, tile: int, interpret: bool, pallas: bool,
     """
     if pallas:
         return _pallas_solver_for(op, interpret, batched=True,
-                                  max_iters=(tile + 2) ** 2)
+                                  max_iters=(tile + 2) ** 2, engine="hybrid")
     if drain_batch <= 1:
         per = _scheduler_drain_for(op, tile)
 
@@ -690,15 +698,34 @@ def _host_tile_fn_for(op, tile: int):
     return tile_fn
 
 
-def _scheduler_state_for(op, state, tile: int):
+def _scheduler_merge_for(op, engine: str):
+    """The host engines' commutative write-back merge, from the op's spec.
+
+    ``None`` (the spec default) selects the scheduler's built-in
+    elementwise-max merge — correct for any single-plane monotone-max op.
+    An *unregistered* op is an error here (not a silent default): the
+    default merge is wrong for coupled/coordinate-dependent state (EDT),
+    and silently applying it used to surface as a corrupted fixed point.
+    """
+    spec = spec_for(op)
+    if spec is None:
+        raise ValueError(
+            f"op {type(op).__name__} is not a registered op, and engine "
+            f"{engine!r} needs its commutative merge_block_fn; registered "
+            f"ops: {list_ops()}.  Register it with repro.ops.register_op() "
+            "(OpSpec.scheduler_merge defaults to the elementwise-max merge) "
+            "or the register_scheduler_merge shim.")
+    return spec.scheduler_merge(op)
+
+
+def _scheduler_state_for(op, state, tile: int, engine: str):
     """Shared host-engine setup: padded numpy state + scheduler plumbing."""
     padded, (H, W) = _pad_to_multiple(op, state, tile, tile)
     # np.array (not asarray): JAX buffers give read-only numpy views, and the
     # scheduler writes tile interiors back into this state in place.
     np_state = {k: np.array(v) for k, v in padded.items()}
     active = np.asarray(initial_active_tiles(op, padded, tile))
-    merge_factory = _registry_lookup(_SCHEDULER_MERGES, op)
-    merge_block_fn = merge_factory(op) if merge_factory is not None else None
+    merge_block_fn = _scheduler_merge_for(op, engine)
     mutable = tuple(k for k in np_state if k not in op.static_leaves)
     pad_values = {k: np.asarray(v).item()
                   for k, v in op.pad_value(padded).items()}
@@ -708,7 +735,7 @@ def _scheduler_state_for(op, state, tile: int):
 def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
     tile = cfg.tile or DEFAULT_TILES[1]
     (np_state, active, merge_block_fn, mutable, pad_values,
-     (H, W)) = _scheduler_state_for(op, state, tile)
+     (H, W)) = _scheduler_state_for(op, state, tile, "scheduler")
     sched = TileScheduler(np_state, tile, _host_tile_fn_for(op, tile), active,
                           n_workers=n_workers, mutable=mutable,
                           merge_block_fn=merge_block_fn,
@@ -782,7 +809,7 @@ def _run_hybrid_engine(op, state, cfg, max_rounds, interpret=True,
         raise ValueError("hybrid engine needs n_workers >= 1 or "
                          "n_device_workers >= 1")
     (np_state, active, merge_block_fn, mutable, pad_values,
-     (H, W)) = _scheduler_state_for(op, state, tile)
+     (H, W)) = _scheduler_state_for(op, state, tile, "hybrid")
     nty, ntx = (np_state[mutable[0]].shape[-2] // tile,
                 np_state[mutable[0]].shape[-1] // tile)
 
@@ -877,7 +904,8 @@ def _run_engine(op, state, cfg: EngineConfig, **kw):
 # Public API.
 # ---------------------------------------------------------------------------
 
-def solve(op: PropagationOp, state, *, engine: str = "auto",
+def solve(op, state, *, engine: str = "auto",
+          connectivity: Optional[int] = None,
           devices: Optional[Sequence] = None,
           tile: Optional[int] = None,
           queue_capacity: Optional[int] = None,
@@ -895,6 +923,19 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
 
     Parameters
     ----------
+    op : a :class:`PropagationOp` instance, or the *name* of a registered
+        op (``repro.ops.list_ops()``: ``"morph"``, ``"edt"``,
+        ``"fill_holes"``, ``"label"``, ...).  By name, the op is built via
+        its :class:`~repro.ops.OpSpec` factory and ``state`` may be the
+        op's natural **raw input** instead of a state pytree — a non-dict
+        ``state`` (array, or tuple of arrays for multi-input ops like
+        morph's ``(marker, mask)``) is passed through the spec's
+        ``make_state`` builder: ``solve("edt", fg_image)``.  The result is
+        still the converged *state*; apply ``get_op(name).extract`` (or use
+        the per-op wrappers) for the user-facing array.
+    connectivity : op-level knob for by-name calls, forwarded to the spec
+        factory (each op's default applies when None).  Invalid with an op
+        instance — construct the instance with the connectivity you want.
     engine : one of :data:`ENGINES`.  ``"auto"`` ranks candidates with
         ``cost_model`` (default :class:`CostModel`) and runs the cheapest.
         ``"shard_map-tiled"`` composes the mesh TP/BP pipeline with a
@@ -929,6 +970,17 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if isinstance(op, str):
+        spec = get_op(op)
+        op = spec.make_op(connectivity)
+        if not isinstance(state, dict):
+            # Raw input(s), not a state pytree: build through the spec.
+            inputs = state if isinstance(state, tuple) else (state,)
+            state = spec.build_state(op, *inputs)
+    elif connectivity is not None:
+        raise ValueError(
+            "connectivity= applies to by-name solve() calls only; construct "
+            "the op instance with the desired connectivity instead")
     run_kw = dict(max_rounds=max_rounds, devices=devices,
                   interpret=interpret, n_workers=n_workers,
                   n_device_workers=n_device_workers,
@@ -965,6 +1017,3 @@ def solve(op: PropagationOp, state, *, engine: str = "auto",
     cost, cfg = model.rank(stats_in, cands)[0]
     out, st = _run_engine(op, state, cfg, **run_kw)
     return out, dataclasses.replace(st, predicted_cost=cost)
-
-
-_register_builtin_ops()

@@ -20,6 +20,8 @@ _DESIGN_HEADING = re.compile(r"^#{1,6}\s+§(\d+(?:\.\d+)*)\b", re.M)
 # markdown headings also allow a literal-section prefix, e.g. "## §BENCH ..."
 _ENGINES_ANCHOR_REF = re.compile(r"docs/ENGINES\.md#([A-Za-z0-9\-_]+)")
 _ENGINES_FILE_REF = re.compile(r"docs/ENGINES\.md")
+_OPS_ANCHOR_REF = re.compile(r"docs/OPS\.md#([A-Za-z0-9\-_]+)")
+_OPS_FILE_REF = re.compile(r"docs/OPS\.md")
 
 
 def _scan_files():
@@ -66,27 +68,37 @@ def test_design_section_citations_resolve():
         f"existing sections: {sorted(headings)}")
 
 
-def test_engines_md_references_resolve():
-    engines_path = os.path.join(ROOT, "docs", "ENGINES.md")
-    assert os.path.exists(engines_path), "docs/ENGINES.md is missing"
+def _check_doc_references(filename, file_ref, anchor_ref):
+    """Shared checker: docs/<filename> exists, something links to it, and
+    every `docs/<filename>#anchor` reference in the tree resolves."""
+    doc_path = os.path.join(ROOT, "docs", filename)
+    assert os.path.exists(doc_path), f"docs/{filename} is missing"
     anchors = {_github_anchor(line)
-               for line in _read(engines_path).splitlines()
+               for line in _read(doc_path).splitlines()
                if line.startswith("#")}
     referenced = False
     missing = []
     for path in _scan_files():
-        if os.path.samefile(path, engines_path):
+        if os.path.samefile(path, doc_path):
             continue
         text = _read(path)
-        if _ENGINES_FILE_REF.search(text):
+        if file_ref.search(text):
             referenced = True
-        for m in _ENGINES_ANCHOR_REF.finditer(text):
+        for m in anchor_ref.finditer(text):
             if m.group(1).lower() not in anchors:
                 missing.append((os.path.relpath(path, ROOT), m.group(1)))
-    assert referenced, "nothing links to docs/ENGINES.md (README should)"
+    assert referenced, f"nothing links to docs/{filename} (README should)"
     assert not missing, (
-        f"references to nonexistent docs/ENGINES.md anchors: {missing}; "
+        f"references to nonexistent docs/{filename} anchors: {missing}; "
         f"existing anchors: {sorted(anchors)}")
+
+
+def test_engines_md_references_resolve():
+    _check_doc_references("ENGINES.md", _ENGINES_FILE_REF, _ENGINES_ANCHOR_REF)
+
+
+def test_ops_md_references_resolve():
+    _check_doc_references("OPS.md", _OPS_FILE_REF, _OPS_ANCHOR_REF)
 
 
 def test_every_engine_has_a_reference_section():
@@ -97,3 +109,14 @@ def test_every_engine_has_a_reference_section():
     missing = [e for e in ENGINES
                if not re.search(rf"^##\s+`{re.escape(e)}`", text, re.M)]
     assert not missing, f"docs/ENGINES.md lacks sections for: {missing}"
+
+
+def test_every_op_has_a_catalog_section():
+    """docs/OPS.md must stay complete: one `## \\`op\\`` section per
+    registered op — a new register_op() without a catalog entry fails
+    here, the same pact docs/ENGINES.md has with ENGINES."""
+    from repro.ops import list_ops
+    text = _read(os.path.join(ROOT, "docs", "OPS.md"))
+    missing = [o for o in list_ops()
+               if not re.search(rf"^##\s+`{re.escape(o)}`", text, re.M)]
+    assert not missing, f"docs/OPS.md lacks sections for: {missing}"

@@ -1,0 +1,197 @@
+"""The two registry-proving workloads (ISSUE: fill-holes + labeling) against
+scipy.ndimage and the repo's own sequential references, across the tiled /
+tiled-pallas / scheduler / hybrid engines — all reached purely through the
+``repro.ops`` plugin registry, with zero edits to engine code.
+
+Conventions under test:
+* fill-holes: ``connectivity`` is the *background flood* connectivity;
+  scipy's default cross structure == 4.
+* labeling: the IWPP fixed point carries max-linear-index labels
+  (bit-comparable to ``label_wavefront``); scipy's label *values* are
+  scan-order artifacts, so the scipy comparison is component-membership
+  equality up to relabeling (``same_components``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fill.ops import FillHolesOp, fill_holes
+from repro.fill.ref import fill_holes_bfs
+from repro.label.ops import LabelPropagationOp, label
+from repro.label.ref import label_wavefront, relabel_sequential, same_components
+from repro.solve import solve
+
+ndi = pytest.importorskip("scipy.ndimage")
+
+ENGINES_UNDER_TEST = ("tiled", "tiled-pallas", "scheduler", "hybrid")
+ENGINE_KW = dict(tile=16, queue_capacity=8, n_workers=2)
+
+
+def _blobby(shape, density, seed):
+    rng = np.random.default_rng(seed)
+    img = rng.random(shape) < density
+    # stamp a guaranteed hole so every fixture exercises actual filling
+    img[4:12, 5:13] = True
+    img[7:9, 8:10] = False
+    return img
+
+
+@pytest.fixture(scope="module")
+def fill_case():
+    img = _blobby((48, 56), 0.45, seed=0)
+    return img, fill_holes_bfs(img, connectivity=4)
+
+
+@pytest.fixture(scope="module")
+def label_case():
+    fg = np.random.default_rng(1).random((48, 56)) < 0.55
+    return fg, label_wavefront(fg, connectivity=8)
+
+
+def test_refs_agree_with_scipy(fill_case, label_case):
+    img, ref_fill = fill_case
+    fg, ref_lab = label_case
+    np.testing.assert_array_equal(ref_fill, ndi.binary_fill_holes(img))
+    scipy_lab, n = ndi.label(fg, structure=np.ones((3, 3)))
+    assert same_components(ref_lab, scipy_lab)
+    assert len(np.unique(ref_lab[ref_lab > 0])) == n
+
+
+@pytest.mark.parametrize("engine", ENGINES_UNDER_TEST)
+def test_fill_holes_matches_scipy_on_every_engine(fill_case, engine):
+    img, ref = fill_case
+    out, stats = fill_holes(img, engine=engine, **ENGINE_KW)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    assert stats.engine == engine
+
+
+@pytest.mark.parametrize("engine", ENGINES_UNDER_TEST)
+def test_label_matches_scipy_on_every_engine(label_case, engine):
+    fg, ref = label_case
+    out, stats = label(fg, engine=engine, **ENGINE_KW)
+    lab = np.asarray(out)
+    np.testing.assert_array_equal(lab, ref)        # bit-exact vs IWPP ref
+    scipy_lab, _ = ndi.label(fg, structure=np.ones((3, 3)))
+    assert same_components(lab, scipy_lab)         # membership vs scipy
+    assert stats.engine == engine
+
+
+@pytest.mark.parametrize("engine", ENGINES_UNDER_TEST)
+def test_by_name_solve_reaches_every_engine(fill_case, engine):
+    """Acceptance bar: solve('fill_holes'/'label', raw_input) by name."""
+    img, ref = fill_case
+    out, stats = solve("fill_holes", jnp.asarray(img), engine=engine,
+                       **ENGINE_KW)
+    np.testing.assert_array_equal(np.asarray(out["J"] == 0), ref)
+    assert stats.engine == engine
+    fg = jnp.asarray(img)   # any bool image labels fine
+    lout, lstats = solve("label", fg, engine=engine, **ENGINE_KW)
+    np.testing.assert_array_equal(
+        np.asarray(lout["lab"]),
+        label_wavefront(np.asarray(fg), connectivity=8))
+    assert lstats.engine == engine
+
+
+def test_by_name_solve_covers_all_remaining_engines(fill_case, label_case):
+    """Acceptance bar, completed: together with the engine-parametrized
+    tests above, both new ops run by name on every member of ENGINES."""
+    from repro.solve import ENGINES
+    covered = set(ENGINES) - {"auto"} - set(ENGINES_UNDER_TEST)
+    assert covered == {"sweep", "frontier", "shard_map", "shard_map-tiled"}
+    img, ref = fill_case
+    fg, ref_lab = label_case
+    for engine in sorted(covered) + ["auto"]:
+        kw = dict(tile=16, queue_capacity=8) if "tiled" in engine else {}
+        out, _ = solve("fill_holes", jnp.asarray(img), engine=engine, **kw)
+        np.testing.assert_array_equal(np.asarray(out["J"] == 0), ref,
+                                      err_msg=f"fill_holes via {engine}")
+        lout, _ = solve("label", jnp.asarray(fg), engine=engine, **kw)
+        np.testing.assert_array_equal(np.asarray(lout["lab"]), ref_lab,
+                                      err_msg=f"label via {engine}")
+
+
+def test_fill_connectivity_matches_scipy_structures(fill_case):
+    img, _ = fill_case
+    # conn=4 == scipy default cross structure; conn=8 == full 3x3 structure
+    out4, _ = fill_holes(img, connectivity=4, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(out4), ndi.binary_fill_holes(img))
+    out8, _ = fill_holes(img, connectivity=8, engine="frontier")
+    np.testing.assert_array_equal(
+        np.asarray(out8),
+        ndi.binary_fill_holes(img, structure=np.ones((3, 3))))
+
+
+def test_label_connectivity_4(label_case):
+    fg, _ = label_case
+    out, _ = label(fg, connectivity=4, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  label_wavefront(fg, connectivity=4))
+    scipy_lab, _ = ndi.label(fg)                    # scipy default = cross
+    assert same_components(np.asarray(out), scipy_lab)
+
+
+def test_fill_and_label_edge_cases():
+    # all-foreground: nothing to flood, everything stays foreground
+    full = np.ones((12, 14), bool)
+    out, _ = fill_holes(full, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(out), full)
+    lab, _ = label(full, engine="frontier")
+    assert len(np.unique(np.asarray(lab))) == 1     # one component
+    # all-background: border flood reaches everything, nothing is filled
+    empty = np.zeros((12, 14), bool)
+    out, _ = fill_holes(empty, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(out), empty)
+    lab, _ = label(empty, engine="frontier")
+    assert not np.asarray(lab).any()
+
+
+def test_fill_invalid_cells_report_input_values():
+    """Regression: invalid cells of the *extracted* filled image hold the
+    input image values (bg never filled, fg preserved) — `filled()` must
+    not read the restored J==0 of invalid background as 'hole'."""
+    img = np.zeros((16, 16), bool)
+    img[10:13, 10:13] = True                   # some fg inside the invalid patch
+    valid = np.ones((16, 16), bool)
+    valid[9:14, 9:14] = False
+    op = FillHolesOp(connectivity=4)
+    state = op.make_state(jnp.asarray(img), jnp.asarray(valid))
+    out, _ = solve(op, state, engine="frontier")
+    filled = np.asarray(op.filled(out))
+    np.testing.assert_array_equal(filled[~valid], img[~valid])
+    assert not filled[valid].any()             # open background, no holes
+
+
+def test_label_seeds_enforce_cap():
+    """Regression: grids whose max label would exceed LABEL_CAP (the Pallas
+    solver's mask value, which would silently clamp and merge components)
+    must be rejected up front, on every engine path."""
+    from repro.kernels.ops import LABEL_CAP as KERNEL_CAP
+    from repro.label.ops import LABEL_CAP, label_seeds
+
+    assert KERNEL_CAP == LABEL_CAP   # one invariant, not two constants
+
+    class _HugeFake:                 # guard fires on .shape, before any alloc
+        shape = (1 << 16, 1 << 15)   # 2^31 pixels > LABEL_CAP
+
+    with pytest.raises(ValueError, match="LABEL_CAP"):
+        label_seeds(_HugeFake())
+
+
+def test_relabel_sequential_compacts():
+    lab = np.array([[0, 7, 7], [0, 0, 3]])
+    np.testing.assert_array_equal(relabel_sequential(lab),
+                                  [[0, 1, 1], [0, 0, 2]])
+
+
+def test_non_tile_aligned_fill_and_label():
+    """Padding adapters on a grid no tile divides, both new ops."""
+    img = _blobby((37, 51), 0.45, seed=5)
+    ref = fill_holes_bfs(img, connectivity=4)
+    fg = np.random.default_rng(6).random((37, 51)) < 0.55
+    ref_lab = label_wavefront(fg, connectivity=8)
+    for engine in ("tiled", "scheduler"):
+        out, _ = fill_holes(img, engine=engine, tile=16, n_workers=2)
+        np.testing.assert_array_equal(np.asarray(out), ref)
+        lab, _ = label(fg, engine=engine, tile=16, n_workers=2)
+        np.testing.assert_array_equal(np.asarray(lab), ref_lab)

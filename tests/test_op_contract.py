@@ -1,0 +1,249 @@
+"""Op-contract conformance suite: every op in ``repro.ops.list_ops()`` is
+property-checked against the IWPP contract **for free at registration** —
+a new op that ships an ``OpSpec.example_state`` gets all three checks with
+zero new test code:
+
+  (a) *idempotence* — a second ``solve()`` pass from the fixed point is a
+      bit-exact no-op (the fixed point really is fixed);
+  (b) *engine equivalence* — sweep vs frontier vs tiled reach bit-identical
+      fixed points on random masked inputs (schedule independence, the
+      commutative+monotone theorem of DESIGN.md §1);
+  (c) *invalid restore* — invalid cells of every output hold their input
+      values bit-for-bit (the engine output contract).
+
+Plus unit tests of the registry itself (register/get/list, by-name solve,
+the amend shims, and the satellite error messages that name the op, the
+engine, and the registered alternatives).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.solve as solve_mod
+from repro.core.pattern import PropagationOp
+from repro.ops import OpSpec, get_op, list_ops, register_op, spec_for
+from repro.solve import solve
+
+SHAPE = (24, 28)
+OPS = list_ops()
+
+
+@pytest.fixture(scope="module")
+def example():
+    """name -> (spec, op, random masked state) for every registered op."""
+    out = {}
+    for i, name in enumerate(OPS):
+        spec = get_op(name)
+        assert spec.example_state is not None, (
+            f"op {name!r} has no OpSpec.example_state — the conformance "
+            "suite cannot check it for free")
+        op, state = spec.example_state(np.random.default_rng(100 + i), SHAPE)
+        out[name] = (spec, op, state)
+    return out
+
+
+def _assert_tree_equal(a, b, msg):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{msg}: leaf {k!r}")
+
+
+@pytest.mark.parametrize("name", OPS)
+def test_second_pass_is_noop(example, name):
+    _, op, state = example[name]
+    out1, _ = solve(op, state, engine="frontier")
+    out2, _ = solve(op, out1, engine="frontier")
+    _assert_tree_equal(out1, out2, f"{name}: solve() from the fixed point "
+                       "must be a bit-exact no-op")
+
+
+@pytest.mark.parametrize("name", OPS)
+def test_engines_reach_identical_fixed_points(example, name):
+    """Compared through ``OpSpec.finalize``: the user-facing result is the
+    bit-comparable artifact (EDT's raw Voronoi pointers may resolve
+    distance *ties* differently per engine — paper §3.4 — while the
+    distance map is identical)."""
+    spec, op, state = example[name]
+    ref, _ = solve(op, state, engine="frontier")
+    ref_result = np.asarray(spec.extract(op, ref))
+    for engine in ("sweep", "tiled"):
+        out, _ = solve(op, state, engine=engine, tile=8, queue_capacity=8)
+        np.testing.assert_array_equal(
+            np.asarray(spec.extract(op, out)), ref_result,
+            err_msg=f"{name}: {engine} vs frontier fixed point")
+
+
+@pytest.mark.parametrize("name", OPS)
+def test_restore_invalid_holds(example, name):
+    _, op, state = example[name]
+    inv = ~np.asarray(state["valid"])
+    assert inv.any(), "example_state must include invalid pixels"
+    out, _ = solve(op, state, engine="frontier")
+    static = set(op.static_leaves)
+    for k in state:
+        if k in static:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(out[k])[..., inv], np.asarray(state[k])[..., inv],
+            err_msg=f"{name}: invalid cells of {k!r} must hold input values")
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics.
+# ---------------------------------------------------------------------------
+
+def test_builtin_catalog_is_registered():
+    assert set(OPS) >= {"morph", "edt", "fill_holes", "label"}
+
+
+def test_solve_by_name_equals_instance_call(example):
+    spec, op, state = example["morph"]
+    by_name, _ = solve("morph", state, engine="frontier")
+    by_inst, _ = solve(op, state, engine="frontier")
+    _assert_tree_equal(by_name, by_inst, "by-name vs instance solve")
+
+
+def test_solve_by_name_builds_state_from_raw_input():
+    rng = np.random.default_rng(3)
+    fg = jnp.asarray(rng.random((20, 22)) < 0.5)
+    out, _ = solve("label", fg, engine="frontier")   # raw array, not a state
+    spec = get_op("label")
+    ref, _ = solve("label", spec.build_state(spec.factory(), fg),
+                   engine="frontier")
+    _assert_tree_equal(out, ref, "raw-input vs prebuilt-state solve")
+
+
+def test_unknown_op_name_lists_alternatives():
+    with pytest.raises(ValueError, match="registered ops"):
+        get_op("warp-drive")
+    with pytest.raises(ValueError, match="registered ops"):
+        solve("warp-drive", jnp.zeros((4, 4)))
+
+
+def test_connectivity_kwarg_is_by_name_only(example):
+    _, op, state = example["morph"]
+    with pytest.raises(ValueError, match="by-name"):
+        solve(op, state, engine="frontier", connectivity=4)
+
+
+class _UnregisteredOp(PropagationOp):
+    pass
+
+
+def test_missing_pallas_solver_error_names_engine_and_alternatives(example):
+    """Satellite: a missing kernel is a clear ValueError naming the op
+    class, the requested engine, and list_ops() — not a downstream
+    TypeError."""
+    with pytest.raises(ValueError) as ei:
+        solve_mod._pallas_solver_for(_UnregisteredOp(), interpret=True,
+                                     engine="tiled-pallas")
+    msg = str(ei.value)
+    assert "_UnregisteredOp" in msg and "'tiled-pallas'" in msg
+    for name in OPS:
+        assert name in msg
+
+
+def test_missing_scheduler_merge_error_names_engine_and_alternatives():
+    with pytest.raises(ValueError) as ei:
+        solve_mod._scheduler_merge_for(_UnregisteredOp(), "hybrid")
+    msg = str(ei.value)
+    assert "_UnregisteredOp" in msg and "'hybrid'" in msg
+    for name in OPS:
+        assert name in msg
+
+
+def test_legacy_shims_amend_the_class_index():
+    """register_pallas_solver / register_scheduler_merge survive as shims
+    over the registry: they patch (or create) the class-indexed spec."""
+    class _ShimOp(PropagationOp):
+        pass
+
+    sentinel = object()
+    solve_mod.register_pallas_solver(_ShimOp,
+                                     lambda op, interp, mi: sentinel)
+    spec = spec_for(_ShimOp())
+    assert spec is not None and spec.op_cls is _ShimOp
+    assert spec.pallas_solver(None, True, 1) is sentinel
+    assert not spec.name and "_ShimOp" not in " ".join(list_ops())
+
+    merge = lambda op: "merge"
+    solve_mod.register_scheduler_merge(_ShimOp, merge)
+    spec2 = spec_for(_ShimOp())
+    assert spec2.scheduler_merge is merge
+    # the earlier amendment is preserved, not clobbered
+    assert spec2.pallas_solver(None, True, 1) is sentinel
+
+
+def test_shim_on_subclass_inherits_parent_plug_points():
+    """Regression: amending one plug point on a subclass must keep the
+    ancestor's other plug points (the old per-plug-point MRO registries'
+    semantics) — register_pallas_solver on an EdtOp subclass must NOT
+    silently swap EDT's coordinate-aware scheduler merge for the
+    elementwise-max default (which corrupts Voronoi pointers)."""
+    from repro.edt.ops import EdtOp
+
+    class _MyEdt(EdtOp):
+        pass
+
+    sentinel = object()
+    solve_mod.register_pallas_solver(_MyEdt, lambda op, i, m: sentinel)
+    spec = spec_for(_MyEdt())
+    assert spec.op_cls is _MyEdt
+    assert spec.pallas_solver(None, True, 1) is sentinel
+    assert spec.scheduler_merge is get_op("edt").scheduler_merge
+    # and the real merge still resolves through the solve-layer lookup
+    assert solve_mod._scheduler_merge_for(_MyEdt(), "scheduler") is not None
+
+
+def test_cost_hints_flow_into_input_stats(example):
+    """OpSpec cost hints surface in collect_input_stats; morph is the
+    reference op, so its hints must leave the historical model untouched."""
+    from repro.solve import CostModel, EngineConfig, collect_input_stats
+    _, mop, mstate = example["morph"]
+    _, eop, estate = example["edt"]
+    ms = collect_input_stats(mop, mstate)
+    es = collect_input_stats(eop, estate)
+    assert (ms.bytes_per_pixel, ms.round_cost_weight) == (4.0, 1.0)
+    assert es.bytes_per_pixel > ms.bytes_per_pixel
+    assert es.round_cost_weight > ms.round_cost_weight
+    model = CostModel()
+    cfg = EngineConfig("frontier")
+    # same probe numbers, heavier op hints -> strictly costlier estimate
+    heavier = dataclasses.replace(ms, bytes_per_pixel=8.0,
+                                  round_cost_weight=2.0)
+    assert model.cost(heavier, cfg) > model.cost(ms, cfg)
+
+
+def test_run_op_returns_extracted_result(example):
+    """run_op = build + solve + finalize; the wrappers delegate to it."""
+    from repro.ops import run_op
+    spec, op, state = example["edt"]
+    rng = np.random.default_rng(9)
+    fg = jnp.asarray(rng.random((20, 22)) < 0.9)
+    dist, stats = run_op("edt", fg, engine="frontier")
+    out, _ = solve("edt", fg, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(dist),
+                                  np.asarray(spec.extract(op, out)))
+    assert stats.engine == "frontier"
+
+
+def test_reregistration_invalidates_solver_memo():
+    """Regression: replacing a Pallas solver via the shim must not keep
+    serving the old kernel out of the solve layer's memo."""
+    class _MemoOp(PropagationOp):
+        pass
+
+    first = lambda op, i, m: "first-solver"
+    solve_mod.register_pallas_solver(_MemoOp, first)
+    assert solve_mod._pallas_solver_for(_MemoOp(), True) == "first-solver"
+    solve_mod.register_pallas_solver(_MemoOp, lambda op, i, m: "second-solver")
+    assert solve_mod._pallas_solver_for(_MemoOp(), True) == "second-solver"
+
+
+def test_register_op_requires_name():
+    with pytest.raises(ValueError, match="name"):
+        register_op("", OpSpec(op_cls=_UnregisteredOp,
+                               factory=_UnregisteredOp))
