@@ -27,17 +27,44 @@ The paper's trend to reproduce: deeper init -> smaller queue -> faster
 wavefront phase; hierarchical queueing wins and its advantage grows as the
 wavefront sparsifies; batch-draining the queue wins once occupancy covers
 the batch (K >= 4).
+
+The kernel section compares the dense Pallas tile kernels against their
+in-kernel-queue variants (``kernel_queue=True``, DESIGN.md §2.5): the
+serpentine-corridor rows are the sparse-wavefront regime where the queued
+kernels win, the seeded-tissue engine rows the dense regime where they
+don't, and ``serpentine_kernel_guard`` is the asserting CI check that the
+queued kernel never needs more rounds than the dense one.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import bench_argparser, morph_state, record, timeit, write_json
 from repro.core.tiles import initial_active_tiles
+from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_queued
+from repro.morph.ops import MorphReconstructOp
 from repro.solve import solve
 
 DEFAULT_JSON = "BENCH_tiled.json"
+
+
+def serpentine_state(n: int):
+    """1-px serpentine corridor, seed at (0, 0): geodesic depth ~n²/2 with a
+    1-2 pixel wavefront — the sparse-seed regime where the in-kernel queue
+    (DESIGN.md §2.5) pays off (the paper's point that the queue advantage
+    grows as the wavefront sparsifies).  Mirrors tests/test_truncation.py's
+    fixture."""
+    corridor = np.zeros((n, n), bool)
+    corridor[0::2, :] = True
+    for i, r in enumerate(range(1, n - 1, 2)):
+        corridor[r, (n - 1) if i % 2 == 0 else 0] = True
+    mask = np.where(corridor, 100, 0).astype(np.int32)
+    marker = np.zeros_like(mask)
+    marker[0, 0] = 100
+    op = MorphReconstructOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask))
 
 
 def table1(size: int, records: list):
@@ -96,20 +123,103 @@ def drain_comparison(size: int, records: list, tile: int = 32,
                 speedup_vs_seq=round(t_seq / t_b, 2))
 
 
+def kernel_comparison(records: list, sizes=(128, 256), caps=(16, 64)):
+    """Dense vs queued Pallas tile kernels (DESIGN.md §2.5).
+
+    Serpentine rows are the sparse-wavefront regime (1-2 px front, depth
+    ~n²/2): each run is one whole-image tile drained in-kernel, dense
+    full-block rounds against O(capacity) push rounds.  Both variants reach
+    bit-identical fixed points in the same number of rounds; only the work
+    per round differs, so ``speedup_vs_dense`` isolates the queue itself.
+    """
+    for n in sizes:
+        op, state = serpentine_state(n)
+        t_d = timeit(lambda: solve(op, state, engine="tiled-pallas",
+                                   tile=n)[0])
+        _, sd = solve(op, state, engine="tiled-pallas", tile=n)
+        record(records, f"kernel/serpentine={n}/dense", t_d, rounds=sd.rounds)
+        for cap in caps:
+            t_q = timeit(lambda: solve(op, state, engine="tiled-pallas",
+                                       tile=n, kernel_queue=True,
+                                       kernel_queue_capacity=cap)[0])
+            _, sq = solve(op, state, engine="tiled-pallas", tile=n,
+                          kernel_queue=True, kernel_queue_capacity=cap)
+            record(records, f"kernel/serpentine={n}/queued", t_q,
+                   capacity=cap, rounds=sq.rounds,
+                   speedup_vs_dense=round(t_d / t_q, 2))
+
+
+def engine_queue_comparison(size: int, records: list, tile: int = 128):
+    """The honest non-corridor counterpart: seeded-tissue markers (ring
+    wavefronts, shallow per-tile depth).  Dense rounds fuse into a couple
+    of XLA kernels here while push rounds pay per-round dispatch overhead,
+    so dense typically wins — the cost model's reason for only proposing
+    kernel_queue on deep sparse drains."""
+    op, state = morph_state(size, coverage=1.0, seed=0, marker_kind="seeded")
+    t_d = timeit(lambda: solve(op, state, engine="tiled-pallas", tile=tile)[0])
+    _, sd = solve(op, state, engine="tiled-pallas", tile=tile)
+    record(records, f"engine/seeded={size}/tile={tile}/dense", t_d,
+           rounds=sd.rounds, drains=sd.tiles_processed)
+    t_q = timeit(lambda: solve(op, state, engine="tiled-pallas", tile=tile,
+                               kernel_queue=True)[0])
+    _, sq = solve(op, state, engine="tiled-pallas", tile=tile,
+                  kernel_queue=True)
+    record(records, f"engine/seeded={size}/tile={tile}/queued", t_q,
+           capacity=sq.kernel_queue_capacity, rounds=sq.rounds,
+           drains=sq.tiles_processed, speedup_vs_dense=round(t_d / t_q, 2))
+
+
+def serpentine_kernel_guard(records: list, n: int = 64):
+    """CI perf-regression guard (ISSUE 6 satellite): on the serpentine
+    fixture the queued kernel must reach the *same* fixed point in *no
+    more* rounds than the dense kernel — a silently dropped enqueue would
+    stall the wavefront and inflate the round count.  Raises
+    ``AssertionError`` (failing the CI step) on violation."""
+    op, state = serpentine_state(n)
+    neut = np.iinfo(np.int32).min
+    J = jnp.asarray(np.pad(np.asarray(state["J"]), 1, constant_values=neut))
+    I = jnp.asarray(np.pad(np.asarray(state["I"]), 1, constant_values=neut))
+    valid = jnp.asarray(np.pad(np.ones((n, n), bool), 1))
+    d, di = morph_tile_solve(J, I, valid, connectivity=8,
+                             max_iters=(n + 2) ** 2, interpret=True)
+    q, qi, spills = morph_tile_solve_queued(J, I, valid, connectivity=8,
+                                            max_iters=(n + 2) ** 2,
+                                            queue_capacity=16, interpret=True)
+    assert np.array_equal(np.asarray(d), np.asarray(q)), \
+        "queued kernel diverged from the dense fixed point"
+    assert int(qi) <= int(di), \
+        f"queued rounds {int(qi)} exceed dense rounds {int(di)}"
+    record(records, f"guard/serpentine={n}", 0.0, dense_rounds=int(di),
+           queued_rounds=int(qi), spills=int(spills), passed=True)
+
+
 def main(size: int = 512, json_path: str | None = None,
-         drain_size: int | None = None):
+         drain_size: int | None = None, smoke: bool = False):
     records: list = []
-    table1(size, records)
-    drain_comparison(drain_size if drain_size is not None else max(size, 1024),
-                     records)
+    if smoke:
+        table1(128, records)
+        drain_comparison(256, records, tile=32)
+        kernel_comparison(records, sizes=(64,), caps=(16,))
+        engine_queue_comparison(128, records, tile=64)
+    else:
+        table1(size, records)
+        drain_comparison(
+            drain_size if drain_size is not None else max(size, 1024),
+            records)
+        kernel_comparison(records)
+        engine_queue_comparison(256, records)
+    serpentine_kernel_guard(records)
     write_json(records, json_path)
     return records
 
 
 if __name__ == "__main__":
-    ap = bench_argparser(DEFAULT_JSON)
+    ap = bench_argparser(DEFAULT_JSON,
+                         smoke_help="CI profile: small grids, the queued-vs-"
+                                    "dense kernel rows, and the asserting "
+                                    "serpentine rounds guard")
     ap.add_argument("--drain-size", type=int, default=None,
                     help="grid side for the drain comparison (default: "
                          "max(size, 1024))")
     a = ap.parse_args()
-    main(a.size, json_path=a.json, drain_size=a.drain_size)
+    main(a.size, json_path=a.json, drain_size=a.drain_size, smoke=a.smoke)

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.pattern import offsets_for
 from repro.edt.ref import SENTINEL
+from repro.kernels.queue import queued_fixed_point
 
 
 def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
@@ -105,6 +106,188 @@ def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
         interpret=interpret,
     )(vr_r, vr_c, valid, row, col)
     return o_r, o_c, iters[0, 0]
+
+
+def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
+                        batched: bool = False):
+    """Queued EDT variant (DESIGN.md §2.5), push formulation: the queue
+    holds last round's improved pixels; each round gathers only their
+    pre-round pointers and pushes them to neighbors with one sequential
+    scatter pass per offset, in the dense kernel's offset order.  Each pass
+    compares against the target's *current* (partially updated) pointer —
+    the dense round's evolving per-pixel best accumulator — so even Voronoi
+    *tie* resolution, not just distances, is bit-identical to
+    :func:`_make_kernel`, as is the iteration count.  Queue overflow spills
+    to one dense full-block round."""
+    offsets = offsets_for(connectivity)
+
+    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref,
+               or_ref, oc_ref, iters_ref, spills_ref):
+        if batched:  # refs carry a leading (1,)-block batch dim under the grid
+            vr_r, vr_c = vr_r_ref[0], vr_c_ref[0]
+            valid = valid_ref[0]
+            row, col = row_ref[0], col_ref[0]
+        else:
+            vr_r, vr_c = vr_r_ref[...], vr_c_ref[...]
+            valid = valid_ref[...]
+            row, col = row_ref[...], col_ref[...]
+        Hp, Wp = vr_r.shape
+        n = Hp * Wp
+        s = jnp.int32(SENTINEL)
+        vr_r = jnp.where(valid, vr_r, s)
+        vr_c = jnp.where(valid, vr_c, s)
+
+        def dist2(rr, cc, pr, pc):
+            dr_ = rr - pr
+            dc_ = cc - pc
+            return dr_ * dr_ + dc_ * dc_
+
+        def shifted(x, dr, dc):
+            xp = jnp.pad(x, 1, constant_values=s)
+            return jax.lax.slice(xp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
+
+        def dense_round(carry):
+            # Same body as the dense kernel's while-loop step.
+            vr_r, vr_c = carry
+            br, bc = vr_r, vr_c
+            bd = dist2(row, col, br, bc)
+            for dr, dc in offsets:
+                cr, cc_ = shifted(vr_r, dr, dc), shifted(vr_c, dr, dc)
+                cd = dist2(row, col, cr, cc_)
+                upd = cd < bd
+                br = jnp.where(upd, cr, br)
+                bc = jnp.where(upd, cc_, bc)
+                bd = jnp.where(upd, cd, bd)
+            br = jnp.where(valid, br, s)
+            bc = jnp.where(valid, bc, s)
+            return (br, bc), (br != vr_r) | (bc != vr_c)
+
+        row_flat = row.reshape(-1)
+        col_flat = col.reshape(-1)
+        valid_flat = valid.reshape(-1)
+
+        def queued_round(carry, queue):
+            # Push formulation: gather the queued sources' pre-round pointers
+            # once, then one sequential scatter pass per offset in the dense
+            # kernel's order.  Each pass reads the target's current pointer —
+            # the dense round's evolving best accumulator — and targets are
+            # unique within a pass (distinct sources, one common shift), so
+            # every scatter is race-free and deterministic.
+            vr_r, vr_c = carry
+            rf = vr_r.reshape(-1)
+            cf = vr_c.reshape(-1)
+            live = queue >= 0
+            src = jnp.where(live, queue, 0)
+            pr = rf[src]          # pre-round source pointers (the offers)
+            pc = cf[src]
+            srow = row_flat[src]  # global coords are affine in the local
+            scol = col_flat[src]  # index, so target coords are arithmetic
+            sr, sc = src // Wp, src % Wp
+            tgts, flags = [], []
+            for dr, dc in offsets:
+                # The pixel that reads source s under offset (dr, dc) is
+                # t = s - (dr, dc): dense's shifted() hands (i, j) the
+                # neighbor at (i + dr, j + dc).
+                tr, tc = sr - dr, sc - dc
+                inb = live & (tr >= 0) & (tr < Hp) & (tc >= 0) & (tc < Wp)
+                tg = jnp.where(inb, tr * Wp + tc, n)  # n -> dropped
+                trow, tcol = srow - dr, scol - dc
+                cd = dist2(trow, tcol, pr, pc)
+                od = dist2(trow, tcol,
+                           jnp.take(rf, tg, mode="fill", fill_value=SENTINEL),
+                           jnp.take(cf, tg, mode="fill", fill_value=SENTINEL))
+                upd = (inb & (cd < od)
+                       & jnp.take(valid_flat, tg, mode="fill", fill_value=False))
+                tdrop = jnp.where(upd, tg, n)
+                rf = rf.at[tdrop].set(pr, mode="drop")
+                cf = cf.at[tdrop].set(pc, mode="drop")
+                tgts.append(tg)
+                flags.append(upd)
+            return ((rf.reshape(Hp, Wp), cf.reshape(Hp, Wp)),
+                    jnp.concatenate(tgts), jnp.concatenate(flags))
+
+        (vr_r, vr_c), iters, spills = queued_fixed_point(
+            dense_round, queued_round, (vr_r, vr_c),
+            max_iters=max_iters, capacity=capacity)
+        if batched:
+            or_ref[0] = vr_r
+            oc_ref[0] = vr_c
+            iters_ref[0, 0, 0] = iters
+            spills_ref[0, 0, 0] = spills
+        else:
+            or_ref[...] = vr_r
+            oc_ref[...] = vr_c
+            iters_ref[0, 0] = iters
+            spills_ref[0, 0] = spills
+
+    return kernel
+
+
+def _clip_capacity(queue_capacity: int, n: int) -> int:
+    # The queue counts per-contribution (duplicates included), so up to 8*n
+    # slots are meaningful — a capacity of 8*n can never overflow.
+    return max(1, min(int(queue_capacity), 8 * n))
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
+                                             "queue_capacity", "interpret"))
+def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
+                          max_iters: int = 1024, queue_capacity: int = 64,
+                          interpret: bool = True):
+    """Queued drain of one EDT halo block (DESIGN.md §2.5).
+
+    Returns (vr_r, vr_c, iters, spills) — pointer planes and iters
+    bit-identical to :func:`edt_tile_solve`; ``spills`` counts overflow
+    rounds that fell back to a dense sweep.
+    """
+    shp = vr_r.shape
+    cap = _clip_capacity(queue_capacity, shp[0] * shp[1])
+    kernel = _make_queued_kernel(connectivity, max_iters, cap)
+    out_shape = (
+        jax.ShapeDtypeStruct(shp, vr_r.dtype),
+        jax.ShapeDtypeStruct(shp, vr_c.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    )
+    full = lambda s_: pl.BlockSpec(s_, lambda: (0, 0))
+    o_r, o_c, iters, spills = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[full(shp)] * 5,
+        out_specs=(full(shp), full(shp), full((1, 1)), full((1, 1))),
+        interpret=interpret,
+    )(vr_r, vr_c, valid, row, col)
+    return o_r, o_c, iters[0, 0], spills[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
+                                             "queue_capacity", "interpret"))
+def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, *,
+                                  connectivity: int = 8, max_iters: int = 1024,
+                                  queue_capacity: int = 64,
+                                  interpret: bool = True):
+    """Queued drain of a (K, T+2, T+2) EDT batch; one local queue per grid
+    step.  Returns (vr_r, vr_c, iters, spills) with (K,) counters."""
+    K, Hp, Wp = vr_r.shape
+    cap = _clip_capacity(queue_capacity, Hp * Wp)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True)
+    out_shape = (
+        jax.ShapeDtypeStruct((K, Hp, Wp), vr_r.dtype),
+        jax.ShapeDtypeStruct((K, Hp, Wp), vr_c.dtype),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+    )
+    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+    o_r, o_c, iters, spills = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        out_shape=out_shape,
+        in_specs=[blk] * 5,
+        out_specs=(blk, blk, scalar, scalar),
+        interpret=interpret,
+    )(vr_r, vr_c, valid, row, col)
+    return o_r, o_c, iters[:, 0, 0], spills[:, 0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.pattern import offsets_for
+from repro.kernels.queue import queued_fixed_point
 
 
 def _neutral(dtype):
@@ -108,6 +109,153 @@ def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 102
         interpret=interpret,
     )(J, I, valid)
     return J_out, iters[0, 0]
+
+
+def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
+                        batched: bool = False):
+    """Queued variant (DESIGN.md §2.5), push formulation: the queue holds
+    last round's *improved* pixels, and each round gathers only those and
+    pushes ``min(I[t], J[s])`` to every neighbor ``t`` — O(capacity) work
+    per round instead of O(block).  Queue overflow spills to one dense
+    full-block round.  Accepted updates coincide exactly with the dense
+    kernel's (a non-improved neighbor's offer was already max-merged when
+    it last improved), so outputs and iteration counts are bit-identical
+    to :func:`_make_kernel` — only the work per round shrinks."""
+    offsets = offsets_for(connectivity)
+
+    def kernel(j_ref, i_ref, valid_ref, o_ref, iters_ref, spills_ref):
+        if batched:  # refs carry a leading (1,)-block batch dim under the grid
+            J = j_ref[0]
+            I = i_ref[0]
+            valid = valid_ref[0]
+        else:
+            J = j_ref[...]
+            I = i_ref[...]
+            valid = valid_ref[...]
+        Hp, Wp = J.shape  # (T+2, T+2)
+        n = Hp * Wp
+        neut = _neutral(J.dtype)
+        J = jnp.where(valid, J, neut)
+
+        def dense_round(J):
+            # Same body as the dense kernel's while-loop step.
+            Jp = jnp.pad(J, 1, constant_values=neut)
+            cand = jnp.full_like(J, neut)
+            for dr, dc in offsets:
+                nb = jax.lax.slice(Jp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
+                cand = jnp.maximum(cand, nb)
+            new = jnp.minimum(I, jnp.maximum(J, cand))
+            new = jnp.where(valid, new, neut)
+            return new, new != J
+
+        I_flat = I.reshape(-1)
+        valid_flat = valid.reshape(-1)
+
+        def queued_round(J, queue):
+            # Push formulation: gather the queued (improved) pixels' values
+            # once, offer min(I[t], J[s]) to each neighbor t, and scatter-max
+            # the improving offers back.  Duplicate targets (several sources
+            # improving one pixel) are safe: max is order-free and duplicate
+            # enqueues are idempotent (DESIGN.md §2.5).
+            Jf = J.reshape(-1)
+            live = queue >= 0
+            src = jnp.where(live, queue, 0)
+            vs = Jf[src]                    # pre-round source values
+            sr, sc = src // Wp, src % Wp
+            tgts = []                       # offsets unrolled in Python:
+            for dr, dc in offsets:          # Pallas forbids captured arrays
+                tr, tc = sr + dr, sc + dc
+                inb = live & (tr >= 0) & (tr < Hp) & (tc >= 0) & (tc < Wp)
+                tgts.append(jnp.where(inb, tr * Wp + tc, n))  # n -> dropped
+            tgt = jnp.concatenate(tgts)
+            offer = jnp.minimum(
+                jnp.take(I_flat, tgt, mode="fill", fill_value=neut),
+                jnp.concatenate([vs] * len(offsets)))
+            old = jnp.take(Jf, tgt, mode="fill", fill_value=neut)
+            imp = (offer > old) & jnp.take(valid_flat, tgt, mode="fill",
+                                           fill_value=False)
+            Jf = Jf.at[jnp.where(imp, tgt, n)].max(offer, mode="drop")
+            return Jf.reshape(Hp, Wp), tgt, imp
+
+        J, iters, spills = queued_fixed_point(
+            dense_round, queued_round, J,
+            max_iters=max_iters, capacity=capacity)
+        if batched:
+            o_ref[0] = J
+            iters_ref[0, 0, 0] = iters
+            spills_ref[0, 0, 0] = spills
+        else:
+            o_ref[...] = J
+            iters_ref[0, 0] = iters
+            spills_ref[0, 0] = spills
+
+    return kernel
+
+
+def _clip_capacity(queue_capacity: int, n: int) -> int:
+    # The queue counts per-contribution (duplicates included), so up to 8*n
+    # slots are meaningful — a capacity of 8*n can never overflow.
+    return max(1, min(int(queue_capacity), 8 * n))
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
+                                             "queue_capacity", "interpret"))
+def morph_tile_solve_queued(J, I, valid, *, connectivity: int = 8,
+                            max_iters: int = 1024, queue_capacity: int = 64,
+                            interpret: bool = True):
+    """Queued drain of one (T+2, T+2) halo block (DESIGN.md §2.5).
+
+    Returns (J_out, iters, spills): bit-identical J_out and iters to
+    :func:`morph_tile_solve`; ``spills`` counts the rounds whose candidate
+    set overflowed ``queue_capacity`` and fell back to a dense sweep.
+    """
+    cap = _clip_capacity(queue_capacity, J.shape[0] * J.shape[1])
+    kernel = _make_queued_kernel(connectivity, max_iters, cap)
+    out_shape = (
+        jax.ShapeDtypeStruct(J.shape, J.dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    )
+    scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
+    J_out, iters, spills = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        in_specs=[pl.BlockSpec(J.shape, lambda: (0, 0)),
+                  pl.BlockSpec(I.shape, lambda: (0, 0)),
+                  pl.BlockSpec(valid.shape, lambda: (0, 0))],
+        out_specs=(pl.BlockSpec(J.shape, lambda: (0, 0)), scalar, scalar),
+        interpret=interpret,
+    )(J, I, valid)
+    return J_out, iters[0, 0], spills[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
+                                             "queue_capacity", "interpret"))
+def morph_tile_solve_queued_batched(J, I, valid, *, connectivity: int = 8,
+                                    max_iters: int = 1024,
+                                    queue_capacity: int = 64,
+                                    interpret: bool = True):
+    """Queued drain of a (K, T+2, T+2) batch; each grid step owns one block
+    and one local queue.  Returns (J_out, iters, spills), both (K,)."""
+    K, Hp, Wp = J.shape
+    cap = _clip_capacity(queue_capacity, Hp * Wp)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True)
+    out_shape = (
+        jax.ShapeDtypeStruct((K, Hp, Wp), J.dtype),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+    )
+    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+    J_out, iters, spills = pl.pallas_call(
+        kernel,
+        grid=(K,),
+        out_shape=out_shape,
+        in_specs=[blk, blk, blk],
+        out_specs=(blk, scalar, scalar),
+        interpret=interpret,
+    )(J, I, valid)
+    return J_out, iters[:, 0, 0], spills[:, 0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))

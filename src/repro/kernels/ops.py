@@ -30,12 +30,30 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.edt_tile import edt_tile_solve, edt_tile_solve_batched
-from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_batched
+from repro.kernels.edt_tile import (edt_tile_solve, edt_tile_solve_batched,
+                                    edt_tile_solve_queued,
+                                    edt_tile_solve_queued_batched)
+from repro.kernels.morph_tile import (morph_tile_solve,
+                                      morph_tile_solve_batched,
+                                      morph_tile_solve_queued,
+                                      morph_tile_solve_queued_batched)
 from repro.kernels.raster_scan import raster_down
 from repro.label.ops import LABEL_CAP
 
 DEFAULT_MAX_ITERS = 1024
+
+
+def default_kernel_queue_capacity(block_side: int) -> int:
+    """Default in-kernel queue capacity for a (B, B) halo block.
+
+    The queue holds last round's *improved* pixels — a propagating
+    wavefront crossing the block is a band of O(B) of them.  A push round's
+    cost scales with the capacity whether or not the slots are occupied, so
+    the default tracks the band (B), floored at 64 so tiny tiles don't
+    thrash the dense-spill path and capped at the block size (a queue
+    bigger than the block is just the block).  See DESIGN.md §2.5.
+    """
+    return int(min(block_side * block_side, max(64, block_side)))
 
 
 def _up(x):
@@ -171,6 +189,128 @@ def tile_solver_edt_batched(connectivity: int = 8, interpret: bool = True,
     def solver(blocks):
         out, iters = edt_tile_pallas_batched(blocks, connectivity, interpret,
                                              max_iters)
+        return out, iters >= max_iters
+    return solver
+
+
+# ---------------------------------------------------------------------------
+# Queued-kernel adapters (DESIGN.md §2.5).  Same tile_solver contract as the
+# dense adapters above — the per-kernel `spills` counter is an intra-kernel
+# diagnostic and is not surfaced through the engine's block pytree.
+# ---------------------------------------------------------------------------
+
+def morph_tile_pallas_queued(J, I, valid, connectivity: int = 8,
+                             interpret: bool = True,
+                             max_iters: int = DEFAULT_MAX_ITERS,
+                             queue_capacity: int | None = None):
+    if queue_capacity is None:
+        queue_capacity = default_kernel_queue_capacity(J.shape[-1])
+    Ju, orig = _up(J)
+    Iu, _ = _up(I)
+    out, iters, spills = morph_tile_solve_queued(
+        Ju, Iu, valid, connectivity=connectivity, max_iters=max_iters,
+        queue_capacity=queue_capacity, interpret=interpret)
+    return (out.astype(orig) if orig is not None else out), iters, spills
+
+
+def tile_solver_morph_queued(connectivity: int = 8, interpret: bool = True,
+                             max_iters: int = DEFAULT_MAX_ITERS,
+                             queue_capacity: int | None = None):
+    """`tile_solver` backed by the queued morph kernel."""
+    def solver(block):
+        J, iters, _ = morph_tile_pallas_queued(
+            block["J"], block["I"], block["valid"], connectivity, interpret,
+            max_iters, queue_capacity)
+        out = dict(block)
+        out["J"] = J
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_morph_queued_batched(connectivity: int = 8,
+                                     interpret: bool = True,
+                                     max_iters: int = DEFAULT_MAX_ITERS,
+                                     queue_capacity: int | None = None):
+    """`batched_tile_solver` over the queued grid-over-batch morph kernel."""
+    def solver(blocks):
+        cap = (default_kernel_queue_capacity(blocks["J"].shape[-1])
+               if queue_capacity is None else queue_capacity)
+        Ju, orig = _up(blocks["J"])
+        Iu, _ = _up(blocks["I"])
+        J, iters, _ = morph_tile_solve_queued_batched(
+            Ju, Iu, blocks["valid"], connectivity=connectivity,
+            max_iters=max_iters, queue_capacity=cap, interpret=interpret)
+        out = dict(blocks)
+        out["J"] = J.astype(orig) if orig is not None else J
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_label_queued(connectivity: int = 8, interpret: bool = True,
+                             max_iters: int = DEFAULT_MAX_ITERS,
+                             queue_capacity: int | None = None):
+    """Queued morph kernel parametrized into the label masked-max update."""
+    def solver(block):
+        J, I = _label_as_morph(block)
+        cap = (default_kernel_queue_capacity(J.shape[-1])
+               if queue_capacity is None else queue_capacity)
+        lab, iters, _ = morph_tile_solve_queued(
+            J, I, block["valid"], connectivity=connectivity,
+            max_iters=max_iters, queue_capacity=cap, interpret=interpret)
+        out = dict(block)
+        out["lab"] = lab
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_label_queued_batched(connectivity: int = 8,
+                                     interpret: bool = True,
+                                     max_iters: int = DEFAULT_MAX_ITERS,
+                                     queue_capacity: int | None = None):
+    def solver(blocks):
+        J, I = _label_as_morph(blocks)
+        cap = (default_kernel_queue_capacity(J.shape[-1])
+               if queue_capacity is None else queue_capacity)
+        lab, iters, _ = morph_tile_solve_queued_batched(
+            J, I, blocks["valid"], connectivity=connectivity,
+            max_iters=max_iters, queue_capacity=cap, interpret=interpret)
+        out = dict(blocks)
+        out["lab"] = lab
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_edt_queued(connectivity: int = 8, interpret: bool = True,
+                           max_iters: int = DEFAULT_MAX_ITERS,
+                           queue_capacity: int | None = None):
+    def solver(block):
+        vr = block["vr"]
+        cap = (default_kernel_queue_capacity(vr.shape[-1])
+               if queue_capacity is None else queue_capacity)
+        o_r, o_c, iters, _ = edt_tile_solve_queued(
+            vr[0], vr[1], block["valid"], block["row"], block["col"],
+            connectivity=connectivity, max_iters=max_iters,
+            queue_capacity=cap, interpret=interpret)
+        out = dict(block)
+        out["vr"] = jnp.stack([o_r, o_c])
+        return out, iters >= max_iters
+    return solver
+
+
+def tile_solver_edt_queued_batched(connectivity: int = 8,
+                                   interpret: bool = True,
+                                   max_iters: int = DEFAULT_MAX_ITERS,
+                                   queue_capacity: int | None = None):
+    def solver(blocks):
+        vr = blocks["vr"]  # (K, 2, T+2, T+2)
+        cap = (default_kernel_queue_capacity(vr.shape[-1])
+               if queue_capacity is None else queue_capacity)
+        o_r, o_c, iters, _ = edt_tile_solve_queued_batched(
+            vr[:, 0], vr[:, 1], blocks["valid"], blocks["row"], blocks["col"],
+            connectivity=connectivity, max_iters=max_iters,
+            queue_capacity=cap, interpret=interpret)
+        out = dict(blocks)
+        out["vr"] = jnp.stack([o_r, o_c], axis=1)
         return out, iters >= max_iters
     return solver
 

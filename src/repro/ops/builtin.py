@@ -38,7 +38,10 @@ def _rng_valid(rng, shape, frac: float = 0.85):
 
 def _register_morph():
     import jax.numpy as jnp
-    from repro.kernels.ops import tile_solver_morph, tile_solver_morph_batched
+    from repro.kernels.ops import (tile_solver_morph,
+                                   tile_solver_morph_batched,
+                                   tile_solver_morph_queued,
+                                   tile_solver_morph_queued_batched)
     from repro.morph.ops import MorphReconstructOp
 
     def example_state(rng, shape):
@@ -56,6 +59,13 @@ def _register_morph():
             tile_solver_morph(op.connectivity, interpret, max_iters),
         pallas_batch_solver=lambda op, interpret, max_iters:
             tile_solver_morph_batched(op.connectivity, interpret, max_iters),
+        pallas_queue_solver=lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_morph_queued(op.connectivity, interpret, max_iters,
+                                     queue_capacity),
+        pallas_queue_batch_solver=(
+            lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_morph_queued_batched(op.connectivity, interpret,
+                                             max_iters, queue_capacity)),
         # default elementwise-max merge; single int32 mutable plane (J) and
         # the 8-neighbor max round define the cost model's unit weights.
         example_state=example_state,
@@ -66,7 +76,9 @@ def _register_morph():
 def _register_edt():
     import jax.numpy as jnp
     from repro.edt.ops import EdtOp, distance_map
-    from repro.kernels.ops import tile_solver_edt, tile_solver_edt_batched
+    from repro.kernels.ops import (tile_solver_edt, tile_solver_edt_batched,
+                                   tile_solver_edt_queued,
+                                   tile_solver_edt_queued_batched)
 
     def merge_factory(op):
         def merge(origin, old_inner, new_inner):
@@ -97,6 +109,13 @@ def _register_edt():
             tile_solver_edt(op.connectivity, interpret, max_iters),
         pallas_batch_solver=lambda op, interpret, max_iters:
             tile_solver_edt_batched(op.connectivity, interpret, max_iters),
+        pallas_queue_solver=lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_edt_queued(op.connectivity, interpret, max_iters,
+                                   queue_capacity),
+        pallas_queue_batch_solver=(
+            lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_edt_queued_batched(op.connectivity, interpret,
+                                           max_iters, queue_capacity)),
         scheduler_merge=merge_factory,
         example_state=example_state,
         # mutable payload = the (2, H, W) int32 vr pointer; one round does
@@ -125,6 +144,14 @@ def _register_fill_holes():
             get_op("morph").pallas_solver(op, interpret, max_iters),
         pallas_batch_solver=lambda op, interpret, max_iters:
             get_op("morph").pallas_batch_solver(op, interpret, max_iters),
+        pallas_queue_solver=lambda op, interpret, max_iters, queue_capacity:
+            get_op("morph").pallas_queue_solver(op, interpret, max_iters,
+                                                queue_capacity),
+        pallas_queue_batch_solver=(
+            lambda op, interpret, max_iters, queue_capacity:
+            get_op("morph").pallas_queue_batch_solver(op, interpret,
+                                                      max_iters,
+                                                      queue_capacity)),
         example_state=example_state,
         bytes_per_pixel=4.0, round_cost_weight=1.0,
         doc="binary fill-holes = border-seeded reconstruction of the "
@@ -133,7 +160,10 @@ def _register_fill_holes():
 
 def _register_label():
     import jax.numpy as jnp
-    from repro.kernels.ops import tile_solver_label, tile_solver_label_batched
+    from repro.kernels.ops import (tile_solver_label,
+                                   tile_solver_label_batched,
+                                   tile_solver_label_queued,
+                                   tile_solver_label_queued_batched)
     from repro.label.ops import LabelPropagationOp
 
     def example_state(rng, shape):
@@ -149,6 +179,13 @@ def _register_label():
             tile_solver_label(op.connectivity, interpret, max_iters),
         pallas_batch_solver=lambda op, interpret, max_iters:
             tile_solver_label_batched(op.connectivity, interpret, max_iters),
+        pallas_queue_solver=lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_label_queued(op.connectivity, interpret, max_iters,
+                                     queue_capacity),
+        pallas_queue_batch_solver=(
+            lambda op, interpret, max_iters, queue_capacity:
+            tile_solver_label_queued_batched(op.connectivity, interpret,
+                                             max_iters, queue_capacity)),
         # default elementwise-max merge: lab is a single monotone-max plane
         example_state=example_state,
         bytes_per_pixel=4.0, round_cost_weight=1.0,

@@ -85,6 +85,13 @@ class OpSpec:
         ``block -> (block, unconverged)`` (``kernels/ops.py``,
         DESIGN.md §2.1).  Without a batched factory the engine falls back
         to ``jax.vmap`` of the per-tile solver.
+    pallas_queue_solver / pallas_queue_batch_solver :
+        ``f(op, interpret, max_iters, queue_capacity) -> tile_solver`` —
+        the queued-kernel variants behind ``solve(..., kernel_queue=True)``
+        (in-kernel multi-level queue, DESIGN.md §2.5).  Same solver
+        contract; ``queue_capacity`` is the per-block local-queue size
+        (``None`` = the kernel-side default).  Optional: ops without them
+        simply reject ``kernel_queue=True`` with a clear error.
     scheduler_merge : ``f(op) -> merge_block_fn | None`` — the host
         scheduler's commutative write-back merge (None = built-in
         elementwise max, see :func:`default_scheduler_merge`).
@@ -111,6 +118,8 @@ class OpSpec:
     finalize: Optional[Callable] = None
     pallas_solver: Optional[Callable] = None
     pallas_batch_solver: Optional[Callable] = None
+    pallas_queue_solver: Optional[Callable] = None
+    pallas_queue_batch_solver: Optional[Callable] = None
     scheduler_merge: Callable = default_scheduler_merge
     example_state: Optional[Callable] = None
     bytes_per_pixel: float = 4.0

@@ -111,6 +111,8 @@ class SolveStats:
     tile: Optional[int] = None
     queue_capacity: Optional[int] = None
     drain_batch: Optional[int] = None        # blocks drained per dispatch
+    kernel_queue: bool = False               # in-kernel queue (DESIGN.md §2.5)
+    kernel_queue_capacity: Optional[int] = None  # resolved local-queue slots
     n_devices: int = 1
     predicted_cost: Optional[float] = None   # CostModel units (auto only)
     autotuned: bool = False
@@ -229,6 +231,10 @@ class EngineConfig:
     tile: Optional[int] = None
     queue_capacity: Optional[int] = None
     drain_batch: Optional[int] = None   # queue slots drained per dispatch
+    # tiled-pallas only: drain each block through the in-kernel multi-level
+    # queue (DESIGN.md §2.5) instead of dense full-block sweeps.
+    kernel_queue: bool = False
+    kernel_queue_capacity: Optional[int] = None  # None = kernel-side default
 
 
 class CostModel:
@@ -268,6 +274,13 @@ class CostModel:
     # Pallas interpret mode executes the kernel body in Python — only ever
     # competitive when compiled for a real TPU.
     interpret_penalty = 50.0
+    # Queued-kernel push rounds (kernel_queue=True, DESIGN.md §2.5) touch
+    # only O(queue capacity) pixels, but their gather/scatter/compaction
+    # steps do not fuse the way a dense round's shifted-plane passes do, so
+    # each round pays a fixed multi-dispatch overhead (in dense pixel-visit
+    # units; calibrated against the measured ~8x round-time gap on a 256²
+    # block).  Each drain also pays one dense seeding round up front.
+    kernel_queue_round_overhead = 6_000.0
     # Host threads assumed alongside the device stream in the `hybrid`
     # cooperative pool (solve()'s n_workers default).
     hybrid_host_workers = 4
@@ -319,6 +332,16 @@ class CostModel:
         if e in ("tiled", "tiled-pallas"):
             block = (cfg.tile + 2) ** 2
             inner = block * cfg.tile * self.vmem_discount
+            if e == "tiled-pallas" and cfg.kernel_queue:
+                from repro.kernels.ops import default_kernel_queue_capacity
+                qcap = (cfg.kernel_queue_capacity
+                        or default_kernel_queue_capacity(cfg.tile + 2))
+                # One dense seeding round + ~tile push rounds of fixed
+                # dispatch overhead plus 9 contribution lanes per slot:
+                # queued only wins on big blocks with sparse wavefronts.
+                inner = ((block + (self.kernel_queue_round_overhead
+                                   + 9 * qcap) * cfg.tile)
+                         * self.vmem_discount)
             if e == "tiled-pallas" and self.interpret:
                 inner *= self.interpret_penalty
             drains = self._drains(stats, cfg.tile)
@@ -406,6 +429,8 @@ class CostModel:
             db = min(cap, _default_drain_batch(t))
             out.append(EngineConfig("tiled", t, cap, db))
             out.append(EngineConfig("tiled-pallas", t, cap, db))
+            out.append(EngineConfig("tiled-pallas", t, cap, db,
+                                    kernel_queue=True))
             out.append(EngineConfig("scheduler", t, cap))
             out.append(EngineConfig("hybrid", t, cap, db))
             if stats.n_devices > 1:
@@ -544,38 +569,69 @@ _SOLVER_MEMO: Dict[tuple, Callable] = {}
 def _invalidate_solver_memo(op_cls: type) -> None:
     # A subclass may resolve its solver through the amended ancestor's
     # spec, so drop every memo row whose op class sits below op_cls too.
+    names = {op_cls.__name__}
     for key in [k for k in _SOLVER_MEMO if issubclass(k[0], op_cls)]:
+        names.add(key[0].__name__)
         del _SOLVER_MEMO[key]
+    # A spec change can also *fix* a candidate that failed during autotune
+    # micro-benchmarking (e.g. a broken queued-kernel factory): entries
+    # recorded under the old spec would keep serving the stale winner — and
+    # the stale failure verdict — forever, so the fixed candidate would
+    # never be retried.  Autotune signatures carry the op class *name* at
+    # position 0 (autotune_signature), which is the best subclass net we
+    # have here.
+    for cache in (_AUTOTUNE_CACHE, _AUTOTUNE_FAILURES):
+        for sig in [s for s in cache if s and s[0] in names]:
+            del cache[sig]
 
 
 on_spec_change(_invalidate_solver_memo)
 
 
 def _pallas_solver_for(op, interpret: bool, batched: bool = False,
-                       max_iters: int = None, engine: str = "tiled-pallas"):
+                       max_iters: int = None, engine: str = "tiled-pallas",
+                       kernel_queue: bool = False,
+                       kernel_queue_capacity: Optional[int] = None):
     from repro.kernels.ops import DEFAULT_MAX_ITERS
     if max_iters is None:
         max_iters = DEFAULT_MAX_ITERS
-    key = (type(op), op.connectivity, interpret, batched, max_iters)
+    key = (type(op), op.connectivity, interpret, batched, max_iters,
+           kernel_queue, kernel_queue_capacity)
     if key not in _SOLVER_MEMO:
         spec = spec_for(op)
-        factory = (None if spec is None else
-                   (spec.pallas_batch_solver if batched else spec.pallas_solver))
+        if kernel_queue:
+            factory = (None if spec is None else
+                       (spec.pallas_queue_batch_solver if batched
+                        else spec.pallas_queue_solver))
+            per_tile = None if spec is None else spec.pallas_queue_solver
+        else:
+            factory = (None if spec is None else
+                       (spec.pallas_batch_solver if batched
+                        else spec.pallas_solver))
+            per_tile = None if spec is None else spec.pallas_solver
         if factory is None:
-            if batched and spec is not None and spec.pallas_solver is not None:
+            if batched and per_tile is not None:
                 # Fall back to vmapping the per-tile kernel; a dedicated
                 # grid-over-batch kernel is only an optimization.
                 _SOLVER_MEMO[key] = jax.vmap(
                     _pallas_solver_for(op, interpret, max_iters=max_iters,
-                                       engine=engine))
+                                       engine=engine,
+                                       kernel_queue=kernel_queue,
+                                       kernel_queue_capacity=kernel_queue_capacity))
                 return _SOLVER_MEMO[key]
+            what = ("queued Pallas tile solver (OpSpec.pallas_queue_solver, "
+                    "required by kernel_queue=True)" if kernel_queue
+                    else "Pallas tile solver")
             raise ValueError(
-                f"op {type(op).__name__} has no Pallas tile solver "
+                f"op {type(op).__name__} has no {what} "
                 f"registered, which engine {engine!r} requires; registered "
                 f"ops: {list_ops()}.  Provide OpSpec.pallas_solver via "
                 "repro.ops.register_op() (or the register_pallas_solver "
                 "shim), or pick an op-generic engine such as 'tiled'.")
-        _SOLVER_MEMO[key] = factory(op, interpret, max_iters)
+        _SOLVER_MEMO[key] = (factory(op, interpret, max_iters,
+                                     kernel_queue_capacity)
+                             if kernel_queue
+                             else factory(op, interpret, max_iters))
     return _SOLVER_MEMO[key]
 
 
@@ -591,17 +647,26 @@ def _tiled_cfg_defaults(cfg: EngineConfig) -> Tuple[int, int, int]:
 def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
     solver = batched_solver = None
     tile, cap, drain_batch = _tiled_cfg_defaults(cfg)
+    kq = bool(cfg.kernel_queue)
+    kq_cap = None
     if cfg.engine == "tiled-pallas":
         # Thread the engine's (T+2)² geodesic bound into the kernels: the
         # kernel-default 1024 is *below* the bound for any tile >= 32, and a
         # drain cut off there must re-queue, not masquerade as converged.
         max_iters = (tile + 2) ** 2
+        if kq:
+            from repro.kernels.ops import default_kernel_queue_capacity
+            kq_cap = (cfg.kernel_queue_capacity
+                      or default_kernel_queue_capacity(tile + 2))
         solver = _pallas_solver_for(op, interpret, max_iters=max_iters,
-                                    engine=cfg.engine)
+                                    engine=cfg.engine, kernel_queue=kq,
+                                    kernel_queue_capacity=kq_cap)
         if drain_batch > 1:
             batched_solver = _pallas_solver_for(op, interpret, batched=True,
                                                 max_iters=max_iters,
-                                                engine=cfg.engine)
+                                                engine=cfg.engine,
+                                                kernel_queue=kq,
+                                                kernel_queue_capacity=kq_cap)
     out, st = run_tiled(op, state, tile=tile, queue_capacity=cap,
                         max_outer_rounds=max_rounds, tile_solver=solver,
                         drain_batch=drain_batch,
@@ -611,7 +676,8 @@ def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
                            overflow_events=int(st.overflow_events),
                            tiles_requeued=int(st.tiles_requeued),
                            tile=tile, queue_capacity=cap,
-                           drain_batch=drain_batch)
+                           drain_batch=drain_batch,
+                           kernel_queue=kq, kernel_queue_capacity=kq_cap)
 
 
 def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
@@ -910,6 +976,8 @@ def solve(op, state, *, engine: str = "auto",
           tile: Optional[int] = None,
           queue_capacity: Optional[int] = None,
           drain_batch: Optional[int] = None,
+          kernel_queue: Optional[bool] = None,
+          kernel_queue_capacity: Optional[int] = None,
           max_rounds: int = 1_000_000,
           cost_model: Optional[CostModel] = None,
           autotune: bool = False,
@@ -955,6 +1023,15 @@ def solve(op, state, *, engine: str = "auto",
         :data:`BATCH_DEFAULT_MAX_TILE` (dispatch-bound regime), sequential
         above.  Under ``"auto"`` it restricts the candidate set like
         ``tile``/``queue_capacity``.
+    kernel_queue : ``"tiled-pallas"`` only — drain each block through the
+        in-kernel multi-level queue (DESIGN.md §2.5): per kernel round only
+        the compacted candidate pixels are updated, spilling to one dense
+        sweep when they overflow ``kernel_queue_capacity`` (None = a
+        wavefront-band default, ``kernels.ops.default_kernel_queue_capacity``).
+        Results and round counts are bit-identical to the dense kernels —
+        only the per-round work changes.  Under ``"auto"``, ``None``
+        (default) keeps both dense and queued ``tiled-pallas`` candidates
+        in the ranking; True/False restricts to that variant.
     autotune : with ``engine="auto"``, micro-benchmark the model's top
         ``autotune_top_k`` candidates on this input (``autotune_repeats``
         timed runs each after a warm-up) and cache the winner keyed by
@@ -985,9 +1062,18 @@ def solve(op, state, *, engine: str = "auto",
                   interpret=interpret, n_workers=n_workers,
                   n_device_workers=n_device_workers,
                   hybrid_pallas=hybrid_pallas, cost_model=cost_model)
+    if (kernel_queue or kernel_queue_capacity is not None) \
+            and engine not in ("tiled-pallas", "auto"):
+        raise ValueError(
+            "kernel_queue / kernel_queue_capacity apply to the "
+            f"'tiled-pallas' engine (or 'auto') only, not {engine!r}: the "
+            "in-kernel queue lives inside the Pallas tile solvers "
+            "(DESIGN.md §2.5)")
 
     if engine != "auto":
-        cfg = EngineConfig(engine, tile, queue_capacity, drain_batch)
+        cfg = EngineConfig(engine, tile, queue_capacity, drain_batch,
+                           kernel_queue=bool(kernel_queue),
+                           kernel_queue_capacity=kernel_queue_capacity)
         return _run_engine(op, state, cfg, **run_kw)
 
     n_devices = len(devices) if devices is not None else len(jax.devices())
@@ -1004,10 +1090,22 @@ def solve(op, state, *, engine: str = "auto",
                  if c.engine in ("tiled", "tiled-pallas", "shard_map-tiled",
                                  "hybrid")
                  else c for c in cands]
+    if kernel_queue is not None:
+        # True/False restricts the tiled-pallas candidates to that kernel
+        # variant; None (the default) lets dense and queued compete.
+        cands = [c for c in cands
+                 if c.engine != "tiled-pallas"
+                 or c.kernel_queue == bool(kernel_queue)]
+    if kernel_queue_capacity is not None:
+        cands = [dataclasses.replace(c,
+                                     kernel_queue_capacity=kernel_queue_capacity)
+                 if c.engine == "tiled-pallas" and c.kernel_queue
+                 else c for c in cands]
 
     if autotune:
         cfg = _autotune(op, state, stats_in, model, cands,
-                        (tile, queue_capacity, drain_batch),
+                        (tile, queue_capacity, drain_batch, kernel_queue,
+                         kernel_queue_capacity),
                         autotune_top_k, autotune_repeats, **run_kw)
         out, st = _run_engine(op, state, cfg, **run_kw)
         return out, dataclasses.replace(

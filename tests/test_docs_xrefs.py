@@ -111,6 +111,26 @@ def test_every_engine_has_a_reference_section():
     assert not missing, f"docs/ENGINES.md lacks sections for: {missing}"
 
 
+def test_kernel_queue_docs_pinned():
+    """The in-kernel queue (ISSUE 6) must stay documented everywhere it is
+    user-visible: DESIGN.md §2.5 exists and describes the push/spill
+    design, docs/ENGINES.md documents both solve() knobs, EXPERIMENTS.md
+    carries the dense-vs-queued table."""
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    m = re.search(r"^###\s+§2\.5\b.*$", design, re.M)
+    assert m and "queue" in m.group(0).lower(), \
+        "DESIGN.md lacks the §2.5 in-kernel queue section"
+    sec = design[m.start():]
+    for term in ("compact_mask", "spill", "push"):
+        assert term in sec, f"DESIGN.md §2.5 no longer mentions {term!r}"
+    engines = _read(os.path.join(ROOT, "docs", "ENGINES.md"))
+    assert "kernel_queue_capacity" in engines and "kernel_queue" in engines, \
+        "docs/ENGINES.md lacks the kernel_queue knob rows"
+    experiments = _read(os.path.join(ROOT, "EXPERIMENTS.md"))
+    assert "speedup_vs_dense" in experiments, \
+        "EXPERIMENTS.md lacks the dense-vs-queued kernel table"
+
+
 def test_every_op_has_a_catalog_section():
     """docs/OPS.md must stay complete: one `## \\`op\\`` section per
     registered op — a new register_op() without a catalog entry fails

@@ -1,0 +1,382 @@
+"""Kernel-level suite for the in-kernel multi-level queue (DESIGN.md §2.5).
+
+Three layers:
+
+* unit tests of the scan-compaction primitive (`kernels/queue.py`) — empty
+  queue, single pixel, all-active block, the exact-capacity boundary, the
+  overflow/spill path, and duplicate-enqueue idempotence;
+* equivalence of the queued and dense tile solvers: bit-equal planes *and*
+  bit-equal iteration counts for morph/label, bit-equal Voronoi pointers
+  (stronger than distance-equality) for EDT — on seeded random masked
+  blocks always, and on hypothesis-generated ones when available;
+* the solve()-level plumbing (`kernel_queue=True` stats echo, knob guards)
+  and the autotune-failure invalidation regression (a failed queued-kernel
+  candidate must be retried after its spec is fixed, ISSUE 6 satellite).
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.solve as solve_mod
+from repro.core.pattern import offsets_for
+from repro.data.images import binary_blobs, tissue_image
+from repro.edt.ops import EdtOp
+from repro.kernels.edt_tile import edt_tile_solve, edt_tile_solve_queued
+from repro.kernels.morph_tile import (morph_tile_solve,
+                                      morph_tile_solve_queued,
+                                      morph_tile_solve_queued_batched)
+from repro.kernels.ops import default_kernel_queue_capacity
+from repro.kernels.queue import compact_mask, dilate
+from repro.morph.ops import MorphReconstructOp
+from repro.solve import CostModel, clear_autotune_cache, solve
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# compact_mask: the scan-compaction primitive.
+# ---------------------------------------------------------------------------
+
+def _compact(mask, capacity):
+    q, count, overflow = compact_mask(jnp.asarray(mask), capacity)
+    return np.asarray(q), int(count), bool(overflow)
+
+
+def test_compact_empty_mask():
+    q, count, overflow = _compact(np.zeros((4, 6), bool), 8)
+    assert count == 0 and not overflow
+    assert (q == -1).all()
+
+
+def test_compact_single_pixel():
+    m = np.zeros((4, 6), bool)
+    m[2, 3] = True
+    q, count, overflow = _compact(m, 8)
+    assert count == 1 and not overflow
+    assert q[0] == 2 * 6 + 3
+    assert (q[1:] == -1).all()
+
+
+def test_compact_all_active_block():
+    m = np.ones((3, 5), bool)
+    q, count, overflow = _compact(m, 15)
+    assert count == 15 and not overflow
+    np.testing.assert_array_equal(q, np.arange(15))
+
+
+def test_compact_exact_capacity_boundary():
+    """count == capacity packs everything with no overflow — off-by-one
+    here would either drop the last index or spill a fitting round."""
+    m = np.zeros((4, 4), bool)
+    m.reshape(-1)[[1, 5, 7, 11]] = True
+    q, count, overflow = _compact(m, 4)
+    assert count == 4 and not overflow
+    np.testing.assert_array_equal(q, [1, 5, 7, 11])
+
+
+def test_compact_overflow_reports_and_keeps_raster_prefix():
+    m = np.ones((4, 4), bool)
+    q, count, overflow = _compact(m, 5)
+    assert count == 16 and overflow
+    # first `capacity` indices in raster order; none dropped mid-queue
+    np.testing.assert_array_equal(q, np.arange(5))
+
+
+def test_compact_is_idempotent_on_duplicates():
+    """The queue is index-compaction of a *set* (a boolean mask): enqueuing
+    the same pixel 'twice' (mask | mask) is the identity, so a duplicate
+    candidate can never occupy two slots."""
+    rng = np.random.default_rng(7)
+    m = rng.random((6, 6)) < 0.4
+    q1, c1, o1 = _compact(m, 12)
+    q2, c2, o2 = _compact(m | m, 12)
+    np.testing.assert_array_equal(q1, q2)
+    assert (c1, o1) == (c2, o2)
+    assert len(set(q1[q1 >= 0])) == (q1 >= 0).sum()   # slots are distinct
+
+
+def test_dilate_marks_neighbors():
+    m = np.zeros((5, 5), bool)
+    m[2, 2] = True
+    d8 = np.asarray(dilate(jnp.asarray(m), offsets_for(8)))
+    assert d8.sum() == 8 and not d8[2, 2]             # ring, not the center
+    d4 = np.asarray(dilate(jnp.asarray(m), offsets_for(4)))
+    assert d4.sum() == 4
+
+
+def test_default_capacity_is_band_sized():
+    assert default_kernel_queue_capacity(10) == 64        # floor
+    assert default_kernel_queue_capacity(130) == 130      # wavefront band ~ T+2
+    assert default_kernel_queue_capacity(4) == 16         # capped at block
+
+
+# ---------------------------------------------------------------------------
+# Queued vs dense tile solvers.
+# ---------------------------------------------------------------------------
+
+def _morph_block(h, w, seed, density=0.8):
+    marker, mask = tissue_image(h, w, density, seed)
+    J = jnp.asarray(np.minimum(marker, mask).astype(np.int32))
+    I = jnp.asarray(mask.astype(np.int32))
+    rng = np.random.default_rng(seed + 1000)
+    valid = jnp.asarray(rng.random((h, w)) < 0.9)
+    return J, I, valid
+
+
+def _assert_morph_equiv(J, I, valid, capacity, conn=8):
+    d, di = morph_tile_solve(J, I, valid, connectivity=conn, interpret=True)
+    q, qi, spills = morph_tile_solve_queued(
+        J, I, valid, connectivity=conn, queue_capacity=capacity,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(q))
+    assert int(di) == int(qi)
+    return int(qi), int(spills)
+
+
+@pytest.mark.parametrize("conn", [4, 8])
+@pytest.mark.parametrize("capacity", [1, 33, 256])
+def test_queued_morph_bit_equals_dense(conn, capacity):
+    J, I, valid = _morph_block(34, 34, seed=conn)
+    _assert_morph_equiv(J, I, valid, capacity, conn)
+
+
+def test_overflow_spill_path_never_drops_work():
+    """capacity=1 forces dense spills whenever a round improves more than
+    one pixel: results and round counts still match the dense kernel
+    exactly, and the spill counter reports the fallbacks."""
+    J, I, valid = _morph_block(34, 34, seed=5)
+    iters, spills = _assert_morph_equiv(J, I, valid, capacity=1)
+    assert 1 <= spills <= iters - 1   # spills exercised; round 1 never spills
+
+    # generous capacity: same fixed point, and queued rounds dominate.  The
+    # queue count is per-*contribution* (duplicate targets included — a
+    # conservative overflow trigger), so a handful of early wide rounds may
+    # still spill even at 8·n slots; every spill is just a dense round.
+    iters2, spills2 = _assert_morph_equiv(J, I, valid, capacity=8 * 34 * 34)
+    assert iters2 == iters and spills2 < spills and spills2 <= 2
+
+
+def test_queued_edt_bit_equals_dense():
+    for conn in (4, 8):
+        op = EdtOp(connectivity=conn)
+        st_ = op.make_state(jnp.asarray(binary_blobs(34, 34, 0.5, seed=3)))
+        args = (st_["vr"][0], st_["vr"][1], st_["valid"], st_["row"],
+                st_["col"])
+        dr, dc, di = edt_tile_solve(*args, connectivity=conn, interpret=True)
+        qr, qc, qi, _ = edt_tile_solve_queued(
+            *args, connectivity=conn, queue_capacity=48, interpret=True)
+        # bit-equal *pointers* (not just distances): the queued round runs
+        # the same strict-< offset scan, so even ties resolve identically
+        np.testing.assert_array_equal(np.asarray(dr), np.asarray(qr))
+        np.testing.assert_array_equal(np.asarray(dc), np.asarray(qc))
+        assert int(di) == int(qi)
+
+
+def test_queued_batched_matches_single():
+    blocks = [_morph_block(34, 34, seed=s) for s in range(4)]
+    J = jnp.stack([b[0] for b in blocks])
+    I = jnp.stack([b[1] for b in blocks])
+    valid = jnp.stack([b[2] for b in blocks])
+    out, iters, spills = morph_tile_solve_queued_batched(
+        J, I, valid, connectivity=8, queue_capacity=48, interpret=True)
+    assert iters.shape == (4,) and spills.shape == (4,)
+    for k, (Jk, Ik, vk) in enumerate(blocks):
+        ref, ri, _ = morph_tile_solve_queued(
+            Jk, Ik, vk, connectivity=8, queue_capacity=48, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref))
+        assert int(iters[k]) == int(ri)
+
+
+def test_serpentine_rounds_parity():
+    """The property behind the CI rounds-guard (bench_queue_variants):
+    queued rounds-to-converge on the serpentine corridor never exceed the
+    dense kernel's — a silently dropped enqueue would stall the wavefront
+    and break the equality."""
+    from test_truncation import serpentine_case, _as_block
+    marker, mask, expected = serpentine_case(32)
+    J, I, valid = _as_block(marker, mask)
+    d, di = morph_tile_solve(J, I, valid, connectivity=8, max_iters=34 ** 2,
+                             interpret=True)
+    q, qi, _ = morph_tile_solve_queued(J, I, valid, connectivity=8,
+                                       max_iters=34 ** 2, queue_capacity=64,
+                                       interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(q)[1:-1, 1:-1], expected)
+    assert int(qi) <= int(di)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (skipped without the dependency; the seeded
+# sweeps above keep the invariant pinned either way).
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=15, deadline=None)
+
+    @st.composite
+    def masked_block(draw, max_side=20):
+        h = draw(st.integers(4, max_side))
+        w = draw(st.integers(4, max_side))
+        seed = draw(st.integers(0, 2**31 - 1))
+        capacity = draw(st.integers(1, h * w + 8))
+        rng = np.random.default_rng(seed)
+        valid = rng.random((h, w)) < draw(st.floats(0.3, 1.0))
+        return h, w, seed, capacity, valid
+
+    @given(masked_block())
+    @settings(**SETTINGS)
+    def test_property_queued_morph_equals_dense(case):
+        h, w, seed, capacity, valid = case
+        rng = np.random.default_rng(seed)
+        mask = rng.integers(0, 200, (h, w)).astype(np.int32)
+        marker = np.where(rng.random((h, w)) < 0.1, mask, 0).astype(np.int32)
+        _assert_morph_equiv(jnp.asarray(marker), jnp.asarray(mask),
+                            jnp.asarray(valid), capacity)
+
+    @given(masked_block())
+    @settings(**SETTINGS)
+    def test_property_queued_label_equals_dense(case):
+        """Label = the morph kernel parametrized (I = fg ? CAP : 0): the
+        queued variant must agree under that parametrization too."""
+        from repro.label.ops import LABEL_CAP
+        h, w, seed, capacity, valid = case
+        rng = np.random.default_rng(seed)
+        fg = rng.random((h, w)) < 0.55
+        I = np.where(fg, LABEL_CAP, 0).astype(np.int32)
+        lab = np.where(fg, np.arange(1, h * w + 1).reshape(h, w), 0)
+        _assert_morph_equiv(jnp.asarray(lab.astype(np.int32)),
+                            jnp.asarray(I), jnp.asarray(valid), capacity)
+
+    @given(masked_block())
+    @settings(**SETTINGS)
+    def test_property_queued_edt_distance_equals_dense(case):
+        h, w, seed, capacity, valid = case
+        rng = np.random.default_rng(seed)
+        fg = rng.random((h, w)) < 0.5
+        op = EdtOp(connectivity=8)
+        st_ = op.make_state(jnp.asarray(fg), jnp.asarray(valid))
+        args = (st_["vr"][0], st_["vr"][1], st_["valid"], st_["row"],
+                st_["col"])
+        dr, dc, di = edt_tile_solve(*args, connectivity=8, interpret=True)
+        qr, qc, qi, _ = edt_tile_solve_queued(
+            *args, connectivity=8, queue_capacity=capacity, interpret=True)
+
+        def d2(rr, cc):
+            return ((np.asarray(st_["row"]) - np.asarray(rr)) ** 2
+                    + (np.asarray(st_["col"]) - np.asarray(cc)) ** 2)
+
+        np.testing.assert_array_equal(d2(dr, dc), d2(qr, qc))
+        assert int(di) == int(qi)
+
+
+# ---------------------------------------------------------------------------
+# solve()-level plumbing.
+# ---------------------------------------------------------------------------
+
+def _morph_case(shape=(40, 44), seed=0):
+    rng = np.random.default_rng(seed)
+    mask = rng.integers(0, 200, shape).astype(np.int32)
+    marker = np.where(rng.random(shape) < 0.02, mask, 0).astype(np.int32)
+    op = MorphReconstructOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+
+
+def test_solve_kernel_queue_stats_echo_resolved_knobs():
+    op, state = _morph_case()
+    dense, ds = solve(op, state, engine="tiled-pallas", tile=16)
+    assert ds.kernel_queue is False and ds.kernel_queue_capacity is None
+    out, st_ = solve(op, state, engine="tiled-pallas", tile=16,
+                     kernel_queue=True)
+    assert st_.kernel_queue is True
+    assert st_.kernel_queue_capacity == default_kernel_queue_capacity(18)
+    np.testing.assert_array_equal(np.asarray(out["J"]),
+                                  np.asarray(dense["J"]))
+    assert st_.rounds == ds.rounds and st_.tiles_processed == ds.tiles_processed
+
+
+def test_kernel_queue_knob_rejected_off_pallas():
+    op, state = _morph_case()
+    with pytest.raises(ValueError, match="tiled-pallas"):
+        solve(op, state, engine="tiled", kernel_queue=True)
+    with pytest.raises(ValueError, match="tiled-pallas"):
+        solve(op, state, engine="frontier", kernel_queue_capacity=32)
+
+
+def test_cost_model_candidates_include_queued_variant():
+    op, state = _morph_case()
+    stats = solve_mod.collect_input_stats(op, state)
+    cands = CostModel().candidates(stats)
+    queued = [c for c in cands if c.kernel_queue]
+    assert queued and all(c.engine == "tiled-pallas" for c in queued)
+    dense = [c for c in cands
+             if c.engine == "tiled-pallas" and not c.kernel_queue]
+    assert len(dense) == len(queued)    # both variants compete per tile
+
+
+def test_auto_kernel_queue_restricts_candidates():
+    op, state = _morph_case(shape=(24, 24))
+    out, st_ = solve(op, state, engine="auto", tile=8, kernel_queue=True)
+    assert st_.engine != "tiled-pallas" or st_.kernel_queue
+    ref, _ = solve(op, state, engine="frontier")
+    np.testing.assert_array_equal(np.asarray(out["J"]), np.asarray(ref["J"]))
+
+
+# ---------------------------------------------------------------------------
+# Autotune-failure invalidation (ISSUE 6 satellite): a broken queued-kernel
+# candidate recorded in _AUTOTUNE_FAILURES/_AUTOTUNE_CACHE must be retried
+# once its spec is fixed — on_spec_change purges both caches.
+# ---------------------------------------------------------------------------
+
+def test_autotune_retries_after_failed_candidate_is_fixed():
+    class _RetryOp(MorphReconstructOp):
+        pass
+
+    morph_spec = solve_mod.spec_for(MorphReconstructOp(connectivity=8))
+
+    def broken(op, interpret, max_iters):
+        raise RuntimeError("injected kernel failure")
+
+    solve_mod.register_pallas_solver(_RetryOp, broken, broken)
+    op = _RetryOp(connectivity=8)
+    _, state = _morph_case(shape=(24, 24), seed=3)
+
+    # Force the broken tiled-pallas candidate into the measured set: rank
+    # it alone so the autotune loop must try (and fail) it.
+    cands = [solve_mod.EngineConfig("tiled-pallas", 8, 16, 1),
+             solve_mod.EngineConfig("frontier")]
+    stats = solve_mod.collect_input_stats(op, state)
+    model = CostModel()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        cfg = solve_mod._autotune(op, state, stats, model, cands, (), 2, 1,
+                                  max_rounds=1000)
+    sig = solve_mod.autotune_signature(op, stats, ())
+    assert sig in solve_mod._AUTOTUNE_FAILURES      # the failure was recorded
+    assert cfg.engine == "frontier"                  # winner = the survivor
+
+    # Fix the spec: the change hook must purge the poisoned entries ...
+    solve_mod.register_pallas_solver(_RetryOp, morph_spec.pallas_solver,
+                                     morph_spec.pallas_batch_solver)
+    assert sig not in solve_mod._AUTOTUNE_FAILURES
+    assert sig not in solve_mod._AUTOTUNE_CACHE
+
+    # ... so a re-autotune measures the fixed candidate cleanly.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        cfg2 = solve_mod._autotune(op, state, stats, model, cands, (), 2, 1,
+                                   max_rounds=1000)
+    assert sig in solve_mod._AUTOTUNE_CACHE
+    assert sig not in solve_mod._AUTOTUNE_FAILURES
+    assert cfg2 in cands
+
+
+def test_clear_autotune_cache_still_clears_everything():
+    clear_autotune_cache()
+    assert not solve_mod._AUTOTUNE_CACHE and not solve_mod._AUTOTUNE_FAILURES

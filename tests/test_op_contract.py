@@ -92,6 +92,68 @@ def test_restore_invalid_holds(example, name):
 
 
 # ---------------------------------------------------------------------------
+# Queued kernel path (kernel_queue=True, DESIGN.md §2.5): every registered
+# op that ships queue solvers is exercised through the in-kernel multi-level
+# queue automatically; ops without them are skipped with the reason named.
+# ---------------------------------------------------------------------------
+
+def _queued_or_skip(name):
+    spec = get_op(name)
+    if spec.pallas_queue_solver is None:
+        pytest.skip(f"op {name!r} registers no OpSpec.pallas_queue_solver; "
+                    "the queued kernel path (kernel_queue=True) is opt-in")
+    return spec
+
+
+@pytest.mark.parametrize("capacity,drain_batch", [(4, 2), (None, 1)],
+                         ids=["cap4-spills-batched", "cap-default"])
+@pytest.mark.parametrize("name", OPS)
+def test_queued_kernel_path_reaches_identical_fixed_points(example, name,
+                                                           capacity,
+                                                           drain_batch):
+    """kernel_queue=True vs the frontier reference, through OpSpec.finalize.
+    capacity=4 starves the per-block queue so most rounds overflow into the
+    dense-spill fallback — correctness must survive the spill path too —
+    and drain_batch=2 routes it through the batched (grid-over-batch)
+    queued kernels."""
+    spec = _queued_or_skip(name)
+    _, op, state = example[name]
+    ref, _ = solve(op, state, engine="frontier")
+    ref_result = np.asarray(spec.extract(op, ref))
+    out, st = solve(op, state, engine="tiled-pallas", tile=8,
+                    queue_capacity=8, drain_batch=drain_batch,
+                    kernel_queue=True, kernel_queue_capacity=capacity)
+    assert st.kernel_queue is True
+    if capacity is not None:
+        assert st.kernel_queue_capacity == capacity
+    else:
+        assert st.kernel_queue_capacity is not None    # resolved default
+    np.testing.assert_array_equal(
+        np.asarray(spec.extract(op, out)), ref_result,
+        err_msg=f"{name}: queued tiled-pallas vs frontier fixed point")
+
+
+@pytest.mark.parametrize("name", OPS)
+def test_queued_restore_invalid_holds(example, name):
+    """The engine output contract holds on the queued path: invalid cells
+    of every mutable leaf carry their input values bit-for-bit."""
+    _queued_or_skip(name)
+    _, op, state = example[name]
+    inv = ~np.asarray(state["valid"])
+    assert inv.any(), "example_state must include invalid pixels"
+    out, _ = solve(op, state, engine="tiled-pallas", tile=8,
+                   queue_capacity=8, kernel_queue=True)
+    static = set(op.static_leaves)
+    for k in state:
+        if k in static:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(out[k])[..., inv], np.asarray(state[k])[..., inv],
+            err_msg=f"{name}: invalid cells of {k!r} must hold input "
+                    "values on the queued kernel path")
+
+
+# ---------------------------------------------------------------------------
 # Registry mechanics.
 # ---------------------------------------------------------------------------
 

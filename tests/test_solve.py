@@ -128,7 +128,7 @@ def test_autotune_caches_winner(morph_case):
     assert len(solve_mod._AUTOTUNE_CACHE) == 1          # cache hit, no growth
     assert s2.engine == s1.engine
     sig = autotune_signature(op, collect_input_stats(op, state),
-                             restrictions=(None, None, None))
+                             restrictions=(None, None, None, None, None))
     assert sig in solve_mod._AUTOTUNE_CACHE
     # a caller restriction is a different cache row, never a stale hit
     _, s3 = solve(op, state, engine="auto", autotune=True,
