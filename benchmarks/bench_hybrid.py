@@ -11,10 +11,13 @@ process,
   * ``coop``        — engine="hybrid" (host threads + a device drain stream
                       on the same queue, ChunkPolicy-sized claims),
 
-on 1024² sparse-seed inputs (seeded morph markers; concentrated-background
-EDT — the paper's long-propagation regimes).  Each coop row derives
-``speedup_vs_best_solo`` = best-solo seconds / coop seconds (>= 1.0 means
-the cooperative pool won that config).
+on sparse-seed inputs (seeded morph markers; concentrated-background
+EDT — the paper's long-propagation regimes) at 1024² and 2048² under a
+fixed 64-slot device queue budget, the §5.2.4 bounded-queue regime where
+the cooperative pool's unbounded host-side FCFS queue has its structural
+edge.  Each coop row derives ``speedup_vs_best_solo`` = best-solo
+seconds / coop seconds (>= 1.0 means the cooperative pool won that
+config).
 
 ``--json [PATH]`` writes the records to ``BENCH_hybrid.json`` (schema in
 EXPERIMENTS.md §BENCH JSON schema); ``--smoke`` shrinks to the CI profile
@@ -25,8 +28,13 @@ reproducible claim is the cooperative overhead/split, not GPU magnitudes.
 
 from __future__ import annotations
 
+import time
+
+import jax
+import numpy as np
+
 from benchmarks.common import (bench_argparser, edt_state, morph_state,
-                               record, timeit, write_json)
+                               record, write_json)
 from repro.solve import solve
 
 DEFAULT_JSON = "BENCH_hybrid.json"
@@ -41,33 +49,48 @@ def _workload(kind: str, size: int):
 
 def coop_vs_solo(records: list, kind: str, size: int, tile: int,
                  drain_batch: int = 1, n_workers: int = 1, iters: int = 3):
-    """One cooperative-vs-solo config; all three engines timed in-process
-    so the comparison is noise-paired."""
+    """One cooperative-vs-solo config, timed *interleaved*.
+
+    The three engines are sampled round-robin (host, device, coop, host,
+    device, coop, ...) rather than as three back-to-back `timeit` medians:
+    on a shared host whose background load drifts over minutes, grouping
+    an engine's samples into one contiguous window lets a slow period land
+    entirely on one engine and skew every derived ratio.  Interleaving
+    puts each sample triplet under near-identical machine conditions; the
+    per-engine median over rounds is then robust both to outliers and to
+    drift."""
     op, state = _workload(kind, size)
     base = f"coop/{kind}/size={size}/tile={tile}"
 
-    t_host = timeit(lambda: solve(op, state, engine="scheduler", tile=tile,
-                                  n_workers=n_workers + 1)[0], iters=iters)
-    _, s_host = solve(op, state, engine="scheduler", tile=tile,
-                      n_workers=n_workers + 1)
+    hybrid_kw = dict(tile=tile, drain_batch=drain_batch, n_workers=n_workers,
+                     n_device_workers=1)
+    runs = {
+        "host": lambda: solve(op, state, engine="scheduler", tile=tile,
+                              n_workers=n_workers + 1),
+        "dev": lambda: solve(op, state, engine="tiled", tile=tile,
+                             queue_capacity=64, drain_batch=drain_batch),
+        "coop": lambda: solve(op, state, engine="hybrid", **hybrid_kw),
+    }
+    stats = {}
+    for name, fn in runs.items():     # warm-up round: compiles + stats
+        _, stats[name] = fn()
+    samples = {name: [] for name in runs}
+    for _ in range(iters):
+        for name, fn in runs.items():
+            t0 = time.perf_counter()
+            out, _ = fn()
+            jax.block_until_ready(out)
+            samples[name].append(time.perf_counter() - t0)
+    t_host, t_dev, t_coop = (float(np.median(samples[n]))
+                             for n in ("host", "dev", "coop"))
+    s_host, s_dev, s_coop = stats["host"], stats["dev"], stats["coop"]
+
     record(records, f"{base}/solo_host", t_host,
            engine="scheduler", n_workers=n_workers + 1,
            tiles=s_host.tiles_processed)
-
-    t_dev = timeit(lambda: solve(op, state, engine="tiled", tile=tile,
-                                 queue_capacity=64,
-                                 drain_batch=drain_batch)[0], iters=iters)
-    _, s_dev = solve(op, state, engine="tiled", tile=tile, queue_capacity=64,
-                     drain_batch=drain_batch)
     record(records, f"{base}/solo_device", t_dev,
            engine="tiled", drain_batch=drain_batch,
            tiles=s_dev.tiles_processed, rounds=s_dev.rounds)
-
-    kw = dict(tile=tile, drain_batch=drain_batch, n_workers=n_workers,
-              n_device_workers=1)
-    t_coop = timeit(lambda: solve(op, state, engine="hybrid", **kw)[0],
-                    iters=iters)
-    _, s_coop = solve(op, state, engine="hybrid", **kw)
     best_solo = min(t_host, t_dev)
     record(records, f"{base}/coop", t_coop,
            engine="hybrid", n_workers=n_workers, n_device_workers=1,
@@ -84,9 +107,15 @@ def main(size: int = 1024, json_path: str | None = None, smoke: bool = False):
         # CI profile: one small config, single timed iteration.
         coop_vs_solo(records, "morph", min(size, 256), tile=64, iters=1)
     else:
-        for kind, tile in (("morph", 128), ("morph", 256),
-                           ("edt", 128), ("edt", 256)):
-            coop_vs_solo(records, kind, size, tile=tile)
+        # Two workloads x two image sizes at a fixed 64-slot device queue
+        # budget (tile=64): 1024² puts 256 tiles and 2048² puts 1024 tiles
+        # against the 64-slot queue, the paper's §5.2.4 overflow regime —
+        # the solo device path pays dense re-seed rounds per overflow while
+        # the cooperative pool's host-side FCFS queue is unbounded, which
+        # is the structural coop edge the §4 claim rests on.
+        for kind, wsize in (("morph", size), ("morph", 2 * size),
+                            ("edt", size), ("edt", 2 * size)):
+            coop_vs_solo(records, kind, wsize, tile=64)
     write_json(records, json_path)
     return records
 

@@ -50,7 +50,7 @@ if {sparse}:
 op = MorphReconstructOp(connectivity=8)
 state = op.make_state(jnp.asarray(marker.astype(np.int32)),
                       jnp.asarray(mask.astype(np.int32)))
-kw = dict(tile={tile}, queue_capacity=64, drain_batch=4) if {tiled} else {{}}
+kw = dict(tile={tile}, queue_capacity=64, drain_batch=1) if {tiled} else {{}}
 out, st = run_sharded(op, state, mesh, **kw)   # compile+warm
 ts = []
 for _ in range({iters}):
@@ -63,7 +63,7 @@ print("RESULT", np.median(ts), int(st.bp_rounds), int(st.tiles_processed),
 """
 
 
-def _run_child(ndev, mesh_shape, size, sparse=False, tiled=False, tile=32,
+def _run_child(ndev, mesh_shape, size, sparse=False, tiled=False, tile=128,
                iters=3):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
@@ -79,38 +79,35 @@ def _run_child(ndev, mesh_shape, size, sparse=False, tiled=False, tile=32,
     return float(t), int(rounds), int(tiles), int(ovf)
 
 
-def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4)):
-    """Fig 10 analogue: host tile scheduler, 1..N workers."""
+def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4),
+                      tag: str = "fig10/scheduler"):
+    """Fig 10 analogue: host tile scheduler, 1..N workers.
+
+    Every worker thread drains through solve.py's process-wide compiled
+    scheduler drain (the "scheduler-drain" compile-cache entry) — per-bench
+    local re-jits used to serialize workers behind tracing and showed up as
+    the fig10 workers=2 = 0.47x regression.  Returns {workers: seconds}.
+    """
     from repro.core.scheduler import TileScheduler
-    from repro.core.tiles import _tile_local_solve, initial_active_tiles
+    from repro.core.tiles import initial_active_tiles
     from repro.data.images import tissue_image
     from repro.morph.ops import MorphReconstructOp
+    from repro.solve import _host_tile_fn_for
     import jax.numpy as jnp
-    import jax
     import time
 
     marker, mask = tissue_image(size, size, 1.0, seed=0)
     op = MorphReconstructOp(connectivity=8)
     T = 128
-    # (T+2)^2 is the geodesic bound — anything lower can silently truncate
-    # a drain (the scheduler has no unconverged self-requeue of its own).
-    solve = jax.jit(
-        lambda blk: _tile_local_solve(op, blk, max_iters=(T + 2) ** 2)[0])
+    tile_fn = _host_tile_fn_for(op, T)
 
-    def tile_fn(block):
-        blk = {k: jnp.asarray(v) for k, v in block.items()}
-        out = solve(blk)
-        nb = dict(block)
-        nb["J"] = np.asarray(out["J"])
-        return nb, None
+    # warm the shared jitted drain so worker=1 timing excludes compilation
+    warm = {"J": np.zeros((T + 2, T + 2), np.int32),
+            "I": np.zeros((T + 2, T + 2), np.int32),
+            "valid": np.ones((T + 2, T + 2), bool)}
+    tile_fn(warm)
 
-    # warm the jitted tile solver so worker=1 timing excludes compilation
-    warm = {"J": jnp.zeros((T + 2, T + 2), jnp.int32),
-            "I": jnp.zeros((T + 2, T + 2), jnp.int32),
-            "valid": jnp.ones((T + 2, T + 2), bool)}
-    jax.block_until_ready(solve(warm))
-
-    base = None
+    times, base = {}, None
     for workers in workers_list:
         state = {"J": np.minimum(marker, mask).astype(np.int32),
                  "I": mask.astype(np.int32),
@@ -120,9 +117,56 @@ def scheduler_scaling(size: int, records: list, workers_list=(1, 2, 4)):
         t0 = time.perf_counter()
         TileScheduler(state, T, tile_fn, active, n_workers=workers).run()
         t = time.perf_counter() - t0
+        times[workers] = t
         base = base or t
-        record(records, f"fig10/scheduler/workers={workers}", t,
+        record(records, f"{tag}/workers={workers}", t,
                 speedup=round(base / t, 2))
+    return times
+
+
+def scheduler_guard(records: list, size: int = 2048, reps: int = 3):
+    """The workers=2 regression guard on a 2048² input.
+
+    On a multi-core host the shared compiled drain makes two workers a
+    genuine win, so the floor is 1.0x.  A process pinned to ONE core (this
+    repo's CI containers) caps thread parallelism at parity minus GIL +
+    XLA-dispatch contention — measured ~0.8-0.9x there — so the floor drops
+    to 0.75x, which still trips on the re-trace regression class this
+    guards against (workers=2 used to measure 0.47x).  Best-of-`reps`
+    ratios, because single-core interleaving is noisy.
+    """
+    ratios = []
+    for rep in range(reps):
+        rec_sink = records if rep == 0 else []   # record one rep, time all
+        times = scheduler_scaling(size, rec_sink, workers_list=(1, 2),
+                                  tag=f"fig10/scheduler{size}")
+        ratios.append(times[1] / times[2])
+    speedup = max(ratios)
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except AttributeError:                        # non-Linux fallback
+        cores = os.cpu_count() or 1
+    floor = 1.0 if cores >= 2 else 0.75
+    record(records, f"fig10/scheduler{size}/workers=2/guard", 0.0,
+           speedup=round(speedup, 2), floor=floor, cores=cores)
+    assert speedup >= floor, (
+        f"scheduler workers=2 regression: best {speedup:.2f}x vs workers=1 "
+        f"on {size}^2 over {reps} reps (floor {floor} at {cores} cores)")
+
+
+def compose_guard(records: list, threshold: float = 0.5):
+    """CI tripwire: the composed shard_map-tiled engine must stay within
+    `threshold` of the flat shard_map engine on every recorded config."""
+    rows = [r for r in records
+            if r["name"].endswith("/shard_map-tiled")
+            and "speedup_vs_flat" in r]
+    bad = [(r["name"], r["speedup_vs_flat"]) for r in rows
+           if r["speedup_vs_flat"] < threshold]
+    if bad:
+        raise SystemExit(
+            f"compose_guard: shard_map-tiled below {threshold}x flat: {bad}")
+    print(f"# compose_guard OK: {len(rows)} rows >= {threshold}x flat",
+          flush=True)
 
 
 def mesh_scaling(size: int, records: list, meshes, iters=3):
@@ -141,7 +185,7 @@ def mesh_scaling(size: int, records: list, meshes, iters=3):
     return flat_dense
 
 
-def composition_comparison(size: int, records: list, meshes, tile=32,
+def composition_comparison(size: int, records: list, meshes, tile=128,
                            iters=3, flat_dense=None):
     """shard_map vs shard_map-tiled on sparse/dense seeds over the meshes.
 
@@ -179,13 +223,22 @@ def main(size: int = 512, json_path: str | None = None, smoke: bool = False):
         size = 256
         meshes = ((1, (1, 1)), (8, (2, 4)))
         scheduler_scaling(size, records, workers_list=(1, 2))
-        flat = mesh_scaling(size, records, meshes, iters=1)
-        composition_comparison(size, records, meshes, iters=1, flat_dense=flat)
+        # The compose guard needs shards that fit at least one full T=128
+        # tile queue: 512²/(2,4) = 256x128 per-shard.  At 256² the tile
+        # covers the whole shard and the guard would measure pure queue
+        # overhead instead of the hierarchy.
+        csize = 512
+        flat = mesh_scaling(csize, records, meshes, iters=1)
+        composition_comparison(csize, records, meshes, iters=1,
+                               flat_dense=flat)
+        compose_guard(records)
     else:
         meshes = ((1, (1, 1)), (2, (1, 2)), (4, (2, 2)), (8, (2, 4)))
         scheduler_scaling(size, records)
+        scheduler_guard(records)
         flat = mesh_scaling(size, records, meshes)
         composition_comparison(size, records, meshes, flat_dense=flat)
+        compose_guard(records)
     write_json(records, json_path)
     return records
 

@@ -1,0 +1,180 @@
+"""Disk persistence for autotune winners (DESIGN.md §2.6).
+
+The in-process ``_AUTOTUNE_CACHE`` dies with the interpreter, so every new
+process re-pays the micro-benchmark sweep (seconds per (op, shape) pair) even
+when nothing changed.  This module persists winners to one JSON file —
+``~/.cache/repro-iwpp/autotune.json`` by default, ``$REPRO_IWPP_CACHE_DIR``
+to relocate — keyed by everything that can change the answer:
+
+  * the accelerator (``jax.devices()[0]`` platform + device kind),
+  * the op class name,
+  * the input signature (:func:`repro.solve.autotune_signature`),
+  * a code version: a hash over the engine/kernel sources, so ANY edit to
+    the propagation code orphans every stale winner at once instead of
+    trusting callers to remember a manual bump.
+
+Entries are plain dicts (the ``EngineConfig`` fields + measured seconds);
+writes go through a same-directory temp file + ``os.replace`` so a crashed
+writer can never leave a torn JSON behind.  Concurrent writers last-win per
+whole file, which is acceptable for a cache: the loser's entries get re-
+measured next run.  All I/O failures degrade to "no disk cache" — a
+read-only HOME must never break a solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+_SCHEMA = 1
+
+# Hash these sources into the key: an edit to any engine/kernel layer can
+# flip which candidate wins, so it must orphan the persisted winners.
+_VERSIONED_SOURCES = (
+    "solve.py",
+    os.path.join("core", "tiles.py"),
+    os.path.join("core", "distributed.py"),
+    os.path.join("core", "scheduler.py"),
+    os.path.join("kernels", "queue.py"),
+    os.path.join("kernels", "morph_tile.py"),
+    os.path.join("kernels", "edt_tile.py"),
+    os.path.join("kernels", "ops.py"),
+)
+
+_code_version_memo: Optional[str] = None
+
+
+def cache_dir() -> str:
+    env = os.environ.get("REPRO_IWPP_CACHE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-iwpp")
+
+
+def cache_path() -> str:
+    return os.path.join(cache_dir(), "autotune.json")
+
+
+def code_version() -> str:
+    """Short digest of the engine/kernel sources (memoized per process)."""
+    global _code_version_memo
+    if _code_version_memo is None:
+        pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        h = hashlib.sha256()
+        for rel in _VERSIONED_SOURCES:
+            path = os.path.join(pkg, rel)
+            try:
+                with open(path, "rb") as f:
+                    h.update(f.read())
+            except OSError:
+                h.update(rel.encode())       # missing file still keys stably
+        _code_version_memo = h.hexdigest()[:16]
+    return _code_version_memo
+
+
+def _device_kind() -> str:
+    try:
+        import jax
+        d = jax.devices()[0]
+        return f"{d.platform}/{getattr(d, 'device_kind', '?')}"
+    except Exception:
+        return "unknown"
+
+
+def entry_key(op_name: str, signature: tuple) -> str:
+    """The flat JSON key: device kind + op name + signature + code version.
+
+    ``signature`` is the :func:`repro.solve.autotune_signature` tuple (its
+    position 0 repeats ``op_name``; keeping the explicit field makes
+    :func:`invalidate_op` robust to signature-layout changes).
+    """
+    return "|".join((_device_kind(), op_name, repr(signature), code_version()))
+
+
+def _load_raw() -> Dict[str, Any]:
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(data, dict) or data.get("schema") != _SCHEMA:
+        return {}
+    entries = data.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def _store_raw(entries: Dict[str, Any]) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".autotune-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"schema": _SCHEMA, "entries": entries}, f, indent=2)
+            os.replace(tmp, path)            # atomic on POSIX
+        except BaseException:
+            os.unlink(tmp)
+            raise
+    except OSError:
+        pass                                  # read-only FS: stay in-memory
+
+
+def load(op_name: str, signature: tuple,
+         config_cls) -> Optional[Tuple[Any, float]]:
+    """Return ``(EngineConfig, seconds)`` for a persisted winner, else None."""
+    entry = _load_raw().get(entry_key(op_name, signature))
+    if not isinstance(entry, dict):
+        return None
+    cfg_dict = entry.get("config")
+    seconds = entry.get("seconds")
+    if not isinstance(cfg_dict, dict) or not isinstance(seconds, (int, float)):
+        return None
+    fields = {f.name for f in dataclasses.fields(config_cls)}
+    if not set(cfg_dict) <= fields or "engine" not in cfg_dict:
+        return None                           # written by a different version
+    try:
+        return config_cls(**cfg_dict), float(seconds)
+    except TypeError:
+        return None
+
+
+def store(op_name: str, signature: tuple, config, seconds: float) -> None:
+    """Persist one measured winner (read-modify-write of the whole file)."""
+    entries = _load_raw()
+    entries[entry_key(op_name, signature)] = {
+        "op": op_name,
+        "config": dataclasses.asdict(config),
+        "seconds": seconds,
+    }
+    _store_raw(entries)
+
+
+def invalidate_op(op_names) -> int:
+    """Drop every persisted entry for the named ops (spec-change hook).
+
+    Matches on the entry's recorded ``op`` field, so it catches entries
+    written under older code versions too — a re-registered solver must not
+    resurface through ANY stale winner.  Returns the number dropped.
+    """
+    names = set(op_names)
+    entries = _load_raw()
+    doomed = [k for k, v in entries.items()
+              if isinstance(v, dict) and v.get("op") in names]
+    if not doomed:
+        return 0
+    for k in doomed:
+        del entries[k]
+    _store_raw(entries)
+    return len(doomed)
+
+
+def clear() -> None:
+    try:
+        os.unlink(cache_path())
+    except OSError:
+        pass

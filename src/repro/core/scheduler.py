@@ -18,8 +18,13 @@ host threads and accelerator drain streams consume the **same** FCFS queue
   the same §5.2.4 argument that makes queue overflow benign.
 
 Threads genuinely overlap because jitted JAX CPU computations release the
-GIL.  Writes are per-tile-interior (disjoint); halos are read under the
-array lock, so a stale read at worst re-queues a tile (never corrupts).
+GIL.  Writes are per-tile-interior (disjoint) and happen under the array
+lock; halo *reads* happen outside it (a block slice is O(tile²) numpy copy
+— serializing every slice behind the claim lock was the workers=2
+regression).  A read torn against a concurrent interior write observes a
+per-pixel mix of old and new values, every one of which is a valid
+monotone state; the writer's changed edge re-marks this tile, so a stale
+or torn read at worst re-queues a tile (never corrupts).
 """
 
 from __future__ import annotations
@@ -92,8 +97,16 @@ class ChunkPolicy:
             return self._host_spt / self._dev_spt
 
     def chunk(self) -> int:
-        """Tiles a device worker should claim per FCFS request."""
-        return int(np.clip(round(self.rel_speed), 1, self.max_chunk))
+        """Tiles a device worker should claim per FCFS request.
+
+        Floored at 2: even a speed-parity device stream claims one tile of
+        look-ahead, amortizing the per-claim lock/wakeup overhead across
+        two dispatches — the same reason ``max_chunk`` allows two batched
+        dispatches ahead.  The claim-time half-queue cap still degrades
+        the chunk to 1 at the wavefront's end, so look-ahead never
+        starves the other consumers of the last tiles.
+        """
+        return int(np.clip(round(self.rel_speed), 2, self.max_chunk))
 
 
 @dataclass
@@ -317,9 +330,13 @@ class TileScheduler:
                 else:
                     self._inflight += 1
                     self._in_queue.discard(tid)
-                    block = self._slice_block(*tid)
             if tid is None:
                 continue
+            # Slice outside the lock: the copy is the expensive part of a
+            # claim, and a torn read against a concurrent interior write is
+            # monotone-safe (module docstring) — the writer's edge change
+            # re-marks this tile, so nothing is ever lost.
+            block = self._slice_block(*tid)
             try:
                 if self._should_fail(wid, n_done):
                     raise RuntimeError(f"injected failure on worker {wid}")
@@ -347,15 +364,20 @@ class TileScheduler:
         """Batched accelerator consumer: claim a chunk, drain it, merge back.
 
         The chunk is claimed under ONE lock acquisition (the same atomic
-        claim-then-get invariant as the host loop, generalized to K tiles).
-        Tiles within a chunk drain concurrently from pre-chunk snapshots —
-        two adjacent claimed tiles read each other's *stale* halos — which
-        is exactly `run_tiled`'s batched-drain seam: interior writes are
-        disjoint, writeback goes through the commutative merge, and a
-        changed edge re-marks the neighbor, so a stale read at worst costs
-        a re-drain, never a wrong fixed point (DESIGN.md §2.1/§2.3).
+        claim-then-get invariant as the host loop, generalized to K tiles),
+        then drained and committed one ``drain_batch`` group at a time:
+        each group is sliced *after* the previous group committed, so
+        claim-ahead costs queue ordering only, never halo staleness across
+        groups (a chunk-wide pre-claim snapshot measurably inflated the
+        cooperative pool's tile count ~3-5% in re-drains).  Tiles *within*
+        a group still drain concurrently from each other's pre-group
+        snapshots — exactly `run_tiled`'s batched-drain seam: interior
+        writes are disjoint, writeback goes through the commutative merge,
+        and a changed edge re-marks the neighbor, so a stale read at worst
+        costs a re-drain, never a wrong fixed point (DESIGN.md §2.1/§2.3).
         """
         n_done = 0
+        K = max(1, dev.drain_batch)
         while True:
             with self._lock:
                 # Claim at most half the queue (ceil): a chunk bigger than
@@ -378,28 +400,37 @@ class TileScheduler:
                 self._inflight += len(tids)
                 for t in tids:
                     self._in_queue.discard(t)
-                blocks = [self._slice_block(*t) for t in tids]
-            t0 = time.perf_counter()
-            try:
-                if self._should_fail(wid, n_done):
-                    raise RuntimeError(f"injected failure on device worker {wid}")
-                results = self._drain_chunk(dev, blocks)
-            except Exception:
+            for g0 in range(0, len(tids), K):
+                gtids = tids[g0:g0 + K]
+                # Group block copies outside the lock (same torn-read
+                # argument as the host loop; the tiles were claimed above).
+                blocks = [self._slice_block(*t) for t in gtids]
+                t0 = time.perf_counter()
+                try:
+                    if self._should_fail(wid, n_done):
+                        raise RuntimeError(
+                            f"injected failure on device worker {wid}")
+                    results = self._drain_chunk(dev, blocks)
+                except Exception:
+                    with self._lock:
+                        # Re-queue this group and every unstarted one; the
+                        # groups already committed stay committed (monotone
+                        # updates make partial chunk progress safe).
+                        rest = tids[g0:]
+                        for t in rest:
+                            self._push(t)
+                        self.stats.requeues_from_failures += len(rest)
+                        self._inflight -= len(rest)
+                        self._done.notify_all()
+                    return  # device worker dies; survivors take over
+                self.chunk_policy.observe_device(
+                    (time.perf_counter() - t0) / len(gtids))
                 with self._lock:
-                    for t in tids:
-                        self._push(t)
-                    self.stats.requeues_from_failures += len(tids)
-                    self._inflight -= len(tids)
+                    for t, (nb, unconv) in zip(gtids, results):
+                        self._commit(t, nb, unconv, wid)
+                    n_done += len(gtids)
+                    self._inflight -= len(gtids)
                     self._done.notify_all()
-                return  # device worker dies; host/survivor workers take over
-            self.chunk_policy.observe_device(
-                (time.perf_counter() - t0) / len(tids))
-            with self._lock:
-                for t, (nb, unconv) in zip(tids, results):
-                    self._commit(t, nb, unconv, wid)
-                n_done += len(tids)
-                self._inflight -= len(tids)
-                self._done.notify_all()
 
     def _drain_chunk(self, dev: DeviceWorker, blocks):
         """Drain a claimed chunk in groups of exactly ``drain_batch`` blocks.
@@ -418,8 +449,13 @@ class TileScheduler:
                 if neutral is None:
                     neutral = self.pad_block()
                 group = group + [neutral] * (K - n_live)
-            stacked = {k: np.stack([b[k] for b in group])
-                       for k in group[0].keys()}
+            if K == 1:
+                # Singleton group: a length-1 np.stack would copy the whole
+                # block again just to add the batch axis — a view does it.
+                stacked = {k: v[None] for k, v in group[0].items()}
+            else:
+                stacked = {k: np.stack([b[k] for b in group])
+                           for k in group[0].keys()}
             out, unconv = dev.batch_fn(stacked)
             out = {k: np.asarray(v) for k, v in out.items()}
             unconv = np.asarray(unconv)

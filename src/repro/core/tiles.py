@@ -21,6 +21,19 @@ Hierarchy mapping (DESIGN.md §2):
     the next round — the same re-execution-from-partial-output semantics as
     the paper's §5.2.4 GBQ overflow, without ever dropping information.
 
+Persistent round state (DESIGN.md §2.6): the engine is split into
+``prepare`` (build the padded planes + active-tile queue once — a
+:class:`TiledRunState` carrier), a pure ``step``/``drain`` that advances the
+carrier, and ``finalize`` (strip the padding, apply the invalid-pixel
+contract once).  Re-entry — the composed `shard_map-tiled` engine's BP
+rounds, truncation re-drains — goes through :func:`reseed` on the *same*
+carrier instead of re-padding and re-building the queue from scratch.  The
+jitted drain is compiled once per :class:`TiledPlan` through the shared
+compile cache (``repro.core.compile_cache``) and donates the carrier, so
+repeated entries update the padded buffers in place on backends that
+support donation.  :func:`run_tiled` stays as the thin
+prepare→drain→finalize wrapper with the historical signature.
+
 The engine is fully jittable; the per-tile inner solver can be swapped for
 the Pallas kernel (`repro.kernels.ops`) via ``tile_solver`` (and its
 grid-over-batch form via ``batched_tile_solver``).
@@ -28,12 +41,12 @@ grid-over-batch form via ``batched_tile_solver``).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import compile_cache
 from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
 
 
@@ -42,6 +55,46 @@ class TileStats(NamedTuple):
     tiles_processed: jnp.ndarray
     overflow_events: jnp.ndarray   # rounds where active > capacity (paper §5.2.4)
     tiles_requeued: jnp.ndarray    # drains cut off at max_iters -> self-requeued
+
+
+class TiledPlan(NamedTuple):
+    """Static (hashable) description of one tiled run — the jit key.
+
+    Everything that shapes the compiled drain lives here: the op, the
+    blocking, the queue geometry, and the (optional) solver callables.
+    Two solves with equal plans share one compiled step through the
+    compile cache; the dynamic data rides in :class:`TiledRunState`.
+    """
+    op: PropagationOp
+    tile: int
+    H: int                 # original (unpadded) domain height
+    W: int
+    nty: int               # tile-grid rows of the padded layout
+    ntx: int
+    queue_capacity: int    # clipped to the tile-grid size
+    K: int                 # blocks drained concurrently per dispatch
+    n_chunks: int          # queue slots = n_chunks * K
+    max_outer_rounds: int
+    tile_solver: Optional[Callable]
+    batched_tile_solver: Optional[Callable]
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_chunks * self.K
+
+
+class TiledRunState(NamedTuple):
+    """The persistent device-resident carrier (DESIGN.md §2.6).
+
+    ``padded``: the op state in padded layout — a +1 halo ring plus
+    padding up to a tile multiple (`_pad_state`), built once by
+    :func:`prepare` and updated in place by the donated drain.
+    ``active``: the (nty, ntx) active-tile queue bitmap.
+    ``stats``: cumulative :class:`TileStats` across every (re-)entry.
+    """
+    padded: dict
+    active: jnp.ndarray
+    stats: TileStats
 
 
 def _pad_state(op, state, tile: int):
@@ -188,7 +241,225 @@ def _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty: int, ntx: int):
     return marks
 
 
-@partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6, 7, 9))
+# ---------------------------------------------------------------------------
+# Persistent round state: prepare / step / drain / reseed / finalize.
+# ---------------------------------------------------------------------------
+
+def _mutable_keys(plan: TiledPlan, padded) -> list:
+    return [k for k in padded.keys() if k not in plan.op.static_leaves]
+
+
+def prepare(op: PropagationOp, state, tile: int = 128,
+            queue_capacity: int = 256, max_outer_rounds: int = 100_000,
+            tile_solver: Optional[Callable] = None, drain_batch: int = 1,
+            batched_tile_solver: Optional[Callable] = None,
+            initial_active: Optional[jnp.ndarray] = None):
+    """Build the run once: ``(TiledPlan, TiledRunState)``.
+
+    The plan is hashable (the jit key); the run state carries the padded
+    planes, the active-tile bitmap and zeroed stats.  Works both eagerly
+    and under an outer trace (the composed engine calls it inside
+    ``shard_map``).
+    """
+    H, W = tree_shape(state)
+    padded, (_, _, nty, ntx) = _pad_state(op, state, tile)
+    # a queue longer than the tile grid only adds dead scan slots
+    queue_capacity = min(queue_capacity, nty * ntx)
+    K = max(1, min(drain_batch, queue_capacity))
+    # queue slots rounded up to whole batches (a dead slot drains a
+    # neutralized block — cheap, and its writeback is the identity)
+    n_chunks = -(-queue_capacity // K)
+    plan = TiledPlan(op, tile, H, W, nty, ntx, queue_capacity, K, n_chunks,
+                     max_outer_rounds, tile_solver, batched_tile_solver)
+    active0 = (initial_active if initial_active is not None
+               else initial_active_tiles(op, state, tile, nty, ntx))
+    stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    return plan, TiledRunState(padded, active0, stats0)
+
+
+def reseed(plan: TiledPlan, run_state: TiledRunState,
+           active: Optional[jnp.ndarray] = None,
+           frontier: Optional[jnp.ndarray] = None) -> TiledRunState:
+    """Re-enter the carrier: OR new activations into the resident queue.
+
+    ``active`` is a (nty, ntx) tile bitmap; ``frontier`` a pixel plane in
+    *padded* layout (compacted to tiles via
+    :func:`active_tiles_from_frontier`).  The padded buffers and stats are
+    untouched — this is the BP→TP seam that used to re-pad the whole shard.
+    """
+    add = jnp.zeros((plan.nty, plan.ntx), dtype=bool)
+    if active is not None:
+        add = add | active
+    if frontier is not None:
+        add = add | active_tiles_from_frontier(
+            plan.op, frontier, plan.tile, plan.nty, plan.ntx)
+    return run_state._replace(active=run_state.active | add)
+
+
+def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
+    """One outer queue round: compact the bitmap, drain ≤ capacity tiles,
+    re-mark dirty neighbors.  Pure/traceable — usable inside `shard_map`
+    traces and `while_loop` bodies alike."""
+    op, tile = plan.op, plan.tile
+    nty, ntx, K, n_chunks = plan.nty, plan.ntx, plan.K, plan.n_chunks
+    n_slots = plan.n_slots
+    padded, active, stats = run_state
+    mutable = _mutable_keys(plan, padded)
+    solver = plan.tile_solver or default_tile_solver(op, tile)
+    pv = op.pad_value(padded)
+
+    def process_tile(padded, tid):
+        """Sequential path: drain one live queue slot (the dynamic chunk
+        loop below never hands this a dead slot)."""
+        ty, tx = tid // ntx, tid % ntx
+        block = _gather_block(padded, ty, tx, tile)
+        pre = {k: block[k] for k in mutable}
+        block, unconv = solver(block)
+        post = {k: block[k] for k in mutable}
+        new_padded = _interior_writeback(padded, post, ty, tx, tile, mutable)
+        top, bot, lef, rig = _edges_changed(pre, post, tile, mutable)
+        marks = jnp.zeros((nty, ntx), dtype=bool)
+        marks = _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty, ntx)
+        # Partial drain: the tile is NOT at a fixed point — self-mark it
+        # so it stays in the queue (the truncation self-requeue).
+        marks = marks.at[ty, tx].max(unconv)
+        return new_padded, (marks, unconv.astype(jnp.int32))
+
+    def process_chunk(padded, ids_k):
+        """Drain one (K,)-batch of queue slots concurrently.  Only the last
+        live chunk can carry dead slots (live count not a K multiple)."""
+        live = ids_k >= 0
+        safe = jnp.maximum(ids_k, 0)
+        tys, txs = safe // ntx, safe % ntx
+        blocks = jax.vmap(lambda ty, tx: _gather_block(padded, ty, tx, tile))(tys, txs)
+        # Dead slots alias tile 0; neutralize them so they converge
+        # immediately and mark nothing.
+        blocks = jax.tree_util.tree_map(
+            lambda x, v: jnp.where(
+                live.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.asarray(v, x.dtype)),
+            blocks, pv)
+        pre = {k: blocks[k] for k in mutable}
+        batched_solver = plan.batched_tile_solver or jax.vmap(solver)
+        post, unconv = batched_solver(blocks)
+        top, bot, lef, rig = jax.vmap(
+            lambda p, q: _edges_changed(p, q, tile, mutable)
+        )(pre, {k: post[k] for k in mutable})
+        marks = jnp.zeros((nty, ntx), dtype=bool)
+        marks = _mark_neighbors(marks, tys, txs, top & live, bot & live,
+                                lef & live, rig & live, nty, ntx)
+        # Partial drains self-requeue (dead slots never do: unconv & live).
+        unconv = unconv & live
+        marks = marks.at[tys, txs].max(unconv)
+
+        def scatter(padded, slot):
+            """Per-slot interior write.  A dead slot (aliasing tile 0) must
+            not regress a live write of the same tile earlier in this scan,
+            so the dead branch re-reads the *current* interior at scatter
+            time instead of writing the neutralized drain result."""
+            ty, tx, block, live_i = slot
+
+            def wb(x, b):
+                inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
+                                      b.shape[:-2] + (tile + 1, tile + 1))
+                start = (0,) * (x.ndim - 2) + (ty * tile + 1, tx * tile + 1)
+                cur = jax.lax.dynamic_slice(x, start, x.shape[:-2] + (tile, tile))
+                return jax.lax.dynamic_update_slice(
+                    x, jnp.where(live_i, inner, cur), start)
+
+            new = dict(padded)
+            for k in mutable:
+                new[k] = wb(padded[k], block[k])
+            return new, None
+
+        padded, _ = jax.lax.scan(
+            scatter, padded, (tys, txs, {k: post[k] for k in mutable}, live))
+        return padded, (marks, jnp.sum(unconv, dtype=jnp.int32))
+
+    flat = active.reshape(-1)
+    (ids,) = jnp.where(flat, size=n_slots, fill_value=-1)
+    n_active = jnp.sum(flat)
+    n_live = jnp.minimum(n_active, n_slots).astype(jnp.int32)
+    processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
+    marks0 = jnp.zeros((nty, ntx), dtype=bool)
+    # Dynamic trip count: only *live* chunks run.  A mostly-empty queue
+    # (sparse wavefronts, BP re-entries touching a few border tiles) costs
+    # its live tiles, not the full slot count — the fixed per-round overhead
+    # the composed engines used to pay on every nearly-idle round.
+    if K > 1:
+        n_live_chunks = -(-n_live // K)
+
+        def chunk_body(c):
+            i, padded, marks, req = c
+            ids_k = jax.lax.dynamic_slice(ids, (i * K,), (K,))
+            padded, (m, rq) = process_chunk(padded, ids_k)
+            return i + 1, padded, marks | m, req + rq
+
+        _, padded, marks, requeued = jax.lax.while_loop(
+            lambda c: c[0] < n_live_chunks, chunk_body,
+            (jnp.int32(0), padded, marks0, jnp.int32(0)))
+    else:
+        def slot_body(c):
+            i, padded, marks, req = c
+            padded, (m, rq) = process_tile(padded, ids[i])
+            return i + 1, padded, marks | m, req + rq
+
+        _, padded, marks, requeued = jax.lax.while_loop(
+            lambda c: c[0] < n_live, slot_body,
+            (jnp.int32(0), padded, marks0, jnp.int32(0)))
+    # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones
+    # (including unconverged self-marks — partial drains re-queue).
+    active = (active & ~processed) | marks
+    stats = TileStats(
+        stats.outer_rounds + 1,
+        stats.tiles_processed + jnp.sum(ids >= 0),
+        stats.overflow_events + (n_active > n_slots).astype(jnp.int32),
+        stats.tiles_requeued + jnp.sum(requeued))
+    return TiledRunState(padded, active, stats)
+
+
+def drain(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
+    """Run :func:`step` until the active queue empties (or the round bound).
+    Pure/traceable; the eager entry point is :func:`drain_fn`."""
+    def cond(rs):
+        return jnp.any(rs.active) & (rs.stats.outer_rounds < plan.max_outer_rounds)
+    return jax.lax.while_loop(cond, lambda rs: step(plan, rs), run_state)
+
+
+def _donate_argnums() -> tuple:
+    # CPU XLA has no buffer donation — requesting it only produces a
+    # "donated buffers were not usable" warning per call.
+    return () if jax.default_backend() == "cpu" else (0,)
+
+
+def drain_fn(plan: TiledPlan) -> Callable:
+    """The compiled re-entrant drain for ``plan``: one build per plan via
+    the shared compile cache, carrier donated on backends that support it.
+    ``drain_fn(plan)(run_state) -> run_state``."""
+    return compile_cache.get(
+        ("tiled-drain", plan.op, plan),
+        lambda: jax.jit(lambda rs: drain(plan, rs),
+                        donate_argnums=_donate_argnums()))
+
+
+def finalize(plan: TiledPlan, run_state: TiledRunState, ref_state,
+             restore: bool = True):
+    """Strip the padding back to the domain; apply the invalid-pixel
+    contract against ``ref_state`` (the original input) unless the caller
+    owns that boundary (``restore=False`` — nested engine use)."""
+    def run(rs, ref):
+        out = jax.tree_util.tree_map(
+            lambda x: jax.lax.slice(
+                x, (0,) * (x.ndim - 2) + (1, 1),
+                x.shape[:-2] + (1 + plan.H, 1 + plan.W)), rs.padded)
+        return restore_invalid(plan.op, ref, out) if restore else out
+    leaves = jax.tree_util.tree_leaves((run_state, ref_state))
+    if any(isinstance(l, jax.core.Tracer) for l in leaves):
+        return run(run_state, ref_state)
+    fn = compile_cache.get(("tiled-finalize", plan.op, plan, restore),
+                           lambda: jax.jit(run))
+    return fn(run_state, ref_state)
+
+
 def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 256,
               max_outer_rounds: int = 100_000,
               tile_solver: Optional[Callable] = None,
@@ -197,6 +468,12 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
               initial_active: Optional[jnp.ndarray] = None,
               restore: bool = True):
     """Run `op` to the global fixed point with the tiled active-set engine.
+
+    Thin wrapper: ``prepare`` → compiled ``drain`` → ``finalize``
+    (DESIGN.md §2.6).  Callers that re-enter the drain (BP rounds) should
+    hold the ``(plan, run_state)`` pair themselves via
+    :func:`prepare`/:func:`reseed`/:func:`step` instead of paying the
+    pad/strip round trip per entry.
 
     ``drain_batch`` > 1 drains the compacted queue in parallel batches of
     (up to) that many (T+2, T+2) halo blocks per dispatch: blocks are
@@ -220,123 +497,15 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
 
     ``restore=False`` skips the final invalid-pixel restore (an O(area)
     `where` over every mutable leaf) — for *nested* use only, where the
-    outer engine applies the contract once at its own boundary
-    (`run_sharded` calls run_tiled per TP stage inside the BP loop).
+    outer engine applies the contract once at its own boundary.
     """
-    # (T+2)^2 bounds the longest geodesic inside one halo block (a spiral
-    # path); the while_loop exits at stability so the bound is free normally.
-    solver = tile_solver or default_tile_solver(op, tile)
-    padded, (H, W, nty, ntx) = _pad_state(op, state, tile)
-    # a queue longer than the tile grid only adds dead scan slots
-    queue_capacity = min(queue_capacity, nty * ntx)
-    K = max(1, min(drain_batch, queue_capacity))
-    # queue slots rounded up to whole batches (a dead slot drains a
-    # neutralized block — cheap, and its writeback is skipped)
-    n_chunks = -(-queue_capacity // K)
-    n_slots = n_chunks * K
-
-    active0 = (initial_active if initial_active is not None
-               else initial_active_tiles(op, state, tile, nty, ntx))
-
-    mutable = [k for k in padded.keys() if k not in op.static_leaves]
-
-    def process_tile(carry, tid):
-        padded = carry
-        ty = tid // ntx
-        tx = tid % ntx
-
-        def do(padded):
-            block = _gather_block(padded, ty, tx, tile)
-            pre = {k: block[k] for k in mutable}
-            block, unconv = solver(block)
-            new_padded = _interior_writeback(padded, block, ty, tx, tile, mutable)
-            top, bot, lef, rig = _edges_changed(pre, block, tile, mutable)
-            marks = jnp.zeros((nty, ntx), dtype=bool)
-            marks = _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty, ntx)
-            # Partial drain: the tile is NOT at a fixed point — self-mark it
-            # so it stays in the queue (the truncation bugfix).
-            marks = marks.at[ty, tx].max(unconv)
-            return new_padded, marks, unconv.astype(jnp.int32)
-
-        def skip(padded):
-            return padded, jnp.zeros((nty, ntx), dtype=bool), jnp.int32(0)
-
-        padded, marks, requeued = jax.lax.cond(tid >= 0, do, skip, padded)
-        return padded, (marks, requeued)
-
-    if K > 1:
-        batched_solver = batched_tile_solver or jax.vmap(solver)
-        pv = op.pad_value(state)
-
-    def process_chunk(carry, ids_k):
-        """Drain one (K,)-batch of queue slots concurrently."""
-        padded = carry
-        live = ids_k >= 0
-        safe = jnp.maximum(ids_k, 0)
-        tys, txs = safe // ntx, safe % ntx
-        blocks = jax.vmap(lambda ty, tx: _gather_block(padded, ty, tx, tile))(tys, txs)
-        # Dead slots (queue shorter than a whole batch) alias tile 0;
-        # neutralize them so they converge immediately and mark nothing.
-        blocks = jax.tree_util.tree_map(
-            lambda x, v: jnp.where(
-                live.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.asarray(v, x.dtype)),
-            blocks, pv)
-        pre = {k: blocks[k] for k in mutable}
-        post, unconv = batched_solver(blocks)
-        top, bot, lef, rig = jax.vmap(
-            lambda p, q: _edges_changed(p, q, tile, mutable)
-        )(pre, {k: post[k] for k in mutable})
-        marks = jnp.zeros((nty, ntx), dtype=bool)
-        marks = _mark_neighbors(marks, tys, txs, top & live, bot & live,
-                                lef & live, rig & live, nty, ntx)
-        # Partial drains self-requeue (dead slots never do: unconv & live).
-        unconv = unconv & live
-        marks = marks.at[tys, txs].max(unconv)
-
-        def scatter(padded, slot):
-            tid, ty, tx, block = slot
-            new_padded = jax.lax.cond(
-                tid >= 0,
-                lambda p: _interior_writeback(p, block, ty, tx, tile, mutable),
-                lambda p: p, padded)
-            return new_padded, None
-
-        padded, _ = jax.lax.scan(
-            scatter, padded, (ids_k, tys, txs, {k: post[k] for k in mutable}))
-        return padded, (marks, jnp.sum(unconv, dtype=jnp.int32))
-
-    def outer_cond(carry):
-        padded, active, stats = carry
-        return jnp.any(active) & (stats.outer_rounds < max_outer_rounds)
-
-    def outer_body(carry):
-        padded, active, stats = carry
-        flat = active.reshape(-1)
-        (ids,) = jnp.where(flat, size=n_slots, fill_value=-1)
-        n_active = jnp.sum(flat)
-        processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
-        if K > 1:
-            padded, (marks, requeued) = jax.lax.scan(
-                process_chunk, padded, ids.reshape(n_chunks, K))
-        else:
-            padded, (marks, requeued) = jax.lax.scan(process_tile, padded, ids)
-        dirty = jnp.any(marks, axis=0)
-        # Retain overflowed (unprocessed) tiles; add freshly-dirtied ones
-        # (including unconverged self-marks — partial drains re-queue).
-        active = (active & ~processed) | dirty
-        stats = TileStats(
-            stats.outer_rounds + 1,
-            stats.tiles_processed + jnp.sum(ids >= 0),
-            stats.overflow_events + (n_active > n_slots).astype(jnp.int32),
-            stats.tiles_requeued + jnp.sum(requeued))
-        return padded, active, stats
-
-    stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    padded, _, stats = jax.lax.while_loop(outer_cond, outer_body, (padded, active0, stats0))
-
-    # Strip padding back to the original domain.
-    out = jax.tree_util.tree_map(
-        lambda x: jax.lax.slice(x, (0,) * (x.ndim - 2) + (1, 1),
-                                x.shape[:-2] + (1 + H, 1 + W)), padded)
-    # Engine output contract: invalid cells hold their input values.
-    return (restore_invalid(op, state, out) if restore else out), stats
+    plan, rs = prepare(op, state, tile=tile, queue_capacity=queue_capacity,
+                       max_outer_rounds=max_outer_rounds,
+                       tile_solver=tile_solver, drain_batch=drain_batch,
+                       batched_tile_solver=batched_tile_solver,
+                       initial_active=initial_active)
+    if any(isinstance(l, jax.core.Tracer) for l in jax.tree_util.tree_leaves(state)):
+        rs = drain(plan, rs)           # inline into the caller's trace
+    else:
+        rs = drain_fn(plan)(rs)        # compiled once per plan, donated
+    return finalize(plan, rs, state, restore), rs.stats

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.pattern import offsets_for
 from repro.edt.ref import SENTINEL
+from repro.kernels.queue import fit_seed as _fit_seed
 from repro.kernels.queue import queued_fixed_point
 
 
@@ -109,7 +110,7 @@ def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
 
 
 def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
-                        batched: bool = False):
+                        batched: bool = False, seeded: bool = False):
     """Queued EDT variant (DESIGN.md §2.5), push formulation: the queue
     holds last round's improved pixels; each round gathers only their
     pre-round pointers and pushes them to neighbors with one sequential
@@ -118,11 +119,19 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
     the dense round's evolving per-pixel best accumulator — so even Voronoi
     *tie* resolution, not just distances, is bit-identical to
     :func:`_make_kernel`, as is the iteration count.  Queue overflow spills
-    to one dense full-block round."""
+    to one dense full-block round.
+
+    ``seeded`` adds two input refs (resident queue indices + live count,
+    DESIGN.md §2.6) and starts the drain from them, skipping the O(block)
+    seeding sweep."""
     offsets = offsets_for(connectivity)
 
-    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref,
-               or_ref, oc_ref, iters_ref, spills_ref):
+    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref, *refs):
+        if seeded:
+            seed_ref, cnt_ref = refs[0], refs[1]
+            or_ref, oc_ref, iters_ref, spills_ref = refs[2:6]
+        else:
+            or_ref, oc_ref, iters_ref, spills_ref = refs[0:4]
         if batched:  # refs carry a leading (1,)-block batch dim under the grid
             vr_r, vr_c = vr_r_ref[0], vr_c_ref[0]
             valid = valid_ref[0]
@@ -206,9 +215,16 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             return ((rf.reshape(Hp, Wp), cf.reshape(Hp, Wp)),
                     jnp.concatenate(tgts), jnp.concatenate(flags))
 
+        initial_queue = None
+        if seeded:
+            if batched:
+                initial_queue = (seed_ref[0], cnt_ref[0, 0, 0])
+            else:
+                initial_queue = (seed_ref[0], cnt_ref[0, 0])
         (vr_r, vr_c), iters, spills = queued_fixed_point(
             dense_round, queued_round, (vr_r, vr_c),
-            max_iters=max_iters, capacity=capacity)
+            max_iters=max_iters, capacity=capacity,
+            initial_queue=initial_queue)
         if batched:
             or_ref[0] = vr_r
             oc_ref[0] = vr_c
@@ -231,7 +247,8 @@ def _clip_capacity(queue_capacity: int, n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
+def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, seed=None, *,
+                          connectivity: int = 8,
                           max_iters: int = 1024, queue_capacity: int = 64,
                           interpret: bool = True):
     """Queued drain of one EDT halo block (DESIGN.md §2.5).
@@ -239,10 +256,16 @@ def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
     Returns (vr_r, vr_c, iters, spills) — pointer planes and iters
     bit-identical to :func:`edt_tile_solve`; ``spills`` counts overflow
     rounds that fell back to a dense sweep.
+
+    ``seed`` — optional resident queue ``(indices, count)`` (DESIGN.md
+    §2.6; see :func:`repro.kernels.morph_tile.morph_tile_solve_queued` for
+    the contract): start the drain from a known frontier instead of the
+    O(block) seeding sweep.
     """
     shp = vr_r.shape
     cap = _clip_capacity(queue_capacity, shp[0] * shp[1])
-    kernel = _make_queued_kernel(connectivity, max_iters, cap)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap,
+                                 seeded=seed is not None)
     out_shape = (
         jax.ShapeDtypeStruct(shp, vr_r.dtype),
         jax.ShapeDtypeStruct(shp, vr_c.dtype),
@@ -250,27 +273,39 @@ def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
     full = lambda s_: pl.BlockSpec(s_, lambda: (0, 0))
+    in_specs = [full(shp)] * 5
+    args = (vr_r, vr_c, valid, row, col)
+    if seed is not None:
+        sq, cnt = seed
+        sq = _fit_seed(sq, cap)[None, :]            # (1, cap)
+        cnt = jnp.asarray(cnt, jnp.int32).reshape(1, 1)
+        in_specs += [full(sq.shape), full((1, 1))]
+        args += (sq, cnt)
     o_r, o_c, iters, spills = pl.pallas_call(
         kernel,
         out_shape=out_shape,
-        in_specs=[full(shp)] * 5,
+        in_specs=in_specs,
         out_specs=(full(shp), full(shp), full((1, 1)), full((1, 1))),
         interpret=interpret,
-    )(vr_r, vr_c, valid, row, col)
+    )(*args)
     return o_r, o_c, iters[0, 0], spills[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, *,
+def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, seed=None, *,
                                   connectivity: int = 8, max_iters: int = 1024,
                                   queue_capacity: int = 64,
                                   interpret: bool = True):
     """Queued drain of a (K, T+2, T+2) EDT batch; one local queue per grid
-    step.  Returns (vr_r, vr_c, iters, spills) with (K,) counters."""
+    step.  Returns (vr_r, vr_c, iters, spills) with (K,) counters.
+
+    ``seed`` — optional per-block resident queues ``(indices, counts)``
+    with shapes (K, n) / (K,)."""
     K, Hp, Wp = vr_r.shape
     cap = _clip_capacity(queue_capacity, Hp * Wp)
-    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True,
+                                 seeded=seed is not None)
     out_shape = (
         jax.ShapeDtypeStruct((K, Hp, Wp), vr_r.dtype),
         jax.ShapeDtypeStruct((K, Hp, Wp), vr_c.dtype),
@@ -279,14 +314,22 @@ def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, *,
     )
     blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
     scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+    in_specs = [blk] * 5
+    args = (vr_r, vr_c, valid, row, col)
+    if seed is not None:
+        sq, cnt = seed
+        sq = jax.vmap(lambda s_: _fit_seed(s_, cap))(sq)      # (K, cap)
+        cnt = jnp.asarray(cnt, jnp.int32).reshape(K, 1, 1)
+        in_specs += [pl.BlockSpec((1, cap), lambda k: (k, 0)), scalar]
+        args += (sq, cnt)
     o_r, o_c, iters, spills = pl.pallas_call(
         kernel,
         grid=(K,),
         out_shape=out_shape,
-        in_specs=[blk] * 5,
+        in_specs=in_specs,
         out_specs=(blk, blk, scalar, scalar),
         interpret=interpret,
-    )(vr_r, vr_c, valid, row, col)
+    )(*args)
     return o_r, o_c, iters[:, 0, 0], spills[:, 0, 0]
 
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.pattern import offsets_for
+from repro.kernels.queue import fit_seed as _fit_seed
 from repro.kernels.queue import queued_fixed_point
 
 
@@ -112,7 +113,7 @@ def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 102
 
 
 def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
-                        batched: bool = False):
+                        batched: bool = False, seeded: bool = False):
     """Queued variant (DESIGN.md §2.5), push formulation: the queue holds
     last round's *improved* pixels, and each round gathers only those and
     pushes ``min(I[t], J[s])`` to every neighbor ``t`` — O(capacity) work
@@ -120,10 +121,20 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
     full-block round.  Accepted updates coincide exactly with the dense
     kernel's (a non-improved neighbor's offer was already max-merged when
     it last improved), so outputs and iteration counts are bit-identical
-    to :func:`_make_kernel` — only the work per round shrinks."""
+    to :func:`_make_kernel` — only the work per round shrinks.
+
+    ``seeded`` adds two input refs (resident queue indices + live count,
+    DESIGN.md §2.6) and starts the drain from them, skipping the O(block)
+    seeding sweep — the re-entry path when the caller already knows the
+    frontier."""
     offsets = offsets_for(connectivity)
 
-    def kernel(j_ref, i_ref, valid_ref, o_ref, iters_ref, spills_ref):
+    def kernel(j_ref, i_ref, valid_ref, *refs):
+        if seeded:
+            seed_ref, cnt_ref = refs[0], refs[1]
+            o_ref, iters_ref, spills_ref = refs[2], refs[3], refs[4]
+        else:
+            o_ref, iters_ref, spills_ref = refs[0], refs[1], refs[2]
         if batched:  # refs carry a leading (1,)-block batch dim under the grid
             J = j_ref[0]
             I = i_ref[0]
@@ -177,9 +188,16 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             Jf = Jf.at[jnp.where(imp, tgt, n)].max(offer, mode="drop")
             return Jf.reshape(Hp, Wp), tgt, imp
 
+        initial_queue = None
+        if seeded:
+            if batched:
+                initial_queue = (seed_ref[0], cnt_ref[0, 0, 0])
+            else:
+                initial_queue = (seed_ref[0], cnt_ref[0, 0])
         J, iters, spills = queued_fixed_point(
             dense_round, queued_round, J,
-            max_iters=max_iters, capacity=capacity)
+            max_iters=max_iters, capacity=capacity,
+            initial_queue=initial_queue)
         if batched:
             o_ref[0] = J
             iters_ref[0, 0, 0] = iters
@@ -200,7 +218,7 @@ def _clip_capacity(queue_capacity: int, n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def morph_tile_solve_queued(J, I, valid, *, connectivity: int = 8,
+def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity: int = 8,
                             max_iters: int = 1024, queue_capacity: int = 64,
                             interpret: bool = True):
     """Queued drain of one (T+2, T+2) halo block (DESIGN.md §2.5).
@@ -208,38 +226,60 @@ def morph_tile_solve_queued(J, I, valid, *, connectivity: int = 8,
     Returns (J_out, iters, spills): bit-identical J_out and iters to
     :func:`morph_tile_solve`; ``spills`` counts the rounds whose candidate
     set overflowed ``queue_capacity`` and fell back to a dense sweep.
+
+    ``seed`` — optional resident queue ``(indices, count)`` (DESIGN.md
+    §2.6): flat int32 block indices of the pixels whose values have not yet
+    been offered to their neighbors (dead slots ``-1``), plus the live
+    count.  The drain then starts from this frontier instead of paying the
+    O(block) seeding sweep; a count above the (clipped) capacity safely
+    spills to a dense first round.
     """
     cap = _clip_capacity(queue_capacity, J.shape[0] * J.shape[1])
-    kernel = _make_queued_kernel(connectivity, max_iters, cap)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap,
+                                 seeded=seed is not None)
     out_shape = (
         jax.ShapeDtypeStruct(J.shape, J.dtype),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
     scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
+    in_specs = [pl.BlockSpec(J.shape, lambda: (0, 0)),
+                pl.BlockSpec(I.shape, lambda: (0, 0)),
+                pl.BlockSpec(valid.shape, lambda: (0, 0))]
+    args = (J, I, valid)
+    if seed is not None:
+        sq, cnt = seed
+        sq = _fit_seed(sq, cap)[None, :]            # (1, cap)
+        cnt = jnp.asarray(cnt, jnp.int32).reshape(1, 1)
+        in_specs += [pl.BlockSpec(sq.shape, lambda: (0, 0)), scalar]
+        args += (sq, cnt)
     J_out, iters, spills = pl.pallas_call(
         kernel,
         out_shape=out_shape,
-        in_specs=[pl.BlockSpec(J.shape, lambda: (0, 0)),
-                  pl.BlockSpec(I.shape, lambda: (0, 0)),
-                  pl.BlockSpec(valid.shape, lambda: (0, 0))],
+        in_specs=in_specs,
         out_specs=(pl.BlockSpec(J.shape, lambda: (0, 0)), scalar, scalar),
         interpret=interpret,
-    )(J, I, valid)
+    )(*args)
     return J_out, iters[0, 0], spills[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def morph_tile_solve_queued_batched(J, I, valid, *, connectivity: int = 8,
+def morph_tile_solve_queued_batched(J, I, valid, seed=None, *,
+                                    connectivity: int = 8,
                                     max_iters: int = 1024,
                                     queue_capacity: int = 64,
                                     interpret: bool = True):
     """Queued drain of a (K, T+2, T+2) batch; each grid step owns one block
-    and one local queue.  Returns (J_out, iters, spills), both (K,)."""
+    and one local queue.  Returns (J_out, iters, spills), both (K,).
+
+    ``seed`` — optional per-block resident queues ``(indices, counts)``
+    with shapes (K, n) / (K,) (same contract as
+    :func:`morph_tile_solve_queued`)."""
     K, Hp, Wp = J.shape
     cap = _clip_capacity(queue_capacity, Hp * Wp)
-    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True)
+    kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True,
+                                 seeded=seed is not None)
     out_shape = (
         jax.ShapeDtypeStruct((K, Hp, Wp), J.dtype),
         jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
@@ -247,14 +287,22 @@ def morph_tile_solve_queued_batched(J, I, valid, *, connectivity: int = 8,
     )
     blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
     scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+    in_specs = [blk, blk, blk]
+    args = (J, I, valid)
+    if seed is not None:
+        sq, cnt = seed
+        sq = jax.vmap(lambda s: _fit_seed(s, cap))(sq)        # (K, cap)
+        cnt = jnp.asarray(cnt, jnp.int32).reshape(K, 1, 1)
+        in_specs += [pl.BlockSpec((1, cap), lambda k: (k, 0)), scalar]
+        args += (sq, cnt)
     J_out, iters, spills = pl.pallas_call(
         kernel,
         grid=(K,),
         out_shape=out_shape,
-        in_specs=[blk, blk, blk],
+        in_specs=in_specs,
         out_specs=(blk, scalar, scalar),
         interpret=interpret,
-    )(J, I, valid)
+    )(*args)
     return J_out, iters[:, 0, 0], spills[:, 0, 0]
 
 

@@ -197,18 +197,27 @@ def tile_solver_edt_batched(connectivity: int = 8, interpret: bool = True,
 # Queued-kernel adapters (DESIGN.md §2.5).  Same tile_solver contract as the
 # dense adapters above — the per-kernel `spills` counter is an intra-kernel
 # diagnostic and is not surfaced through the engine's block pytree.
+#
+# Every queued solver additionally accepts ``queue=(indices, count)`` — a
+# *resident* in-kernel queue (DESIGN.md §2.6): flat block indices of the
+# pixels whose values have not yet been offered to their neighbors (compact
+# layout, dead slots -1) plus the live count.  When given, the kernel drain
+# starts from that frontier and skips its O(block) seeding sweep; a count
+# above the kernel's queue capacity safely spills to a dense first round.
+# Batched solvers take per-block (K, n) indices and (K,) counts.
 # ---------------------------------------------------------------------------
 
 def morph_tile_pallas_queued(J, I, valid, connectivity: int = 8,
                              interpret: bool = True,
                              max_iters: int = DEFAULT_MAX_ITERS,
-                             queue_capacity: int | None = None):
+                             queue_capacity: int | None = None,
+                             queue=None):
     if queue_capacity is None:
         queue_capacity = default_kernel_queue_capacity(J.shape[-1])
     Ju, orig = _up(J)
     Iu, _ = _up(I)
     out, iters, spills = morph_tile_solve_queued(
-        Ju, Iu, valid, connectivity=connectivity, max_iters=max_iters,
+        Ju, Iu, valid, queue, connectivity=connectivity, max_iters=max_iters,
         queue_capacity=queue_capacity, interpret=interpret)
     return (out.astype(orig) if orig is not None else out), iters, spills
 
@@ -217,10 +226,10 @@ def tile_solver_morph_queued(connectivity: int = 8, interpret: bool = True,
                              max_iters: int = DEFAULT_MAX_ITERS,
                              queue_capacity: int | None = None):
     """`tile_solver` backed by the queued morph kernel."""
-    def solver(block):
+    def solver(block, queue=None):
         J, iters, _ = morph_tile_pallas_queued(
             block["J"], block["I"], block["valid"], connectivity, interpret,
-            max_iters, queue_capacity)
+            max_iters, queue_capacity, queue)
         out = dict(block)
         out["J"] = J
         return out, iters >= max_iters
@@ -232,13 +241,13 @@ def tile_solver_morph_queued_batched(connectivity: int = 8,
                                      max_iters: int = DEFAULT_MAX_ITERS,
                                      queue_capacity: int | None = None):
     """`batched_tile_solver` over the queued grid-over-batch morph kernel."""
-    def solver(blocks):
+    def solver(blocks, queue=None):
         cap = (default_kernel_queue_capacity(blocks["J"].shape[-1])
                if queue_capacity is None else queue_capacity)
         Ju, orig = _up(blocks["J"])
         Iu, _ = _up(blocks["I"])
         J, iters, _ = morph_tile_solve_queued_batched(
-            Ju, Iu, blocks["valid"], connectivity=connectivity,
+            Ju, Iu, blocks["valid"], queue, connectivity=connectivity,
             max_iters=max_iters, queue_capacity=cap, interpret=interpret)
         out = dict(blocks)
         out["J"] = J.astype(orig) if orig is not None else J
@@ -250,12 +259,12 @@ def tile_solver_label_queued(connectivity: int = 8, interpret: bool = True,
                              max_iters: int = DEFAULT_MAX_ITERS,
                              queue_capacity: int | None = None):
     """Queued morph kernel parametrized into the label masked-max update."""
-    def solver(block):
+    def solver(block, queue=None):
         J, I = _label_as_morph(block)
         cap = (default_kernel_queue_capacity(J.shape[-1])
                if queue_capacity is None else queue_capacity)
         lab, iters, _ = morph_tile_solve_queued(
-            J, I, block["valid"], connectivity=connectivity,
+            J, I, block["valid"], queue, connectivity=connectivity,
             max_iters=max_iters, queue_capacity=cap, interpret=interpret)
         out = dict(block)
         out["lab"] = lab
@@ -267,12 +276,12 @@ def tile_solver_label_queued_batched(connectivity: int = 8,
                                      interpret: bool = True,
                                      max_iters: int = DEFAULT_MAX_ITERS,
                                      queue_capacity: int | None = None):
-    def solver(blocks):
+    def solver(blocks, queue=None):
         J, I = _label_as_morph(blocks)
         cap = (default_kernel_queue_capacity(J.shape[-1])
                if queue_capacity is None else queue_capacity)
         lab, iters, _ = morph_tile_solve_queued_batched(
-            J, I, blocks["valid"], connectivity=connectivity,
+            J, I, blocks["valid"], queue, connectivity=connectivity,
             max_iters=max_iters, queue_capacity=cap, interpret=interpret)
         out = dict(blocks)
         out["lab"] = lab
@@ -283,12 +292,12 @@ def tile_solver_label_queued_batched(connectivity: int = 8,
 def tile_solver_edt_queued(connectivity: int = 8, interpret: bool = True,
                            max_iters: int = DEFAULT_MAX_ITERS,
                            queue_capacity: int | None = None):
-    def solver(block):
+    def solver(block, queue=None):
         vr = block["vr"]
         cap = (default_kernel_queue_capacity(vr.shape[-1])
                if queue_capacity is None else queue_capacity)
         o_r, o_c, iters, _ = edt_tile_solve_queued(
-            vr[0], vr[1], block["valid"], block["row"], block["col"],
+            vr[0], vr[1], block["valid"], block["row"], block["col"], queue,
             connectivity=connectivity, max_iters=max_iters,
             queue_capacity=cap, interpret=interpret)
         out = dict(block)
@@ -301,13 +310,13 @@ def tile_solver_edt_queued_batched(connectivity: int = 8,
                                    interpret: bool = True,
                                    max_iters: int = DEFAULT_MAX_ITERS,
                                    queue_capacity: int | None = None):
-    def solver(blocks):
+    def solver(blocks, queue=None):
         vr = blocks["vr"]  # (K, 2, T+2, T+2)
         cap = (default_kernel_queue_capacity(vr.shape[-1])
                if queue_capacity is None else queue_capacity)
         o_r, o_c, iters, _ = edt_tile_solve_queued_batched(
             vr[:, 0], vr[:, 1], blocks["valid"], blocks["row"], blocks["col"],
-            connectivity=connectivity, max_iters=max_iters,
+            queue, connectivity=connectivity, max_iters=max_iters,
             queue_capacity=cap, interpret=interpret)
         out = dict(blocks)
         out["vr"] = jnp.stack([o_r, o_c], axis=1)

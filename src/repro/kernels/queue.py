@@ -115,6 +115,23 @@ def compact_flags(indices: jnp.ndarray, flags: jnp.ndarray, capacity: int):
     return queue, count, count > capacity
 
 
+def fit_seed(indices: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Statically resize a resident-queue index vector to ``capacity`` slots.
+
+    Seeds use the :func:`compact_mask` layout — live flat indices first,
+    ``-1`` dead slots after — so padding appends dead slots and truncation
+    only ever drops dead ones *provided the live count fits the capacity*;
+    a count above capacity makes the first drain round spill to a dense
+    sweep anyway (:func:`queued_fixed_point`), so nothing is lost either
+    way.
+    """
+    idx = indices.astype(jnp.int32).reshape(-1)
+    n = idx.shape[0]
+    if n >= capacity:
+        return idx[:capacity]
+    return jnp.concatenate([idx, jnp.full((capacity - n,), -1, jnp.int32)])
+
+
 def queued_fixed_point(
     dense_round: Callable,
     queued_round: Callable,
@@ -122,6 +139,7 @@ def queued_fixed_point(
     *,
     max_iters: int,
     capacity: int,
+    initial_queue=None,
 ):
     """Iterate to a fixed point, pushing from queued pixels per round.
 
@@ -153,9 +171,28 @@ def queued_fixed_point(
     many rounds as the dense-only kernel (one trailing round observes no
     improvement, same as the dense loop's final ``changed == False``
     iteration).
+
+    ``initial_queue`` — optional resident queue ``(queue, count)`` (the
+    :func:`compact_mask` layout: int32[capacity] flat indices, dead slots
+    ``-1``).  When given, the seeding dense round is SKIPPED and the drain
+    starts directly from the provided frontier — the re-entry path of the
+    persistent round state (DESIGN.md §2.6): a caller that already knows
+    which pixels changed (a BP halo update, a previous drain's unfinished
+    queue) pays O(capacity) instead of O(block) to resume.  The caller
+    asserts that every pixel holding a value not yet offered to its
+    neighbors is queued; ``count > capacity`` is safe (the first round
+    spills to a dense sweep, so an overflowing resident frontier degrades
+    to exactly the unseeded behavior), and ``count == 0`` returns
+    immediately (the caller asserted a fixed point).
     """
-    carry, imp0 = dense_round(carry)
-    queue, count, _ = compact_mask(imp0, capacity)
+    if initial_queue is not None:
+        queue, count = initial_queue
+        count = jnp.asarray(count, jnp.int32)
+        it0 = jnp.int32(0)           # no seeding round to count
+    else:
+        carry, imp0 = dense_round(carry)
+        queue, count, _ = compact_mask(imp0, capacity)
+        it0 = jnp.int32(1)
 
     def cond(state):
         _, _, count, it, _ = state
@@ -177,5 +214,5 @@ def queued_fixed_point(
         return carry, queue, count, it + 1, spills + overflow.astype(jnp.int32)
 
     carry, _, _, iters, spills = jax.lax.while_loop(
-        cond, body, (carry, queue, count, jnp.int32(1), jnp.int32(0)))
+        cond, body, (carry, queue, count, it0, jnp.int32(0)))
     return carry, iters, spills

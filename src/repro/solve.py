@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune_disk, compile_cache
 from repro.core.distributed import run_sharded
 from repro.core.frontier import run_dense
 from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
@@ -122,6 +123,11 @@ class SolveStats:
     # verification round still finds a residual frontier at max_rounds; the
     # `scheduler` engine raises instead (no BP loop to recover through).
     incomplete: bool = False
+    # Compiled-step builds (core.compile_cache misses) that happened during
+    # this run.  The persistent-RunState contract (DESIGN.md §2.6) is that
+    # this stays *constant in the round count*: a warm re-solve reports 0,
+    # and an engine whose recompiles grow with `rounds` is leaking traces.
+    recompiles: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -284,9 +290,24 @@ class CostModel:
     # Host threads assumed alongside the device stream in the `hybrid`
     # cooperative pool (solve()'s n_workers default).
     hybrid_host_workers = 4
+    # Fixed cost an engine pays per outer round regardless of work done:
+    # dispatching the round's (already-compiled) step, host-side carry
+    # bookkeeping.  The persistent RunState machinery (DESIGN.md §2.6)
+    # exists precisely to keep this term *per-round-constant* instead of
+    # hiding a retrace in it.
+    round_overhead = 200.0
+    # One XLA trace+compile, in pixel-visit units.  Deliberately enormous:
+    # an engine whose `SolveStats.recompiles` grows with the round count
+    # (a leaked trace — what the composed engines did before ISSUE 7)
+    # should price itself out of the auto ranking once `calibrate` has
+    # observed it.
+    recompile_cost = 2_000_000.0
 
     def __init__(self, interpret: bool = True):
         self.interpret = interpret
+        # engine name -> EWMA of observed recompiles per outer round,
+        # fed by `calibrate`.  Empty = trust the engines' no-leak contract.
+        self._recompile_rate: Dict[str, float] = {}
 
     # -- helpers -----------------------------------------------------------
     def _drains(self, stats: InputStats, tile: int) -> float:
@@ -406,6 +427,42 @@ class CostModel:
         block_side = min(stats.height, stats.width) / side
         return max(1.0, stats.depth_est / max(block_side, 1.0))
 
+    # -- per-round fixed overhead (calibrated from SolveStats.recompiles) --
+    def rounds_est(self, stats: InputStats, cfg: EngineConfig) -> float:
+        """Expected outer rounds — the multiplier of the fixed overhead."""
+        e = cfg.engine
+        if e in ("sweep", "frontier"):
+            return stats.depth_est
+        if e in ("tiled", "tiled-pallas"):
+            # Outer queue rounds ~ wavefront layers measured in tiles.
+            return max(1.0, stats.depth_est / max(cfg.tile or 1, 1))
+        if e in ("scheduler", "hybrid"):
+            return 1.0  # one FCFS pass (hybrid BP recovery is the rare path)
+        return self._bp_rounds(stats)
+
+    def round_overhead_cost(self, stats: InputStats,
+                            cfg: EngineConfig) -> float:
+        """Fixed per-round charge + any *observed* per-round retrace leak."""
+        per_round = (self.round_overhead
+                     + self._recompile_rate.get(cfg.engine, 0.0)
+                     * self.recompile_cost)
+        return self.rounds_est(stats, cfg) * per_round
+
+    def calibrate(self, solve_stats: "SolveStats") -> None:
+        """Feed one measured run back into the per-round overhead term.
+
+        ``recompiles / rounds`` from a *warm* steady state is the engine's
+        trace-leak rate (a healthy engine reports 0).  An EWMA over runs
+        lets the first, legitimately-cold solve (one-time compiles) wash
+        out instead of permanently branding the engine.  ``solve()`` calls
+        this automatically on every ``engine="auto"`` run.
+        """
+        rounds = max(1, solve_stats.rounds)
+        rate = solve_stats.recompiles / rounds
+        old = self._recompile_rate.get(solve_stats.engine)
+        self._recompile_rate[solve_stats.engine] = (
+            rate if old is None else 0.5 * old + 0.5 * rate)
+
     # Reference op payload: morph's single int32 mutable plane.  OpSpec cost
     # hints are scaled against this so the morph numbers match the model's
     # historical calibration exactly.
@@ -418,7 +475,8 @@ class CostModel:
         per-round arithmetic weight."""
         scale_t = stats.bytes_per_pixel / self.ref_bytes_per_pixel
         return (scale_t * self.transfer_cost(stats, cfg)
-                + stats.round_cost_weight * self.drain_cost(stats, cfg))
+                + stats.round_cost_weight * self.drain_cost(stats, cfg)
+                + self.round_overhead_cost(stats, cfg))
 
     def candidates(self, stats: InputStats,
                    tiles: Sequence[int] = DEFAULT_TILES) -> List[EngineConfig]:
@@ -452,7 +510,10 @@ class CostModel:
 # Autotune — micro-benchmark the model's top candidates, cache winners.
 # ---------------------------------------------------------------------------
 
-# signature -> (EngineConfig, measured seconds)
+# signature -> (EngineConfig, measured seconds).  Backed by the disk layer
+# (core.autotune_disk, ~/.cache/repro-iwpp/autotune.json): a process-local
+# miss falls through to disk before re-measuring, and measured winners are
+# persisted so a fresh interpreter skips the whole micro-benchmark sweep.
 _AUTOTUNE_CACHE: Dict[tuple, Tuple[EngineConfig, float]] = {}
 # signature -> tuple of (EngineConfig, repr(exception)) for candidates that
 # raised during micro-benchmarking — kept so a fully-failing candidate set is
@@ -475,9 +536,13 @@ def autotune_signature(op: PropagationOp, stats: InputStats,
             bucket, stats.n_devices) + tuple(restrictions)
 
 
-def clear_autotune_cache() -> None:
+def clear_autotune_cache(disk: bool = False) -> None:
+    """Drop the in-process autotune winners; ``disk=True`` also deletes the
+    persisted ``autotune.json`` (e.g. before a clean benchmark run)."""
     _AUTOTUNE_CACHE.clear()
     _AUTOTUNE_FAILURES.clear()
+    if disk:
+        autotune_disk.clear()
 
 
 def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
@@ -485,6 +550,16 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
     sig = autotune_signature(op, stats, restrictions)
     if sig in _AUTOTUNE_CACHE:
         return _AUTOTUNE_CACHE[sig][0]
+    hit = autotune_disk.load(type(op).__name__, sig, EngineConfig)
+    if hit is not None and hit[0] in candidates:
+        # A persisted winner from an earlier process on the same device
+        # kind + code version: trust it without re-measuring (promote to
+        # the in-process cache so the disk is read at most once per sig).
+        # Only honored when the persisted config is still in the caller's
+        # candidate set — a restricted/custom candidate list must not be
+        # bypassed by a winner measured over a different set.
+        _AUTOTUNE_CACHE[sig] = hit
+        return hit[0]
     ranked = model.rank(stats, candidates)
     best_cfg, best_t = None, float("inf")
     failures = []
@@ -515,6 +590,8 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
     _AUTOTUNE_CACHE[sig] = (best_cfg, best_t)
     if failures:
         _AUTOTUNE_FAILURES[sig] = tuple(failures)
+    if best_t == best_t:                     # measured (not the NaN fallback)
+        autotune_disk.store(type(op).__name__, sig, best_cfg, best_t)
     return best_cfg
 
 
@@ -558,21 +635,32 @@ def _run_dense_engine(op, state, cfg, max_rounds, **_):
                            sources_processed=int(st.sources_processed))
 
 
-# Memoized per (op identity, interpret, batched, max_iters) so run_tiled's
-# static tile_solver arguments stay hash-stable across solve() calls (avoids
-# recompiles).  Re-registering/amending a spec invalidates the affected
-# entries via the registry's change hook, so a replaced Pallas solver is
-# picked up instead of the stale memo serving the old kernel forever.
-_SOLVER_MEMO: Dict[tuple, Callable] = {}
+# Every per-op compiled artifact in this module lives in the one process
+# cache (core.compile_cache): keys carry a site tag first and the op class
+# second, so ``SolveStats.recompiles`` counts builds uniformly across the
+# layers and the spec-change hook below drops every affected entry at once.
+# Re-registering/amending a spec invalidates the op's entries, so a replaced
+# Pallas solver is picked up instead of a stale memo serving the old kernel.
 
 
 def _invalidate_solver_memo(op_cls: type) -> None:
     # A subclass may resolve its solver through the amended ancestor's
-    # spec, so drop every memo row whose op class sits below op_cls too.
+    # spec, so drop every cache row whose op class sits below op_cls too —
+    # collecting the affected class names on the way out for the autotune
+    # invalidation below.
     names = {op_cls.__name__}
-    for key in [k for k in _SOLVER_MEMO if issubclass(k[0], op_cls)]:
-        names.add(key[0].__name__)
-        del _SOLVER_MEMO[key]
+
+    def pred(key: tuple) -> bool:
+        if len(key) < 2:
+            return False
+        tagged = key[1]
+        cls = tagged if isinstance(tagged, type) else type(tagged)
+        if isinstance(cls, type) and issubclass(cls, op_cls):
+            names.add(cls.__name__)
+            return True
+        return False
+
+    compile_cache.invalidate(pred)
     # A spec change can also *fix* a candidate that failed during autotune
     # micro-benchmarking (e.g. a broken queued-kernel factory): entries
     # recorded under the old spec would keep serving the stale winner — and
@@ -583,6 +671,10 @@ def _invalidate_solver_memo(op_cls: type) -> None:
     for cache in (_AUTOTUNE_CACHE, _AUTOTUNE_FAILURES):
         for sig in [s for s in cache if s and s[0] in names]:
             del cache[sig]
+    # ... and the persisted winners, across ALL code versions: the disk
+    # entry records the op name, so a stale winner written by an older
+    # build can't outlive the spec that produced it either.
+    autotune_disk.invalidate_op(names)
 
 
 on_spec_change(_invalidate_solver_memo)
@@ -595,9 +687,10 @@ def _pallas_solver_for(op, interpret: bool, batched: bool = False,
     from repro.kernels.ops import DEFAULT_MAX_ITERS
     if max_iters is None:
         max_iters = DEFAULT_MAX_ITERS
-    key = (type(op), op.connectivity, interpret, batched, max_iters,
-           kernel_queue, kernel_queue_capacity)
-    if key not in _SOLVER_MEMO:
+    key = ("pallas-solver", type(op), op.connectivity, interpret, batched,
+           max_iters, kernel_queue, kernel_queue_capacity)
+
+    def build():
         spec = spec_for(op)
         if kernel_queue:
             factory = (None if spec is None else
@@ -612,13 +705,14 @@ def _pallas_solver_for(op, interpret: bool, batched: bool = False,
         if factory is None:
             if batched and per_tile is not None:
                 # Fall back to vmapping the per-tile kernel; a dedicated
-                # grid-over-batch kernel is only an optimization.
-                _SOLVER_MEMO[key] = jax.vmap(
+                # grid-over-batch kernel is only an optimization.  (The
+                # cache lock is re-entrant, so the recursive lookup is
+                # safe.)
+                return jax.vmap(
                     _pallas_solver_for(op, interpret, max_iters=max_iters,
                                        engine=engine,
                                        kernel_queue=kernel_queue,
                                        kernel_queue_capacity=kernel_queue_capacity))
-                return _SOLVER_MEMO[key]
             what = ("queued Pallas tile solver (OpSpec.pallas_queue_solver, "
                     "required by kernel_queue=True)" if kernel_queue
                     else "Pallas tile solver")
@@ -628,11 +722,11 @@ def _pallas_solver_for(op, interpret: bool, batched: bool = False,
                 f"ops: {list_ops()}.  Provide OpSpec.pallas_solver via "
                 "repro.ops.register_op() (or the register_pallas_solver "
                 "shim), or pick an op-generic engine such as 'tiled'.")
-        _SOLVER_MEMO[key] = (factory(op, interpret, max_iters,
-                                     kernel_queue_capacity)
-                             if kernel_queue
-                             else factory(op, interpret, max_iters))
-    return _SOLVER_MEMO[key]
+        return (factory(op, interpret, max_iters, kernel_queue_capacity)
+                if kernel_queue
+                else factory(op, interpret, max_iters))
+
+    return compile_cache.get(key, build)
 
 
 def _tiled_cfg_defaults(cfg: EngineConfig) -> Tuple[int, int, int]:
@@ -703,23 +797,20 @@ def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
                                         n_devices=len(devices))
 
 
-# Memoized per (op identity, tile) so the jitted drain isn't retraced on
-# every solve() call (same pattern as _SOLVER_MEMO).
-_DRAIN_MEMO: Dict[tuple, Callable] = {}
-
-
 def _scheduler_drain_for(op, tile: int):
-    key = (type(op), op.connectivity, tile)
-    if key not in _DRAIN_MEMO:
-        # (T+2)^2 iterations bound the longest geodesic inside one block
-        # (e.g. a spiral mask); the while_loop exits at stability, so the
-        # generous bound costs nothing in the common case.  Out-of-array
-        # halo cells arrive already holding the op's neutral pad values
-        # (TileScheduler pad_values), so no sanitize pass is needed.  The
-        # (block, unconverged) pair is the truncation contract: the host
-        # scheduler self-requeues an unconverged drain like run_tiled does.
-        _DRAIN_MEMO[key] = jax.jit(default_tile_solver(op, tile))
-    return _DRAIN_MEMO[key]
+    # (T+2)^2 iterations bound the longest geodesic inside one block
+    # (e.g. a spiral mask); the while_loop exits at stability, so the
+    # generous bound costs nothing in the common case.  Out-of-array
+    # halo cells arrive already holding the op's neutral pad values
+    # (TileScheduler pad_values), so no sanitize pass is needed.  The
+    # (block, unconverged) pair is the truncation contract: the host
+    # scheduler self-requeues an unconverged drain like run_tiled does.
+    # Cached process-wide, so every scheduler/hybrid worker thread shares
+    # ONE compiled drain instead of re-tracing per worker (the
+    # fig10/scheduler workers=2 regression).
+    key = ("scheduler-drain", type(op), op.connectivity, tile)
+    return compile_cache.get(key,
+                             lambda: jax.jit(default_tile_solver(op, tile)))
 
 
 def _batched_drain_for(op, tile: int, interpret: bool, pallas: bool,
@@ -741,16 +832,19 @@ def _batched_drain_for(op, tile: int, interpret: bool, pallas: bool,
         per = _scheduler_drain_for(op, tile)
 
         def batch_fn(stacked):
-            out, unconv = per({k: jnp.asarray(v)[0]
+            # Strip the batch axis host-side: np slicing is a free view,
+            # whereas jnp.asarray(v)[0] would issue an *eager* device slice
+            # per leaf per tile — measured at ~2x the whole per-tile drain
+            # cost for the hybrid device stream.
+            out, unconv = per({k: jnp.asarray(np.asarray(v)[0])
                                for k, v in stacked.items()})
             return ({k: np.asarray(v)[None] for k, v in out.items()},
                     np.asarray(unconv)[None])
 
         return batch_fn
-    key = (type(op), op.connectivity, tile, "hybrid-batched")
-    if key not in _DRAIN_MEMO:
-        _DRAIN_MEMO[key] = jax.jit(default_batched_solver(op, tile))
-    return _DRAIN_MEMO[key]
+    key = ("hybrid-batched", type(op), op.connectivity, tile)
+    return compile_cache.get(key,
+                             lambda: jax.jit(default_batched_solver(op, tile)))
 
 
 def _host_tile_fn_for(op, tile: int):
@@ -824,10 +918,6 @@ def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
                            tile=tile)
 
 
-# Memoized one-round residual check for the hybrid engine's BP loop.
-_BP_ROUND_MEMO: Dict[tuple, Callable] = {}
-
-
 def _bp_residual_for(op):
     """One dense round sourcing from every valid pixel.
 
@@ -835,16 +925,17 @@ def _bp_residual_for(op):
     returned frontier is exactly the set of pixels it improved (the
     "halo-improved" seed of the next hybrid pass, DESIGN.md §2.3).
     """
-    key = (type(op), op.connectivity)
-    if key not in _BP_ROUND_MEMO:
+    def build():
         @jax.jit
         def _residual(state):
             f0 = jnp.ones(tree_shape(state), dtype=bool)
             if "valid" in state:
                 f0 = f0 & state["valid"]
             return op.round(state, f0)
-        _BP_ROUND_MEMO[key] = _residual
-    return _BP_ROUND_MEMO[key]
+        return _residual
+
+    return compile_cache.get(("bp-residual", type(op), op.connectivity),
+                             build)
 
 
 # Test hook: (worker_id | "all", fail_after) injected into every hybrid
@@ -963,7 +1054,12 @@ _ENGINE_RUNNERS = {
 
 
 def _run_engine(op, state, cfg: EngineConfig, **kw):
-    return _ENGINE_RUNNERS[cfg.engine](op, state, cfg, **kw)
+    # `recompiles` is the compile-cache miss delta across the run: 0 on a
+    # warm re-solve, and — the DESIGN.md §2.6 contract — *independent of
+    # the round count* even on a cold one (tests/test_runstate.py).
+    with compile_cache.MissSnapshot() as snap:
+        out, st = _ENGINE_RUNNERS[cfg.engine](op, state, cfg, **kw)
+    return out, dataclasses.replace(st, recompiles=snap.count)
 
 
 # ---------------------------------------------------------------------------
@@ -1108,10 +1204,12 @@ def solve(op, state, *, engine: str = "auto",
                          kernel_queue_capacity),
                         autotune_top_k, autotune_repeats, **run_kw)
         out, st = _run_engine(op, state, cfg, **run_kw)
+        model.calibrate(st)
         return out, dataclasses.replace(
             st, autotuned=True, predicted_cost=model.cost(stats_in, cfg),
             n_devices=max(st.n_devices, 1))
 
     cost, cfg = model.rank(stats_in, cands)[0]
     out, st = _run_engine(op, state, cfg, **run_kw)
+    model.calibrate(st)
     return out, dataclasses.replace(st, predicted_cost=cost)

@@ -5,3 +5,11 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_disk(tmp_path, monkeypatch):
+    """Point the persisted autotune cache (core.autotune_disk) at a per-test
+    tmpdir: tests must neither read winners measured on the developer's
+    machine nor pollute ~/.cache with winners measured under test fixtures."""
+    monkeypatch.setenv("REPRO_IWPP_CACHE_DIR", str(tmp_path / "autotune-cache"))

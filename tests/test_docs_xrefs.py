@@ -131,6 +131,27 @@ def test_kernel_queue_docs_pinned():
         "EXPERIMENTS.md lacks the dense-vs-queued kernel table"
 
 
+def test_runstate_docs_pinned():
+    """Persistent round state (ISSUE 7) must stay documented everywhere it
+    is user-visible: DESIGN.md §2.6 exists and describes the donated
+    carrier + overlap invariants, docs/ENGINES.md documents the
+    `recompiles` stats field, EXPERIMENTS.md carries the compose table."""
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    m = re.search(r"^###\s+§2\.6\b.*$", design, re.M)
+    assert m and "round state" in m.group(0).lower(), \
+        "DESIGN.md lacks the §2.6 persistent round state section"
+    sec = design[m.start():]
+    for term in ("TiledRunState", "donate", "ppermute", "recompiles",
+                 "initial_queue"):
+        assert term in sec, f"DESIGN.md §2.6 no longer mentions {term!r}"
+    engines = _read(os.path.join(ROOT, "docs", "ENGINES.md"))
+    assert "recompiles" in engines, \
+        "docs/ENGINES.md lacks the recompiles stats row"
+    experiments = _read(os.path.join(ROOT, "EXPERIMENTS.md"))
+    assert "speedup_vs_flat" in experiments, \
+        "EXPERIMENTS.md lacks the composed-vs-flat table"
+
+
 def test_every_op_has_a_catalog_section():
     """docs/OPS.md must stay complete: one `## \\`op\\`` section per
     registered op — a new register_op() without a catalog entry fails
