@@ -16,9 +16,9 @@ cross-op/cross-engine *shape* is the reproducible claim.
 
 from __future__ import annotations
 
-from benchmarks.common import (bench_argparser, edt_state, fill_state,
-                               label_state, morph_state, record, timeit,
-                               write_json)
+from benchmarks.common import (bench_argparser, edt_state, edt_state3d,
+                               fill_state, label_state, morph_state,
+                               morph_state3d, record, timeit, write_json)
 from repro.solve import solve
 
 DEFAULT_JSON = "BENCH_ops.json"
@@ -32,6 +32,12 @@ WORKLOADS = {
     "label": lambda size: label_state(size, coverage=0.55, seed=0),
 }
 
+# Volumetric rows (DESIGN.md §2.7): the 3-D-capable ops under conn26.
+WORKLOADS3D = {
+    "morph": lambda size: morph_state3d(size, seed=0),
+    "edt": lambda size: edt_state3d(size, seed=0),
+}
+
 ENGINE_KW = {
     "frontier": {},
     "tiled": dict(tile=128, queue_capacity=64, drain_batch=4),
@@ -41,9 +47,9 @@ ENGINE_KW = {
 
 
 def bench_op(records: list, op_name: str, size: int, engines, iters: int = 3,
-             tile: int = 128):
-    op, state = WORKLOADS[op_name](size)
-    base = f"ops/{op_name}/size={size}/tile={tile}"
+             tile: int = 128, workloads=WORKLOADS, prefix: str = "ops"):
+    op, state = workloads[op_name](size)
+    base = f"{prefix}/{op_name}/size={size}/tile={tile}"
     t_frontier = None
     for engine in engines:
         kw = dict(ENGINE_KW[engine])
@@ -78,10 +84,19 @@ def main(size: int = 1024, json_path: str | None = None, smoke: bool = False):
         for op_name in WORKLOADS:
             bench_op(records, op_name, min(size, 256),
                      engines=("frontier", "tiled"), iters=1, tile=64)
+        for op_name in WORKLOADS3D:
+            bench_op(records, op_name, 32, engines=("frontier", "tiled"),
+                     iters=1, tile=16, workloads=WORKLOADS3D, prefix="ops3d")
     else:
         for op_name in WORKLOADS:
             bench_op(records, op_name, size,
                      engines=("frontier", "tiled", "scheduler", "hybrid"))
+        # 3-D rows: 128³ at tile=32 — same sparse-wavefront regimes, one
+        # rank up (frontier baseline + the tiled active-set hierarchy).
+        for op_name in WORKLOADS3D:
+            bench_op(records, op_name, min(size, 128),
+                     engines=("frontier", "tiled"), tile=32,
+                     workloads=WORKLOADS3D, prefix="ops3d")
     write_json(records, json_path)
     return records
 

@@ -104,6 +104,44 @@ def fill_state(size: int, coverage: float = 0.5, seed: int = 0):
     return op, op.make_state(jnp.asarray(img))
 
 
+def _blob_volume(size: int, seed: int = 0, scale: int = 8) -> np.ndarray:
+    """Blocky random blob field in [0, 1): a low-res random volume
+    upsampled by ``scale`` — cheap 3-D structure at O(size/scale) feature
+    scale (no scipy, same spirit as ``binary_blobs``)."""
+    rng = np.random.default_rng(seed)
+    lo = rng.random((max(2, -(-size // scale)),) * 3)
+    vol = lo
+    for ax in range(3):
+        vol = np.repeat(vol, scale, axis=ax)
+    return vol[:size, :size, :size]
+
+
+def morph_state3d(size: int, seed: int = 0, connectivity: str = "conn26"):
+    """3-D reconstruction workload (DESIGN.md §2.7): blob intensity volume
+    with sparse seeded markers — the volumetric analogue of the seeded
+    2-D regime (wavefronts climb whole blobs)."""
+    vol = _blob_volume(size, seed)
+    mask = (vol * 200).astype(np.int32)
+    rng = np.random.default_rng(seed + 1)
+    marker = np.where(rng.random(mask.shape) < 1e-3, mask, 0).astype(np.int32)
+    op = MorphReconstructOp(connectivity=connectivity)
+    return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+
+
+def edt_state3d(size: int, seed: int = 0, connectivity: str = "conn26"):
+    """Few background balls in a foreground volume -> distances of
+    O(size): the long-propagation regime, volumetric."""
+    rng = np.random.default_rng(seed)
+    z, y, x = np.ogrid[:size, :size, :size]
+    fg = np.ones((size, size, size), bool)
+    r = max(2, size // 8)
+    for _ in range(4):
+        c = rng.integers(0, size, 3)
+        fg &= ((z - c[0]) ** 2 + (y - c[1]) ** 2 + (x - c[2]) ** 2) > r * r
+    op = EdtOp(connectivity=connectivity)
+    return op, op.make_state(jnp.asarray(fg))
+
+
 def label_state(size: int, coverage: float = 0.55, seed: int = 0):
     """Blob foreground with many components of mixed scales — the labeling
     regime (per-component flood depth ~ component diameter)."""

@@ -1,8 +1,12 @@
 """E3: multi-device IWPP via shard_map — the paper's §4 strategy on a mesh.
 
 The grid is partitioned into one block per device over a 2-D device grid
-(rows over the first mesh axis, columns over the second).  Each global round
-is exactly the paper's TP/BP pipeline:
+(rows over the first mesh axis, columns over the second).  For N-D inputs
+(DESIGN.md §2.7) the mesh still shards the *trailing two* spatial axes;
+leading spatial axes (e.g. a 3-D volume's depth) stay device-local, so the
+halo exchange below is exactly the 2-D ring carrying full-depth strips and
+conn26's depth-diagonal reaches never cross a device boundary mid-axis.
+Each global round is exactly the paper's TP/BP pipeline:
 
   TP (Tile Propagation)  -> every device drains its local block to stability
                             — the drain is *pluggable*: dense frontier
@@ -204,8 +208,14 @@ def run_sharded(op: PropagationOp, state, mesh: Mesh,
     """
     row_ax, col_ax = axes
     nrows, ncols = mesh.shape[row_ax], mesh.shape[col_ax]
-    H, W = tree_shape(state)
+    spatial = tree_shape(state, op.ndim)
+    H, W = spatial[-2:]
     assert H % nrows == 0 and W % ncols == 0, (H, W, nrows, ncols)
+    if tile is not None and op.ndim != 2:
+        raise NotImplementedError(
+            "the composed shard_map-tiled TP drain is 2-D only; "
+            f"op has ndim={op.ndim} — use tile=None (dense TP) or the "
+            "single-device tiled engines for volumes")
     pad_vals = op.pad_value(state)
     bh, bw = H // nrows, W // ncols
 
@@ -226,10 +236,16 @@ def run_sharded(op: PropagationOp, state, mesh: Mesh,
             # BP: halo exchange, then one masked round sourcing only from the
             # halo ring, to find which border pixels the neighbors improved.
             ext = _exchange_halo(block, pad_vals, (row_ax, col_ax), (nrows, ncols))
-            h, w = tree_shape(block)
-            halo_frontier = jnp.zeros((h + 2, w + 2), dtype=bool)
-            halo_frontier = halo_frontier.at[0, :].set(True).at[-1, :].set(True)
-            halo_frontier = halo_frontier.at[:, 0].set(True).at[:, -1].set(True)
+            sp = tree_shape(block, op.ndim)
+            # Ring frontier on the trailing-2 halo only: leading spatial axes
+            # are device-local, so their boundaries are *global* boundaries
+            # (op.round's neutral shift fill handles them, no exchange).
+            halo_frontier = jnp.zeros(sp[:-2] + (sp[-2] + 2, sp[-1] + 2),
+                                      dtype=bool)
+            halo_frontier = (halo_frontier.at[..., 0, :].set(True)
+                             .at[..., -1, :].set(True)
+                             .at[..., :, 0].set(True)
+                             .at[..., :, -1].set(True))
             # Only *valid* halo cells may source: an invalid border pixel of
             # the neighbor shard holds arbitrary input values (the invalid-
             # pixel contract preserves them), and an unmasked seed would let

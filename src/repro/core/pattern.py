@@ -14,7 +14,9 @@ different work-tracking granularities — the TPU analogue of the paper's
 Naive / prefix-sum / multi-level-queue designs.
 
 A `PropagationOp` owns:
-  * ``state``      — pytree of (H, W) arrays (all leaves same spatial shape).
+  * ``state``      — pytree of arrays whose trailing ``ndim`` axes are the
+    spatial grid (2D images or 3D volumes — DESIGN.md §2.7; all leaves
+    share the spatial shape, leading axes ride along).
   * ``pad_value``  — pytree of scalars: *neutral* halo fill per leaf.  A cell
     holding its neutral value can never propagate (morph: dtype-min; EDT:
     far sentinel coords).
@@ -34,46 +36,71 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Sequence, Tuple
+from typing import Any, Callable, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-N8_OFFSETS = ((-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1))
-N4_OFFSETS = ((-1, 0), (0, -1), (0, 1), (1, 0))
+from repro.core.geometry import (NEIGHBORHOODS, Neighborhood,
+                                 connectivity_name, neighborhood,
+                                 tree_spatial_shape)
+
+# The historical 2D tables, now *derived* from the N-D neighborhood
+# generator — byte-identical to the old literals (the generator's
+# product((-1,0,1)) order is what preserves EDT tie resolution).
+N8_OFFSETS = NEIGHBORHOODS["conn8"].offsets
+N4_OFFSETS = NEIGHBORHOODS["conn4"].offsets
 
 
-def offsets_for(connectivity: int):
-    if connectivity == 8:
-        return N8_OFFSETS
-    if connectivity == 4:
-        return N4_OFFSETS
-    raise ValueError(f"connectivity must be 4 or 8, got {connectivity}")
+def offsets_for(connectivity: Union[int, str]):
+    """Offset table for a connectivity knob (legacy int 4/8 or a
+    ``connN`` neighborhood name — DESIGN.md §2.7)."""
+    return neighborhood(connectivity).offsets
+
+
+def shiftnd(x: jnp.ndarray, offset: Sequence[int], fill) -> jnp.ndarray:
+    """out[p] = x[p + offset] over the trailing ``len(offset)`` spatial
+    axes; out-of-bounds cells = ``fill``.
+
+    Static per-axis offsets in {-1, 0, 1}; compiles to pad+slice (no
+    gather), which is the vector-friendly formulation on TPU.  Leading
+    (non-spatial) axes ride along untouched.
+    """
+    ndim = len(offset)
+    lead = x.ndim - ndim
+    pad = [(0, 0)] * lead + [(1, 1)] * ndim
+    xp = jnp.pad(x, pad, constant_values=fill)
+    for a, d in enumerate(offset):
+        axis = lead + a
+        xp = jax.lax.slice_in_dim(xp, 1 + d, 1 + d + x.shape[axis], axis=axis)
+    return xp
 
 
 def shift2d(x: jnp.ndarray, dr: int, dc: int, fill) -> jnp.ndarray:
-    """out[r, c] = x[r + dr, c + dc], out-of-bounds cells = ``fill``.
-
-    Static offsets in {-1, 0, 1}; compiles to pad+slice (no gather), which
-    is the vector-friendly formulation on TPU.
-    """
-    H, W = x.shape[-2], x.shape[-1]
-    pad = [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)]
-    xp = jnp.pad(x, pad, constant_values=fill)
-    return jax.lax.slice_in_dim(
-        jax.lax.slice_in_dim(xp, 1 + dr, 1 + dr + H, axis=x.ndim - 2),
-        1 + dc, 1 + dc + W, axis=x.ndim - 1)
+    """out[r, c] = x[r + dr, c + dc] — the 2D spelling of :func:`shiftnd`."""
+    return shiftnd(x, (dr, dc), fill)
 
 
 @dataclasses.dataclass(frozen=True)
 class PropagationOp:
     """Bundle of the pattern's plug points (duck-typed; subclasses override)."""
 
-    connectivity: int = 8
+    connectivity: Union[int, str] = 8
+
+    @property
+    def neighborhood(self) -> Neighborhood:
+        """The resolved :class:`Neighborhood` (DESIGN.md §2.7)."""
+        return neighborhood(self.connectivity)
+
+    @property
+    def ndim(self) -> int:
+        """Spatial rank, derived from the neighborhood (conn4/conn8 -> 2,
+        conn6/conn18/conn26 -> 3)."""
+        return self.neighborhood.ndim
 
     @property
     def offsets(self):
-        return offsets_for(self.connectivity)
+        return self.neighborhood.offsets
 
     @property
     def static_leaves(self):
@@ -102,9 +129,10 @@ class PropagationOp:
         return jnp.any(frontier)
 
 
-def tree_shape(state):
-    leaf = jax.tree_util.tree_leaves(state)[0]
-    return leaf.shape[-2], leaf.shape[-1]
+def tree_shape(state, ndim: int = 2):
+    """Trailing-``ndim`` spatial shape of a state pytree (delegates to the
+    shared :func:`repro.core.geometry.tree_spatial_shape`)."""
+    return tree_spatial_shape(state, ndim)
 
 
 def restore_invalid(op: PropagationOp, original, out):

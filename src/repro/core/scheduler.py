@@ -38,6 +38,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.geometry import _moore_offsets, pad_value_for
+
 
 @dataclass
 class SchedulerStats:
@@ -129,21 +131,28 @@ class DeviceWorker:
 
 
 class TileScheduler:
-    """FCFS demand-driven scheduler over a shared 2-D state.
+    """FCFS demand-driven scheduler over a shared N-D state.
+
+    The spatial rank is inferred from ``init_active``: a (nty, ntx) activity
+    grid schedules 2-D tiles over the trailing two state axes, a 3-D grid
+    schedules (T+2)^3 halo cubes over the trailing three, and so on
+    (DESIGN.md §2.7).  Tile ids are grid-coordinate tuples throughout.
 
     Parameters
     ----------
-    state : dict of str -> np.ndarray, all (H, W)-shaped trailing dims.
+    state : dict of str -> np.ndarray, all sharing the trailing spatial dims.
     tile_fn : callable (block_state, ) -> (new_block_state, info)
-        Drains one (T+2, T+2) halo block to local stability.  ``info`` may
+        Drains one (T+2,)^ndim halo block to local stability.  ``info`` may
         be ``True`` to signal an *unconverged* (partial) drain — the
         scheduler then writes the partial progress back (monotone updates
         make that safe) and re-queues the tile, the host-side analogue of
         the tiled engine's truncation self-requeue.  Any other value
         (``None``, a border-changed dict) is ignored.
-    init_active : boolean (nty, ntx) array of initially-active tiles.
+    init_active : boolean grid-shaped array of initially-active tiles; its
+        rank sets the scheduler's spatial ndim.
     merge_block_fn : optional coordinate-aware merge: called as
-        ``merge_block_fn((r0, c0), old_inner, new_inner) -> merged`` with
+        ``merge_block_fn(origin, old_inner, new_inner) -> merged`` (origin
+        is the interior's global ndim-tuple, e.g. ``(r0, c0)`` in 2-D) with
         dicts of all mutable leaves' tile interiors and the interior's
         global origin.  Needed when the commutative merge couples leaves or
         depends on pixel coordinates (e.g. EDT's Voronoi-pointer distance
@@ -171,12 +180,18 @@ class TileScheduler:
                  device_workers: Sequence[DeviceWorker] = (),
                  chunk_policy: Optional[ChunkPolicy] = None,
                  fail_worker: Optional[int] = None, fail_after: int = 3):
-        H, W = next(iter(state.values())).shape[-2:]
-        assert H % tile == 0 and W % tile == 0, "host scheduler expects tile-aligned grids"
+        init_active = np.asarray(init_active)
+        ndim = init_active.ndim
+        spatial = next(iter(state.values())).shape[-ndim:]
+        assert all(s % tile == 0 for s in spatial), \
+            "host scheduler expects tile-aligned grids"
         self.state = state
         self.tile = tile
         self.tile_fn = tile_fn
-        self.nty, self.ntx = H // tile, W // tile
+        self.ndim = ndim
+        self.grid = tuple(s // tile for s in spatial)
+        assert self.grid == init_active.shape, \
+            "init_active grid does not match state shape / tile"
         self.n_workers = n_workers
         self.device_workers = list(device_workers)
         if n_workers <= 0 and not self.device_workers:
@@ -195,16 +210,24 @@ class TileScheduler:
         self.fail_worker = fail_worker     # a worker id, or "all"
         self.fail_after = fail_after
         self._lock = threading.Lock()
-        self._q: "queue.Queue[Tuple[int, int]]" = queue.Queue()
-        self._in_queue: Set[Tuple[int, int]] = set()
+        self._q: "queue.Queue[Tuple[int, ...]]" = queue.Queue()
+        self._in_queue: Set[Tuple[int, ...]] = set()
         self._inflight = 0
         self._done = threading.Condition(self._lock)
         self.stats = SchedulerStats()
         with self._lock:   # _push notifies `_done`, which requires the lock
-            for ty in range(self.nty):
-                for tx in range(self.ntx):
-                    if init_active[ty, tx]:
-                        self._push((ty, tx))
+            for tid in np.ndindex(*self.grid):
+                if init_active[tid]:
+                    self._push(tid)
+
+    # 2-D compatibility aliases (grid is the canonical N-D spelling).
+    @property
+    def nty(self) -> int:
+        return self.grid[0]
+
+    @property
+    def ntx(self) -> int:
+        return self.grid[-1]
 
     # -- queue ops (lock held) ---------------------------------------------
     def _push(self, tid):
@@ -213,25 +236,21 @@ class TileScheduler:
             self._q.put(tid)
             self._done.notify_all()   # wake idle workers waiting for work
 
-    def _pad_value_for(self, k, arr):
-        pad_val = self.pad_values.get(k)
-        if pad_val is None:
-            pad_val = 0 if arr.dtype == bool else (np.iinfo(arr.dtype).min
-                                                   if arr.dtype.kind in "iu" else -np.inf)
-        return pad_val
-
-    def _slice_block(self, ty, tx):
-        T = self.tile
-        H, W = next(iter(self.state.values())).shape[-2:]
-        r0, c0 = ty * T, tx * T
+    def _slice_block(self, tid):
+        T, nd = self.tile, self.ndim
+        spatial = next(iter(self.state.values())).shape[-nd:]
+        origin = tuple(t * T for t in tid)
         out = {}
         for k, arr in self.state.items():
-            pad_val = self._pad_value_for(k, arr)
-            blk = np.full(arr.shape[:-2] + (T + 2, T + 2), pad_val, dtype=arr.dtype)
-            rs, re = max(0, r0 - 1), min(H, r0 + T + 1)
-            cs, ce = max(0, c0 - 1), min(W, c0 + T + 1)
-            blk[..., rs - (r0 - 1): rs - (r0 - 1) + (re - rs),
-                cs - (c0 - 1): cs - (c0 - 1) + (ce - cs)] = arr[..., rs:re, cs:ce]
+            pad_val = pad_value_for(self.pad_values, k, arr.dtype)
+            blk = np.full(arr.shape[:-nd] + (T + 2,) * nd, pad_val,
+                          dtype=arr.dtype)
+            src, dst = [], []
+            for o, s in zip(origin, spatial):
+                lo, hi = max(0, o - 1), min(s, o + T + 1)
+                src.append(slice(lo, hi))
+                dst.append(slice(lo - (o - 1), lo - (o - 1) + (hi - lo)))
+            blk[(Ellipsis,) + tuple(dst)] = arr[(Ellipsis,) + tuple(src)]
             out[k] = blk
         return out
 
@@ -242,54 +261,60 @@ class TileScheduler:
         ``drain_batch`` shape (the same dead-slot neutralization as
         `run_tiled`'s batched drain).
         """
-        T = self.tile
-        return {k: np.full(arr.shape[:-2] + (T + 2, T + 2),
-                           self._pad_value_for(k, arr), dtype=arr.dtype)
+        T, nd = self.tile, self.ndim
+        return {k: np.full(arr.shape[:-nd] + (T + 2,) * nd,
+                           pad_value_for(self.pad_values, k, arr.dtype),
+                           dtype=arr.dtype)
                 for k, arr in self.state.items()}
 
-    def _write_back(self, ty, tx, block) -> Dict[str, bool]:
-        T = self.tile
-        r0, c0 = ty * T, tx * T
-        changed_edges = {"top": False, "bottom": False, "left": False, "right": False}
+    def _write_back(self, tid, block) -> List[bool]:
+        """Merge one block's interior; return 2*ndim changed-face flags in
+        (axis0-lo, axis0-hi, axis1-lo, axis1-hi, ...) order (2-D: top,
+        bottom, left, right)."""
+        T, nd = self.tile, self.ndim
+        origin = tuple(t * T for t in tid)
+        inner = (Ellipsis,) + tuple(slice(o, o + T) for o in origin)
+        crop = (Ellipsis,) + (slice(1, -1),) * nd
+        faces = [False] * (2 * nd)
         merged_all = None
         if self.merge_block_fn is not None:
-            old_all = {k: self.state[k][..., r0:r0 + T, c0:c0 + T]
-                       for k in self.mutable}
-            new_all = {k: np.asarray(block[k])[..., 1:-1, 1:-1]
-                       for k in self.mutable}
-            merged_all = self.merge_block_fn((r0, c0), old_all, new_all)
+            old_all = {k: self.state[k][inner] for k in self.mutable}
+            new_all = {k: np.asarray(block[k])[crop] for k in self.mutable}
+            merged_all = self.merge_block_fn(origin, old_all, new_all)
         for k in self.mutable:
-            new_inner = np.asarray(block[k])[..., 1:-1, 1:-1]
-            old_inner = self.state[k][..., r0:r0 + T, c0:c0 + T]
+            new_inner = np.asarray(block[k])[crop]
+            old_inner = self.state[k][inner]
             merged = (merged_all[k] if merged_all is not None
                       else self.merge_fn(k, old_inner, new_inner))
             diff = merged != old_inner
             if diff.any():
-                changed_edges["top"] |= bool(diff[..., 0, :].any())
-                changed_edges["bottom"] |= bool(diff[..., -1, :].any())
-                changed_edges["left"] |= bool(diff[..., :, 0].any())
-                changed_edges["right"] |= bool(diff[..., :, -1].any())
-                self.state[k][..., r0:r0 + T, c0:c0 + T] = merged
-        return changed_edges
+                for a in range(nd):
+                    axis = diff.ndim - nd + a
+                    faces[2 * a] |= bool(np.take(diff, 0, axis=axis).any())
+                    faces[2 * a + 1] |= bool(np.take(diff, -1, axis=axis).any())
+                self.state[k][inner] = merged
+        return faces
 
-    def _mark_neighbors(self, ty, tx, edges):
-        def m(dy, dx):
-            yy, xx = ty + dy, tx + dx
-            if 0 <= yy < self.nty and 0 <= xx < self.ntx:
-                self._push((yy, xx))
-        if edges["top"]:
-            m(-1, -1); m(-1, 0); m(-1, 1)
-        if edges["bottom"]:
-            m(1, -1); m(1, 0); m(1, 1)
-        if edges["left"]:
-            m(-1, -1); m(0, -1); m(1, -1)
-        if edges["right"]:
-            m(-1, 1); m(0, 1); m(1, 1)
+    def _mark_neighbors(self, tid, faces):
+        """Queue every Moore neighbor whose shared boundary saw a change:
+        an offset is marked iff some axis it moves along has its matching
+        face flag set (a corner/edge ghost is reachable iff one of its
+        incident faces changed — conn26's corner semantics, DESIGN.md §2.7).
+        """
+        nd = self.ndim
+        for off in _moore_offsets(nd, nd):
+            flag = any(faces[2 * a + (0 if off[a] < 0 else 1)]
+                       for a in range(nd) if off[a] != 0)
+            if not flag:
+                continue
+            nb = tuple(t + d for t, d in zip(tid, off))
+            if all(0 <= c < g for c, g in zip(nb, self.grid)):
+                self._push(nb)
 
     def _commit(self, tid, block, unconverged: bool, wid: int):
         """Write one drained block back and update marks/stats (lock held)."""
-        edges = self._write_back(*tid, block)
-        self._mark_neighbors(*tid, edges)
+        edges = self._write_back(tid, block)
+        self._mark_neighbors(tid, edges)
         if unconverged:
             # Partial drain (cut off at the solver's iteration bound): the
             # written-back progress is monotone-safe, but the tile is NOT at
@@ -336,7 +361,7 @@ class TileScheduler:
             # claim, and a torn read against a concurrent interior write is
             # monotone-safe (module docstring) — the writer's edge change
             # re-marks this tile, so nothing is ever lost.
-            block = self._slice_block(*tid)
+            block = self._slice_block(tid)
             try:
                 if self._should_fail(wid, n_done):
                     raise RuntimeError(f"injected failure on worker {wid}")
@@ -404,7 +429,7 @@ class TileScheduler:
                 gtids = tids[g0:g0 + K]
                 # Group block copies outside the lock (same torn-read
                 # argument as the host loop; the tiles were claimed above).
-                blocks = [self._slice_block(*t) for t in gtids]
+                blocks = [self._slice_block(t) for t in gtids]
                 t0 = time.perf_counter()
                 try:
                     if self._should_fail(wid, n_done):

@@ -21,6 +21,13 @@ Hierarchy mapping (DESIGN.md §2):
     the next round — the same re-execution-from-partial-output semantics as
     the paper's §5.2.4 GBQ overflow, without ever dropping information.
 
+The engine is rank-generic (DESIGN.md §2.7): tiles are ``tile``-sized boxes
+over the op's trailing ``ndim`` spatial axes (2D images, 3D volumes), the
+tile grid and active bitmap have one axis per spatial axis, and dirty marks
+cover the full Moore neighborhood of a tile — every face, edge and (in 3D)
+corner ghost a conn26 update can stale.  All blocking math comes from
+:class:`repro.core.geometry.Geometry`.
+
 Persistent round state (DESIGN.md §2.6): the engine is split into
 ``prepare`` (build the padded planes + active-tile queue once — a
 :class:`TiledRunState` carrier), a pure ``step``/``drain`` that advances the
@@ -41,13 +48,16 @@ grid-over-batch form via ``batched_tile_solver``).
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import compile_cache
-from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
+from repro.core.geometry import (Geometry, _moore_offsets, tree_spatial_shape,
+                                 unravel_index)
+from repro.core.pattern import PropagationOp, restore_invalid, shiftnd
 
 
 class TileStats(NamedTuple):
@@ -67,10 +77,8 @@ class TiledPlan(NamedTuple):
     """
     op: PropagationOp
     tile: int
-    H: int                 # original (unpadded) domain height
-    W: int
-    nty: int               # tile-grid rows of the padded layout
-    ntx: int
+    shape: Tuple[int, ...]  # original (unpadded) spatial domain
+    grid: Tuple[int, ...]   # tiles per spatial axis of the padded layout
     queue_capacity: int    # clipped to the tile-grid size
     K: int                 # blocks drained concurrently per dispatch
     n_chunks: int          # queue slots = n_chunks * K
@@ -82,6 +90,23 @@ class TiledPlan(NamedTuple):
     def n_slots(self) -> int:
         return self.n_chunks * self.K
 
+    # 2D-compat spellings (the composed shard_map-tiled engine is 2D-only)
+    @property
+    def H(self) -> int:
+        return self.shape[0]
+
+    @property
+    def W(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nty(self) -> int:
+        return self.grid[0]
+
+    @property
+    def ntx(self) -> int:
+        return self.grid[1]
+
 
 class TiledRunState(NamedTuple):
     """The persistent device-resident carrier (DESIGN.md §2.6).
@@ -89,12 +114,16 @@ class TiledRunState(NamedTuple):
     ``padded``: the op state in padded layout — a +1 halo ring plus
     padding up to a tile multiple (`_pad_state`), built once by
     :func:`prepare` and updated in place by the donated drain.
-    ``active``: the (nty, ntx) active-tile queue bitmap.
+    ``active``: the tile-grid active-tile queue bitmap.
     ``stats``: cumulative :class:`TileStats` across every (re-)entry.
     """
     padded: dict
     active: jnp.ndarray
     stats: TileStats
+
+
+def _geom(op: PropagationOp, tile: int) -> Geometry:
+    return Geometry.of(op.ndim, tile)
 
 
 def _pad_state(op, state, tile: int):
@@ -103,19 +132,14 @@ def _pad_state(op, state, tile: int):
     Extra padding area is marked invalid; neutral fill values guarantee the
     padding can never propagate (see PropagationOp.pad_value contract).
     """
-    H, W = tree_shape(state)
-    Ht = -(-H // tile) * tile
-    Wt = -(-W // tile) * tile
-    pads = ((1, Ht - H + 1), (1, Wt - W + 1))
-    pv = op.pad_value(state)
-    padded = jax.tree_util.tree_map(
-        lambda x, v: jnp.pad(x, [(0, 0)] * (x.ndim - 2) + list(pads), constant_values=v),
-        state, pv)
-    return padded, (H, W, Ht // tile, Wt // tile)
+    geom = _geom(op, tile)
+    shape = geom.spatial(state)
+    padded = geom.pad_state(state, op.pad_value(state))
+    return padded, (shape, geom.grid(shape))
 
 
 def _tile_local_solve(op: PropagationOp, block, max_iters: int):
-    """Drain one tile: dense rounds on the (T+2, T+2) halo block until stable.
+    """Drain one tile: dense rounds on the (T+2, ...) halo block until stable.
 
     Seeded with an all-*valid* frontier (halo included) so incoming halo
     values propagate inward on the first round.  Invalid cells are excluded
@@ -128,7 +152,7 @@ def _tile_local_solve(op: PropagationOp, block, max_iters: int):
     treat the result as a *partial* drain and re-queue the tile, never as a
     fixed point.
     """
-    frontier0 = jnp.ones(tree_shape(block), dtype=bool)
+    frontier0 = jnp.ones(tree_spatial_shape(block, op.ndim), dtype=bool)
     if "valid" in block:
         frontier0 = frontier0 & block["valid"]
 
@@ -146,7 +170,7 @@ def _tile_local_solve(op: PropagationOp, block, max_iters: int):
 
 
 def active_tiles_from_frontier(op: PropagationOp, frontier, tile: int,
-                               nty: int, ntx: int):
+                               grid: Optional[Tuple[int, ...]] = None):
     """Tiles containing (or *adjacent to*) a frontier pixel.
 
     The frontier marks *source* pixels; a source on a tile border must also
@@ -156,34 +180,38 @@ def active_tiles_from_frontier(op: PropagationOp, frontier, tile: int,
     `shard_map-tiled` engine: each BP round seeds the per-device queue with
     exactly the tiles the halo exchange improved (core/distributed.py).
     """
-    from repro.core.pattern import shift2d
-    H, W = frontier.shape[-2:]
+    ndim = op.ndim
+    spatial = frontier.shape[-ndim:]
+    if grid is None:
+        grid = tuple(-(-s // tile) for s in spatial)
     dil = frontier
-    for dr, dc in op.offsets:
-        dil = dil | shift2d(frontier, dr, dc, False)
-    fp = jnp.pad(dil, ((0, nty * tile - H), (0, ntx * tile - W)))
-    return fp.reshape(nty, tile, ntx, tile).any(axis=(1, 3))
+    for off in op.offsets:
+        dil = dil | shiftnd(frontier, off, False)
+    fp = jnp.pad(dil, [(0, g * tile - s) for g, s in zip(grid, spatial)])
+    inter = []
+    for g in grid:
+        inter += [g, tile]
+    return fp.reshape(tuple(inter)).any(
+        axis=tuple(range(1, 2 * ndim, 2)))
 
 
 def initial_active_tiles(op: PropagationOp, state, tile: int,
-                         nty: int = None, ntx: int = None):
+                         grid: Optional[Tuple[int, ...]] = None):
     """Tiles activated by the op's own initial frontier (see
     :func:`active_tiles_from_frontier` for the dilation argument)."""
-    H, W = tree_shape(state)
-    if nty is None:
-        nty, ntx = -(-H // tile), -(-W // tile)
-    return active_tiles_from_frontier(op, op.init_frontier(state), tile, nty, ntx)
+    return active_tiles_from_frontier(op, op.init_frontier(state), tile, grid)
 
 
 def default_tile_solver(op: PropagationOp, tile: int) -> Callable:
-    """The plain dense drain at the engine's (T+2)² geodesic bound.
+    """The plain dense drain at the engine's prod(T+2) geodesic bound.
 
     This is `run_tiled`'s default per-tile solver, exposed so other queue
     consumers (the host scheduler's jitted drain, the hybrid engine's
     device workers — DESIGN.md §2.3) run the *same* solver under the same
     truncation contract: returns ``(block, unconverged)``.
     """
-    return lambda blk: _tile_local_solve(op, blk, max_iters=(tile + 2) ** 2)
+    bound = _geom(op, tile).geodesic_bound
+    return lambda blk: _tile_local_solve(op, blk, max_iters=bound)
 
 
 def default_batched_solver(op: PropagationOp, tile: int) -> Callable:
@@ -192,52 +220,75 @@ def default_batched_solver(op: PropagationOp, tile: int) -> Callable:
     return jax.vmap(default_tile_solver(op, tile))
 
 
-def _gather_block(padded, ty, tx, tile: int):
-    start = (ty * tile, tx * tile)
+def _gather_block(padded, tco, tile: int):
+    """Slice one (T+2, ...) halo block at tile coords ``tco`` (one scalar
+    per spatial axis)."""
+    ndim = len(tco)
+    start = tuple(t * tile for t in tco)
     return jax.tree_util.tree_map(
         lambda x: jax.lax.dynamic_slice(
-            x, (0,) * (x.ndim - 2) + start,
-            x.shape[:-2] + (tile + 2, tile + 2)),
+            x, (0,) * (x.ndim - ndim) + start,
+            x.shape[:-ndim] + (tile + 2,) * ndim),
         padded)
 
 
-def _interior_writeback(padded, block, ty, tx, tile: int, mutable):
+def _interior_writeback(padded, block, tco, tile: int, mutable):
     """Write one block's interior back into the padded state (disjoint)."""
+    ndim = len(tco)
+
     def wb(x, b):
-        inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
-                              b.shape[:-2] + (tile + 1, tile + 1))
-        return jax.lax.dynamic_update_slice(
-            x, inner, (0,) * (x.ndim - 2) + (ty * tile + 1, tx * tile + 1))
+        inner = jax.lax.slice(b, (0,) * (b.ndim - ndim) + (1,) * ndim,
+                              b.shape[:-ndim] + (tile + 1,) * ndim)
+        start = (0,) * (x.ndim - ndim) + tuple(t * tile + 1 for t in tco)
+        return jax.lax.dynamic_update_slice(x, inner, start)
+
     new_padded = dict(padded)
     for k in mutable:
         new_padded[k] = wb(padded[k], block[k])
     return new_padded
 
 
-def _edges_changed(pre, post, tile: int, mutable):
-    """Did the block's interior edge rows/cols change?  (drives marking)"""
+def _faces_changed(pre, post, tile: int, mutable, ndim: int):
+    """Did the block's interior face planes change?  (drives marking)
+
+    Returns 2*ndim flags in (axis0-lo, axis0-hi, axis1-lo, axis1-hi, ...)
+    order — the 2D spelling was (top, bot, lef, rig).
+    """
     i0, i1 = 1, tile + 1
+
     def ch(sel):
         return jnp.array([jnp.any(pre[k][sel] != post[k][sel]) for k in mutable]).any()
-    top = ch((Ellipsis, slice(i0, i0 + 1), slice(i0, i1)))
-    bot = ch((Ellipsis, slice(i1 - 1, i1), slice(i0, i1)))
-    lef = ch((Ellipsis, slice(i0, i1), slice(i0, i0 + 1)))
-    rig = ch((Ellipsis, slice(i0, i1), slice(i1 - 1, i1)))
-    return top, bot, lef, rig
+
+    interior = tuple(slice(i0, i1) for _ in range(ndim))
+    flags = []
+    for a in range(ndim):
+        lo = (Ellipsis,) + interior[:a] + (slice(i0, i0 + 1),) + interior[a + 1:]
+        hi = (Ellipsis,) + interior[:a] + (slice(i1 - 1, i1),) + interior[a + 1:]
+        flags.append(ch(lo))
+        flags.append(ch(hi))
+    return tuple(flags)
 
 
-def _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty: int, ntx: int):
-    """Scatter-max dirty marks onto the 8 neighbors.  ``ty``/``tx`` and the
-    edge flags may be scalars (sequential path) or (K,) vectors (batched)."""
-    def mark(m, dy, dx, flag):
-        yy = jnp.clip(ty + dy, 0, nty - 1)
-        xx = jnp.clip(tx + dx, 0, ntx - 1)
-        inb = ((ty + dy) >= 0) & ((ty + dy) < nty) & ((tx + dx) >= 0) & ((tx + dx) < ntx)
-        return m.at[yy, xx].max(flag & inb)
-    marks = mark(marks, -1, 0, top); marks = mark(marks, -1, -1, top | lef)
-    marks = mark(marks, -1, 1, top | rig); marks = mark(marks, 1, 0, bot)
-    marks = mark(marks, 1, -1, bot | lef); marks = mark(marks, 1, 1, bot | rig)
-    marks = mark(marks, 0, -1, lef); marks = mark(marks, 0, 1, rig)
+def _mark_neighbors(marks, tco, faces, grid):
+    """Scatter-max dirty marks onto the full Moore neighborhood of tiles
+    (8 in 2D, 26 in 3D — an edge/corner ghost is stale iff *any* of the
+    faces it projects onto changed).  ``tco`` entries and the face flags
+    may be scalars (sequential path) or (K,) vectors (batched)."""
+    ndim = len(grid)
+    for d in _moore_offsets(ndim, ndim):
+        flag = None
+        for a, da in enumerate(d):
+            if da == 0:
+                continue
+            f = faces[2 * a + (0 if da < 0 else 1)]
+            flag = f if flag is None else (flag | f)
+        idx, inb = [], None
+        for c, da, g in zip(tco, d, grid):
+            nc = c + da
+            idx.append(jnp.clip(nc, 0, g - 1))
+            ib = (nc >= 0) & (nc < g)
+            inb = ib if inb is None else (inb & ib)
+        marks = marks.at[tuple(idx)].max(flag & inb)
     return marks
 
 
@@ -261,18 +312,17 @@ def prepare(op: PropagationOp, state, tile: int = 128,
     and under an outer trace (the composed engine calls it inside
     ``shard_map``).
     """
-    H, W = tree_shape(state)
-    padded, (_, _, nty, ntx) = _pad_state(op, state, tile)
+    padded, (shape, grid) = _pad_state(op, state, tile)
     # a queue longer than the tile grid only adds dead scan slots
-    queue_capacity = min(queue_capacity, nty * ntx)
+    queue_capacity = min(queue_capacity, math.prod(grid))
     K = max(1, min(drain_batch, queue_capacity))
     # queue slots rounded up to whole batches (a dead slot drains a
     # neutralized block — cheap, and its writeback is the identity)
     n_chunks = -(-queue_capacity // K)
-    plan = TiledPlan(op, tile, H, W, nty, ntx, queue_capacity, K, n_chunks,
+    plan = TiledPlan(op, tile, shape, grid, queue_capacity, K, n_chunks,
                      max_outer_rounds, tile_solver, batched_tile_solver)
     active0 = (initial_active if initial_active is not None
-               else initial_active_tiles(op, state, tile, nty, ntx))
+               else initial_active_tiles(op, state, tile, grid))
     stats0 = TileStats(jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
     return plan, TiledRunState(padded, active0, stats0)
 
@@ -282,17 +332,17 @@ def reseed(plan: TiledPlan, run_state: TiledRunState,
            frontier: Optional[jnp.ndarray] = None) -> TiledRunState:
     """Re-enter the carrier: OR new activations into the resident queue.
 
-    ``active`` is a (nty, ntx) tile bitmap; ``frontier`` a pixel plane in
+    ``active`` is a tile-grid bitmap; ``frontier`` a pixel plane in
     *padded* layout (compacted to tiles via
     :func:`active_tiles_from_frontier`).  The padded buffers and stats are
     untouched — this is the BP→TP seam that used to re-pad the whole shard.
     """
-    add = jnp.zeros((plan.nty, plan.ntx), dtype=bool)
+    add = jnp.zeros(plan.grid, dtype=bool)
     if active is not None:
         add = add | active
     if frontier is not None:
         add = add | active_tiles_from_frontier(
-            plan.op, frontier, plan.tile, plan.nty, plan.ntx)
+            plan.op, frontier, plan.tile, plan.grid)
     return run_state._replace(active=run_state.active | add)
 
 
@@ -301,7 +351,8 @@ def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
     re-mark dirty neighbors.  Pure/traceable — usable inside `shard_map`
     traces and `while_loop` bodies alike."""
     op, tile = plan.op, plan.tile
-    nty, ntx, K, n_chunks = plan.nty, plan.ntx, plan.K, plan.n_chunks
+    grid, K, n_chunks = plan.grid, plan.K, plan.n_chunks
+    ndim = op.ndim
     n_slots = plan.n_slots
     padded, active, stats = run_state
     mutable = _mutable_keys(plan, padded)
@@ -311,18 +362,18 @@ def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
     def process_tile(padded, tid):
         """Sequential path: drain one live queue slot (the dynamic chunk
         loop below never hands this a dead slot)."""
-        ty, tx = tid // ntx, tid % ntx
-        block = _gather_block(padded, ty, tx, tile)
+        tco = unravel_index(tid, grid)
+        block = _gather_block(padded, tco, tile)
         pre = {k: block[k] for k in mutable}
         block, unconv = solver(block)
         post = {k: block[k] for k in mutable}
-        new_padded = _interior_writeback(padded, post, ty, tx, tile, mutable)
-        top, bot, lef, rig = _edges_changed(pre, post, tile, mutable)
-        marks = jnp.zeros((nty, ntx), dtype=bool)
-        marks = _mark_neighbors(marks, ty, tx, top, bot, lef, rig, nty, ntx)
+        new_padded = _interior_writeback(padded, post, tco, tile, mutable)
+        faces = _faces_changed(pre, post, tile, mutable, ndim)
+        marks = jnp.zeros(grid, dtype=bool)
+        marks = _mark_neighbors(marks, tco, faces, grid)
         # Partial drain: the tile is NOT at a fixed point — self-mark it
         # so it stays in the queue (the truncation self-requeue).
-        marks = marks.at[ty, tx].max(unconv)
+        marks = marks.at[tuple(tco)].max(unconv)
         return new_padded, (marks, unconv.astype(jnp.int32))
 
     def process_chunk(padded, ids_k):
@@ -330,8 +381,9 @@ def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
         live chunk can carry dead slots (live count not a K multiple)."""
         live = ids_k >= 0
         safe = jnp.maximum(ids_k, 0)
-        tys, txs = safe // ntx, safe % ntx
-        blocks = jax.vmap(lambda ty, tx: _gather_block(padded, ty, tx, tile))(tys, txs)
+        tcos = unravel_index(safe, grid)   # tuple of (K,) per-axis coords
+        blocks = jax.vmap(
+            lambda *tco: _gather_block(padded, tco, tile))(*tcos)
         # Dead slots alias tile 0; neutralize them so they converge
         # immediately and mark nothing.
         blocks = jax.tree_util.tree_map(
@@ -341,28 +393,28 @@ def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
         pre = {k: blocks[k] for k in mutable}
         batched_solver = plan.batched_tile_solver or jax.vmap(solver)
         post, unconv = batched_solver(blocks)
-        top, bot, lef, rig = jax.vmap(
-            lambda p, q: _edges_changed(p, q, tile, mutable)
+        faces = jax.vmap(
+            lambda p, q: _faces_changed(p, q, tile, mutable, ndim)
         )(pre, {k: post[k] for k in mutable})
-        marks = jnp.zeros((nty, ntx), dtype=bool)
-        marks = _mark_neighbors(marks, tys, txs, top & live, bot & live,
-                                lef & live, rig & live, nty, ntx)
+        marks = jnp.zeros(grid, dtype=bool)
+        marks = _mark_neighbors(marks, tcos, tuple(f & live for f in faces),
+                                grid)
         # Partial drains self-requeue (dead slots never do: unconv & live).
         unconv = unconv & live
-        marks = marks.at[tys, txs].max(unconv)
+        marks = marks.at[tcos].max(unconv)
 
         def scatter(padded, slot):
             """Per-slot interior write.  A dead slot (aliasing tile 0) must
             not regress a live write of the same tile earlier in this scan,
             so the dead branch re-reads the *current* interior at scatter
             time instead of writing the neutralized drain result."""
-            ty, tx, block, live_i = slot
+            tco, block, live_i = slot
 
             def wb(x, b):
-                inner = jax.lax.slice(b, (0,) * (b.ndim - 2) + (1, 1),
-                                      b.shape[:-2] + (tile + 1, tile + 1))
-                start = (0,) * (x.ndim - 2) + (ty * tile + 1, tx * tile + 1)
-                cur = jax.lax.dynamic_slice(x, start, x.shape[:-2] + (tile, tile))
+                inner = jax.lax.slice(b, (0,) * (b.ndim - ndim) + (1,) * ndim,
+                                      b.shape[:-ndim] + (tile + 1,) * ndim)
+                start = (0,) * (x.ndim - ndim) + tuple(t * tile + 1 for t in tco)
+                cur = jax.lax.dynamic_slice(x, start, x.shape[:-ndim] + (tile,) * ndim)
                 return jax.lax.dynamic_update_slice(
                     x, jnp.where(live_i, inner, cur), start)
 
@@ -372,15 +424,15 @@ def step(plan: TiledPlan, run_state: TiledRunState) -> TiledRunState:
             return new, None
 
         padded, _ = jax.lax.scan(
-            scatter, padded, (tys, txs, {k: post[k] for k in mutable}, live))
+            scatter, padded, (tcos, {k: post[k] for k in mutable}, live))
         return padded, (marks, jnp.sum(unconv, dtype=jnp.int32))
 
     flat = active.reshape(-1)
     (ids,) = jnp.where(flat, size=n_slots, fill_value=-1)
     n_active = jnp.sum(flat)
     n_live = jnp.minimum(n_active, n_slots).astype(jnp.int32)
-    processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(nty, ntx)
-    marks0 = jnp.zeros((nty, ntx), dtype=bool)
+    processed = jnp.zeros_like(flat).at[jnp.maximum(ids, 0)].max(ids >= 0).reshape(grid)
+    marks0 = jnp.zeros(grid, dtype=bool)
     # Dynamic trip count: only *live* chunks run.  A mostly-empty queue
     # (sparse wavefronts, BP re-entries touching a few border tiles) costs
     # its live tiles, not the full slot count — the fixed per-round overhead
@@ -446,11 +498,13 @@ def finalize(plan: TiledPlan, run_state: TiledRunState, ref_state,
     """Strip the padding back to the domain; apply the invalid-pixel
     contract against ``ref_state`` (the original input) unless the caller
     owns that boundary (``restore=False`` — nested engine use)."""
+    ndim = plan.op.ndim
+
     def run(rs, ref):
         out = jax.tree_util.tree_map(
             lambda x: jax.lax.slice(
-                x, (0,) * (x.ndim - 2) + (1, 1),
-                x.shape[:-2] + (1 + plan.H, 1 + plan.W)), rs.padded)
+                x, (0,) * (x.ndim - ndim) + (1,) * ndim,
+                x.shape[:-ndim] + tuple(1 + s for s in plan.shape)), rs.padded)
         return restore_invalid(plan.op, ref, out) if restore else out
     leaves = jax.tree_util.tree_leaves((run_state, ref_state))
     if any(isinstance(l, jax.core.Tracer) for l in leaves):
@@ -476,8 +530,8 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     pad/strip round trip per entry.
 
     ``drain_batch`` > 1 drains the compacted queue in parallel batches of
-    (up to) that many (T+2, T+2) halo blocks per dispatch: blocks are
-    gathered into a (K, T+2, T+2) batch, drained concurrently by
+    (up to) that many (T+2, ...) halo blocks per dispatch: blocks are
+    gathered into a (K, T+2, ...) batch, drained concurrently by
     ``batched_tile_solver`` (default: ``jax.vmap`` of the per-tile solver),
     and their interiors scattered back.  Interior writes are disjoint;
     halo values a concurrent neighbor would have refreshed are handled by
@@ -491,7 +545,7 @@ def run_tiled(op: PropagationOp, state, tile: int = 128, queue_capacity: int = 2
     a drain reaches stability.  Without this, a tile whose internal geodesic
     exceeds the bound would be dequeued with a silently-wrong fixed point.
 
-    ``initial_active``: optional (nty, ntx) bool plane overriding the
+    ``initial_active``: optional tile-grid bool plane overriding the
     op-derived initial queue — the seam the composed `shard_map-tiled`
     engine uses to seed each BP round from only the halo-improved tiles.
 

@@ -21,89 +21,108 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import PropagationOp, shift2d
+from repro.core.pattern import PropagationOp, shiftnd
 from repro.edt.ref import SENTINEL
 
+# Coordinate state-leaf names per spatial rank: the trailing two axes keep
+# their historical names so 2D states are byte-identical pytrees; 3D adds
+# the depth plane in front (vr component order == leaf order == axis order).
+COORD_LEAVES = {2: ("row", "col"), 3: ("dep", "row", "col")}
 
-def _grids(H, W):
-    r = jax.lax.broadcasted_iota(jnp.int32, (H, W), 0)
-    c = jax.lax.broadcasted_iota(jnp.int32, (H, W), 1)
-    return r, c
+
+def _grids(shape):
+    """One int32 coordinate plane per spatial axis (broadcasted_iota — 1-D
+    iota does not lower on TPU)."""
+    return tuple(jax.lax.broadcasted_iota(jnp.int32, tuple(shape), a)
+                 for a in range(len(shape)))
 
 
 @dataclasses.dataclass(frozen=True)
 class EdtOp(PropagationOp):
-    """Danielsson-style Voronoi-pointer propagation."""
+    """Danielsson-style Voronoi-pointer propagation (2D images or 3D
+    volumes — the rank follows the connectivity name, DESIGN.md §2.7)."""
+
+    @property
+    def coord_leaves(self):
+        return COORD_LEAVES[self.ndim]
 
     @property
     def static_leaves(self):
-        return ("valid", "row", "col")
+        return ("valid",) + self.coord_leaves
 
     def make_state(self, fg: jnp.ndarray, valid=None):
-        """fg: bool (H, W), True = foreground.
+        """fg: bool over the spatial grid, True = foreground.
 
         Coordinate grids are *state leaves* (not regenerated per-round) so
         that tiled/sharded engines, which see local blocks, still compute
         distances in global coordinates.
         """
-        H, W = fg.shape
-        r, c = _grids(H, W)
+        if fg.ndim != self.ndim:
+            raise ValueError(
+                f"EdtOp(connectivity={self.connectivity!r}) is "
+                f"{self.ndim}-D but fg has rank {fg.ndim}")
+        coords = _grids(fg.shape)
         s = jnp.int32(SENTINEL)
         if valid is None:
-            valid = jnp.ones((H, W), dtype=bool)
+            valid = jnp.ones(fg.shape, dtype=bool)
         # Invalid cells start (and stay — see round()) at the sentinel: a
         # non-valid background pixel must never offer distance 0.
         bg = ~fg & valid
-        vr = jnp.stack([jnp.where(bg, r, s), jnp.where(bg, c, s)])
-        return {"vr": vr, "valid": valid, "row": r, "col": c}
+        vr = jnp.stack([jnp.where(bg, g, s) for g in coords])
+        state = {"vr": vr, "valid": valid}
+        state.update(zip(self.coord_leaves, coords))
+        return state
 
     def pad_value(self, state):
-        return {"vr": jnp.int32(SENTINEL), "valid": False,
-                "row": jnp.int32(SENTINEL), "col": jnp.int32(SENTINEL)}
+        pv = {"vr": jnp.int32(SENTINEL), "valid": False}
+        pv.update((k, jnp.int32(SENTINEL)) for k in self.coord_leaves)
+        return pv
 
     def init_frontier(self, state) -> jnp.ndarray:
         """Background pixels with >=1 foreground neighbor (Alg. 3 lines 4-5)."""
         vr = state["vr"]
-        r, c = state["row"], state["col"]
-        H, W = vr.shape[-2:]
-        is_bg = (vr[0] == r) & (vr[1] == c)
+        coords = [state[k] for k in self.coord_leaves]
+        is_bg = jnp.ones(vr.shape[1:], dtype=bool)
+        for i, g in enumerate(coords):
+            is_bg = is_bg & (vr[i] == g)
         s = jnp.int32(SENTINEL)
-        any_fg_nbr = jnp.zeros((H, W), dtype=bool)
-        for dr, dc in self.offsets:
-            nbr_r = shift2d(vr[0], dr, dc, s)
+        any_fg_nbr = jnp.zeros(vr.shape[1:], dtype=bool)
+        for off in self.offsets:
+            nbr_0 = shiftnd(vr[0], off, s)
             # out-of-image neighbors (fill==SENTINEL) look like fg; exclude
             # them by also requiring the neighbor be in-bounds via valid.
-            nbr_valid = shift2d(state["valid"], dr, dc, False)
-            any_fg_nbr = any_fg_nbr | ((nbr_r == s) & nbr_valid)
+            nbr_valid = shiftnd(state["valid"], off, False)
+            any_fg_nbr = any_fg_nbr | ((nbr_0 == s) & nbr_valid)
         return is_bg & any_fg_nbr & state["valid"]
 
-    def _dist2(self, r, c, vr_r, vr_c):
-        dr = r - vr_r
-        dc = c - vr_c
-        return dr * dr + dc * dc
+    def _dist2(self, coords, ptrs):
+        d = None
+        for g, p in zip(coords, ptrs):
+            dd = g - p
+            d = dd * dd if d is None else d + dd * dd
+        return d
 
     def round(self, state, frontier) -> Tuple[dict, jnp.ndarray]:
         vr = state["vr"]
-        r, c = state["row"], state["col"]
+        coords = [state[k] for k in self.coord_leaves]
         s = jnp.int32(SENTINEL)
-        best_r, best_c = vr[0], vr[1]
-        best_d = self._dist2(r, c, best_r, best_c)
-        src_r = jnp.where(frontier, vr[0], s)
-        src_c = jnp.where(frontier, vr[1], s)
-        for dr, dc in self.offsets:
-            cand_r = shift2d(src_r, dr, dc, s)
-            cand_c = shift2d(src_c, dr, dc, s)
-            cand_d = self._dist2(r, c, cand_r, cand_c)
+        best = [vr[i] for i in range(self.ndim)]
+        best_d = self._dist2(coords, best)
+        src = [jnp.where(frontier, vr[i], s) for i in range(self.ndim)]
+        for off in self.offsets:
+            cand = [shiftnd(p, off, s) for p in src]
+            cand_d = self._dist2(coords, cand)
             upd = cand_d < best_d
-            best_r = jnp.where(upd, cand_r, best_r)
-            best_c = jnp.where(upd, cand_c, best_c)
+            best = [jnp.where(upd, cp, bp) for cp, bp in zip(cand, best)]
             best_d = jnp.where(upd, cand_d, best_d)
-        changed = ((best_r != vr[0]) | (best_c != vr[1])) & state["valid"]
+        changed = jnp.zeros(frontier.shape, dtype=bool)
+        for i in range(self.ndim):
+            changed = changed | (best[i] != vr[i])
+        changed = changed & state["valid"]
         # Non-valid cells keep sentinel pointers so they can never propagate.
-        best_r = jnp.where(state["valid"], best_r, s)
-        best_c = jnp.where(state["valid"], best_c, s)
+        best = [jnp.where(state["valid"], bp, s) for bp in best]
         new_state = dict(state)
-        new_state["vr"] = jnp.stack([best_r, best_c])
+        new_state["vr"] = jnp.stack(best)
         return new_state, changed
 
 
@@ -123,7 +142,9 @@ def edt(fg, *, connectivity: int = 8, engine: str = "auto", **solve_kw):
 def distance_map(state) -> jnp.ndarray:
     """Squared distance map from the converged Voronoi pointers (Alg. 3 l.13)."""
     vr = state["vr"]
-    r, c = state["row"], state["col"]
-    dr = r - vr[0]
-    dc = c - vr[1]
-    return dr * dr + dc * dc
+    leaves = COORD_LEAVES[vr.shape[0]]
+    d2 = None
+    for axis, leaf in enumerate(leaves):
+        d = state[leaf] - vr[axis]
+        d2 = d * d if d2 is None else d2 + d * d
+    return d2

@@ -1,12 +1,20 @@
 """Pallas TPU kernel: drain one EDT (Voronoi-pointer) tile in VMEM.
 
-Same structure as morph_tile: the (T+2, T+2) halo block iterates the
-8-neighbor candidate min-reduction to local stability without leaving VMEM.
+Same structure as morph_tile: the halo block (``(T+2, T+2)`` in 2D,
+``(T+2, T+2, T+2)`` in 3D — DESIGN.md §2.7) iterates the neighbor
+candidate min-reduction to local stability without leaving VMEM.
 Distances are int32 (exact for grids < 8192 with the far sentinel; see
 repro.edt.ref.SENTINEL).  This kernel replaces Algorithm 6's atomicCAS retry
 loop with a race-free vector reduction — the TPU-native adaptation.
 
-:func:`edt_tile_solve_batched` drains a (K, T+2, T+2) batch with a
+Entry points come in two spellings:
+
+* rank-generic ``*_nd`` — stacked ``(ndim, *spatial)`` pointer/coordinate
+  arrays, one plane per spatial axis (what the engine adapters call);
+* the historical 2D ``(vr_r, vr_c, valid, row, col)`` signatures, kept as
+  thin wrappers over the ``*_nd`` forms.
+
+:func:`edt_tile_solve_batched` drains a (K, T+2, ...) batch with a
 ``pallas_call`` grid over the batch dimension (DESIGN.md §2 "batched queue
 drain"); each grid step converges independently.
 """
@@ -14,102 +22,131 @@ drain"); each grid step converges independently.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.geometry import ravel_index, unravel_index
 from repro.core.pattern import offsets_for
 from repro.edt.ref import SENTINEL
 from repro.kernels.queue import fit_seed as _fit_seed
 from repro.kernels.queue import queued_fixed_point
 
 
-def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
-    offsets = offsets_for(connectivity)
+def _full(shape):
+    shape = tuple(shape)
+    return pl.BlockSpec(shape, lambda: (0,) * len(shape))
 
-    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref, or_ref, oc_ref, iters_ref):
+
+def _batch_blk(spatial):
+    spatial = tuple(spatial)
+    return pl.BlockSpec((1,) + spatial, lambda k: (k,) + (0,) * len(spatial))
+
+
+def _dist2(coords, ptrs):
+    d = None
+    for g, p in zip(coords, ptrs):
+        dd = g - p
+        d = dd * dd if d is None else d + dd * dd
+    return d
+
+
+def _make_kernel(connectivity, max_iters: int, batched: bool = False):
+    offsets = offsets_for(connectivity)
+    ndim = len(offsets[0])
+
+    def kernel(*refs):
+        ins = refs[:2 * ndim + 1]
+        outs = refs[2 * ndim + 1:]
         if batched:  # refs carry a leading (1,)-block batch dim under the grid
-            vr_r, vr_c = vr_r_ref[0], vr_c_ref[0]
-            valid = valid_ref[0]
-            row, col = row_ref[0], col_ref[0]
+            vr = [r[0] for r in ins[:ndim]]
+            valid = ins[ndim][0]
+            coords = [r[0] for r in ins[ndim + 1:]]
         else:
-            vr_r, vr_c = vr_r_ref[...], vr_c_ref[...]
-            valid = valid_ref[...]
-            row, col = row_ref[...], col_ref[...]
-        Hp, Wp = vr_r.shape
+            vr = [r[...] for r in ins[:ndim]]
+            valid = ins[ndim][...]
+            coords = [r[...] for r in ins[ndim + 1:]]
+        shp = valid.shape
         s = jnp.int32(SENTINEL)
         # Invalid in-block pixels must never source propagation: pin them to
         # the sentinel before the first iteration reads them as neighbors.
-        vr_r = jnp.where(valid, vr_r, s)
-        vr_c = jnp.where(valid, vr_c, s)
+        vr = [jnp.where(valid, p, s) for p in vr]
 
-        def shifted(x, dr, dc):
+        def shifted(x, off):
             xp = jnp.pad(x, 1, constant_values=s)
-            return jax.lax.slice(xp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
-
-        def dist2(rr, cc, pr, pc):
-            dr_ = rr - pr
-            dc_ = cc - pc
-            return dr_ * dr_ + dc_ * dc_
+            return jax.lax.slice(xp, tuple(1 + d for d in off),
+                                 tuple(1 + d + n for d, n in zip(off, shp)))
 
         def cond(carry):
-            _, _, changed, it = carry
+            _, changed, it = carry
             return changed & (it < max_iters)
 
         def body(carry):
-            vr_r, vr_c, _, it = carry
-            br, bc = vr_r, vr_c
-            bd = dist2(row, col, br, bc)
-            for dr, dc in offsets:
-                cr, cc_ = shifted(vr_r, dr, dc), shifted(vr_c, dr, dc)
-                cd = dist2(row, col, cr, cc_)
+            vr, _, it = carry
+            best = list(vr)
+            bd = _dist2(coords, best)
+            for off in offsets:
+                cand = [shifted(p, off) for p in vr]
+                cd = _dist2(coords, cand)
                 upd = cd < bd
-                br = jnp.where(upd, cr, br)
-                bc = jnp.where(upd, cc_, bc)
+                best = [jnp.where(upd, cp, bp) for cp, bp in zip(cand, best)]
                 bd = jnp.where(upd, cd, bd)
-            br = jnp.where(valid, br, s)
-            bc = jnp.where(valid, bc, s)
-            changed = jnp.any((br != vr_r) | (bc != vr_c))
-            return br, bc, changed, it + 1
+            best = [jnp.where(valid, bp, s) for bp in best]
+            changed = jnp.bool_(False)
+            for bp, p in zip(best, vr):
+                changed = changed | jnp.any(bp != p)
+            return tuple(best), changed, it + 1
 
-        vr_r, vr_c, _, iters = jax.lax.while_loop(
-            cond, body, (vr_r, vr_c, jnp.bool_(True), jnp.int32(0)))
+        vr, _, iters = jax.lax.while_loop(
+            cond, body, (tuple(vr), jnp.bool_(True), jnp.int32(0)))
         if batched:
-            or_ref[0] = vr_r
-            oc_ref[0] = vr_c
-            iters_ref[0, 0, 0] = iters
+            for o_ref, p in zip(outs[:ndim], vr):
+                o_ref[0] = p
+            outs[ndim][0, 0, 0] = iters
         else:
-            or_ref[...] = vr_r
-            oc_ref[...] = vr_c
-            iters_ref[0, 0] = iters
+            for o_ref, p in zip(outs[:ndim], vr):
+                o_ref[...] = p
+            outs[ndim][0, 0] = iters
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
-def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
-                   max_iters: int = 1024, interpret: bool = True):
-    """Drain one (T+2, T+2) EDT halo block.  Returns (vr_r, vr_c, iters)."""
+def edt_tile_solve_nd(vr, valid, coords, *, connectivity=8,
+                      max_iters: int = 1024, interpret: bool = True):
+    """Drain one EDT halo block, any spatial rank.
+
+    ``vr``/``coords``: (ndim, *spatial) stacked pointer/coordinate planes;
+    ``valid``: (*spatial,) bool.  Returns (vr_out, iters).
+    """
+    ndim = vr.shape[0]
+    shp = valid.shape
     kernel = _make_kernel(connectivity, max_iters)
-    shp = vr_r.shape
-    out_shape = (
-        jax.ShapeDtypeStruct(shp, vr_r.dtype),
-        jax.ShapeDtypeStruct(shp, vr_c.dtype),
-        jax.ShapeDtypeStruct((1, 1), jnp.int32),
-    )
-    full = lambda s: pl.BlockSpec(s, lambda: (0, 0))
-    o_r, o_c, iters = pl.pallas_call(
+    out_shape = tuple(jax.ShapeDtypeStruct(shp, vr.dtype) for _ in range(ndim))
+    out_shape += (jax.ShapeDtypeStruct((1, 1), jnp.int32),)
+    outs = pl.pallas_call(
         kernel,
         out_shape=out_shape,
-        in_specs=[full(shp)] * 5,
-        out_specs=(full(shp), full(shp), full((1, 1))),
+        in_specs=[_full(shp)] * (2 * ndim + 1),
+        out_specs=tuple([_full(shp)] * ndim) + (_full((1, 1)),),
         interpret=interpret,
-    )(vr_r, vr_c, valid, row, col)
-    return o_r, o_c, iters[0, 0]
+    )(*[vr[i] for i in range(ndim)], valid, *[coords[i] for i in range(ndim)])
+    return jnp.stack(outs[:ndim]), outs[ndim][0, 0]
 
 
-def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
+def edt_tile_solve(vr_r, vr_c, valid, row, col, *, connectivity=8,
+                   max_iters: int = 1024, interpret: bool = True):
+    """Drain one (T+2, T+2) EDT halo block.  Returns (vr_r, vr_c, iters) —
+    the historical 2D spelling of :func:`edt_tile_solve_nd`."""
+    o, iters = edt_tile_solve_nd(
+        jnp.stack([vr_r, vr_c]), valid, jnp.stack([row, col]),
+        connectivity=connectivity, max_iters=max_iters, interpret=interpret)
+    return o[0], o[1], iters
+
+
+def _make_queued_kernel(connectivity, max_iters: int, capacity: int,
                         batched: bool = False, seeded: bool = False):
     """Queued EDT variant (DESIGN.md §2.5), push formulation: the queue
     holds last round's improved pixels; each round gathers only their
@@ -125,54 +162,54 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
     DESIGN.md §2.6) and starts the drain from them, skipping the O(block)
     seeding sweep."""
     offsets = offsets_for(connectivity)
+    ndim = len(offsets[0])
 
-    def kernel(vr_r_ref, vr_c_ref, valid_ref, row_ref, col_ref, *refs):
+    def kernel(*refs):
+        ins = refs[:2 * ndim + 1]
+        rest = refs[2 * ndim + 1:]
         if seeded:
-            seed_ref, cnt_ref = refs[0], refs[1]
-            or_ref, oc_ref, iters_ref, spills_ref = refs[2:6]
+            seed_ref, cnt_ref = rest[0], rest[1]
+            out_refs = rest[2:2 + ndim]
+            iters_ref, spills_ref = rest[2 + ndim], rest[3 + ndim]
         else:
-            or_ref, oc_ref, iters_ref, spills_ref = refs[0:4]
+            out_refs = rest[0:ndim]
+            iters_ref, spills_ref = rest[ndim], rest[ndim + 1]
         if batched:  # refs carry a leading (1,)-block batch dim under the grid
-            vr_r, vr_c = vr_r_ref[0], vr_c_ref[0]
-            valid = valid_ref[0]
-            row, col = row_ref[0], col_ref[0]
+            vr = [r[0] for r in ins[:ndim]]
+            valid = ins[ndim][0]
+            coords = [r[0] for r in ins[ndim + 1:]]
         else:
-            vr_r, vr_c = vr_r_ref[...], vr_c_ref[...]
-            valid = valid_ref[...]
-            row, col = row_ref[...], col_ref[...]
-        Hp, Wp = vr_r.shape
-        n = Hp * Wp
+            vr = [r[...] for r in ins[:ndim]]
+            valid = ins[ndim][...]
+            coords = [r[...] for r in ins[ndim + 1:]]
+        shp = valid.shape
+        n = math.prod(shp)
         s = jnp.int32(SENTINEL)
-        vr_r = jnp.where(valid, vr_r, s)
-        vr_c = jnp.where(valid, vr_c, s)
+        vr = [jnp.where(valid, p, s) for p in vr]
 
-        def dist2(rr, cc, pr, pc):
-            dr_ = rr - pr
-            dc_ = cc - pc
-            return dr_ * dr_ + dc_ * dc_
-
-        def shifted(x, dr, dc):
+        def shifted(x, off):
             xp = jnp.pad(x, 1, constant_values=s)
-            return jax.lax.slice(xp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
+            return jax.lax.slice(xp, tuple(1 + d for d in off),
+                                 tuple(1 + d + m for d, m in zip(off, shp)))
 
         def dense_round(carry):
             # Same body as the dense kernel's while-loop step.
-            vr_r, vr_c = carry
-            br, bc = vr_r, vr_c
-            bd = dist2(row, col, br, bc)
-            for dr, dc in offsets:
-                cr, cc_ = shifted(vr_r, dr, dc), shifted(vr_c, dr, dc)
-                cd = dist2(row, col, cr, cc_)
+            vr = carry
+            best = list(vr)
+            bd = _dist2(coords, best)
+            for off in offsets:
+                cand = [shifted(p, off) for p in vr]
+                cd = _dist2(coords, cand)
                 upd = cd < bd
-                br = jnp.where(upd, cr, br)
-                bc = jnp.where(upd, cc_, bc)
+                best = [jnp.where(upd, cp, bp) for cp, bp in zip(cand, best)]
                 bd = jnp.where(upd, cd, bd)
-            br = jnp.where(valid, br, s)
-            bc = jnp.where(valid, bc, s)
-            return (br, bc), (br != vr_r) | (bc != vr_c)
+            best = [jnp.where(valid, bp, s) for bp in best]
+            changed = jnp.zeros(shp, dtype=bool)
+            for bp, p in zip(best, vr):
+                changed = changed | (bp != p)
+            return tuple(best), changed
 
-        row_flat = row.reshape(-1)
-        col_flat = col.reshape(-1)
+        coord_flat = [g.reshape(-1) for g in coords]
         valid_flat = valid.reshape(-1)
 
         def queued_round(carry, queue):
@@ -182,37 +219,32 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             # the dense round's evolving best accumulator — and targets are
             # unique within a pass (distinct sources, one common shift), so
             # every scatter is race-free and deterministic.
-            vr_r, vr_c = carry
-            rf = vr_r.reshape(-1)
-            cf = vr_c.reshape(-1)
+            pf = [p.reshape(-1) for p in carry]
             live = queue >= 0
             src = jnp.where(live, queue, 0)
-            pr = rf[src]          # pre-round source pointers (the offers)
-            pc = cf[src]
-            srow = row_flat[src]  # global coords are affine in the local
-            scol = col_flat[src]  # index, so target coords are arithmetic
-            sr, sc = src // Wp, src % Wp
-            tgts, flags = [], []
-            for dr, dc in offsets:
-                # The pixel that reads source s under offset (dr, dc) is
-                # t = s - (dr, dc): dense's shifted() hands (i, j) the
-                # neighbor at (i + dr, j + dc).
-                tr, tc = sr - dr, sc - dc
-                inb = live & (tr >= 0) & (tr < Hp) & (tc >= 0) & (tc < Wp)
-                tg = jnp.where(inb, tr * Wp + tc, n)  # n -> dropped
-                trow, tcol = srow - dr, scol - dc
-                cd = dist2(trow, tcol, pr, pc)
-                od = dist2(trow, tcol,
-                           jnp.take(rf, tg, mode="fill", fill_value=SENTINEL),
-                           jnp.take(cf, tg, mode="fill", fill_value=SENTINEL))
+            ptr = [f[src] for f in pf]     # pre-round source pointers (offers)
+            sglob = [g[src] for g in coord_flat]  # global coords are affine in
+            sco = unravel_index(src, shp)         # the local index, so target
+            tgts, flags = [], []                  # coords are arithmetic
+            for off in offsets:
+                # The pixel that reads source s under offset d is t = s - d:
+                # dense's shifted() hands p the neighbor at p + d.
+                tco = tuple(c - d for c, d in zip(sco, off))
+                inb = live
+                for c, m in zip(tco, shp):
+                    inb = inb & (c >= 0) & (c < m)
+                tg = jnp.where(inb, ravel_index(tco, shp), n)  # n -> dropped
+                tglob = [g - d for g, d in zip(sglob, off)]
+                cd = _dist2(tglob, ptr)
+                od = _dist2(tglob, [jnp.take(f, tg, mode="fill",
+                                             fill_value=SENTINEL) for f in pf])
                 upd = (inb & (cd < od)
                        & jnp.take(valid_flat, tg, mode="fill", fill_value=False))
                 tdrop = jnp.where(upd, tg, n)
-                rf = rf.at[tdrop].set(pr, mode="drop")
-                cf = cf.at[tdrop].set(pc, mode="drop")
+                pf = [f.at[tdrop].set(p, mode="drop") for f, p in zip(pf, ptr)]
                 tgts.append(tg)
                 flags.append(upd)
-            return ((rf.reshape(Hp, Wp), cf.reshape(Hp, Wp)),
+            return (tuple(f.reshape(shp) for f in pf),
                     jnp.concatenate(tgts), jnp.concatenate(flags))
 
         initial_queue = None
@@ -221,140 +253,177 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
                 initial_queue = (seed_ref[0], cnt_ref[0, 0, 0])
             else:
                 initial_queue = (seed_ref[0], cnt_ref[0, 0])
-        (vr_r, vr_c), iters, spills = queued_fixed_point(
-            dense_round, queued_round, (vr_r, vr_c),
+        vr, iters, spills = queued_fixed_point(
+            dense_round, queued_round, tuple(vr),
             max_iters=max_iters, capacity=capacity,
             initial_queue=initial_queue)
         if batched:
-            or_ref[0] = vr_r
-            oc_ref[0] = vr_c
+            for o_ref, p in zip(out_refs, vr):
+                o_ref[0] = p
             iters_ref[0, 0, 0] = iters
             spills_ref[0, 0, 0] = spills
         else:
-            or_ref[...] = vr_r
-            oc_ref[...] = vr_c
+            for o_ref, p in zip(out_refs, vr):
+                o_ref[...] = p
             iters_ref[0, 0] = iters
             spills_ref[0, 0] = spills
 
     return kernel
 
 
-def _clip_capacity(queue_capacity: int, n: int) -> int:
-    # The queue counts per-contribution (duplicates included), so up to 8*n
-    # slots are meaningful — a capacity of 8*n can never overflow.
-    return max(1, min(int(queue_capacity), 8 * n))
+def _clip_capacity(queue_capacity: int, n: int, n_offsets: int) -> int:
+    # The queue counts per-contribution (duplicates included), so up to
+    # n_offsets*n slots are meaningful — that capacity can never overflow.
+    return max(1, min(int(queue_capacity), n_offsets * n))
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, seed=None, *,
-                          connectivity: int = 8,
-                          max_iters: int = 1024, queue_capacity: int = 64,
-                          interpret: bool = True):
-    """Queued drain of one EDT halo block (DESIGN.md §2.5).
+def edt_tile_solve_queued_nd(vr, valid, coords, seed=None, *, connectivity=8,
+                             max_iters: int = 1024, queue_capacity: int = 64,
+                             interpret: bool = True):
+    """Queued drain of one EDT halo block, any rank (DESIGN.md §2.5).
 
-    Returns (vr_r, vr_c, iters, spills) — pointer planes and iters
-    bit-identical to :func:`edt_tile_solve`; ``spills`` counts overflow
-    rounds that fell back to a dense sweep.
+    ``vr``/``coords``: (ndim, *spatial).  Returns (vr_out, iters, spills) —
+    pointer planes and iters bit-identical to :func:`edt_tile_solve_nd`;
+    ``spills`` counts overflow rounds that fell back to a dense sweep.
 
     ``seed`` — optional resident queue ``(indices, count)`` (DESIGN.md
     §2.6; see :func:`repro.kernels.morph_tile.morph_tile_solve_queued` for
     the contract): start the drain from a known frontier instead of the
     O(block) seeding sweep.
     """
-    shp = vr_r.shape
-    cap = _clip_capacity(queue_capacity, shp[0] * shp[1])
+    ndim = vr.shape[0]
+    shp = valid.shape
+    n_off = len(offsets_for(connectivity))
+    cap = _clip_capacity(queue_capacity, math.prod(shp), n_off)
     kernel = _make_queued_kernel(connectivity, max_iters, cap,
                                  seeded=seed is not None)
-    out_shape = (
-        jax.ShapeDtypeStruct(shp, vr_r.dtype),
-        jax.ShapeDtypeStruct(shp, vr_c.dtype),
-        jax.ShapeDtypeStruct((1, 1), jnp.int32),
-        jax.ShapeDtypeStruct((1, 1), jnp.int32),
-    )
-    full = lambda s_: pl.BlockSpec(s_, lambda: (0, 0))
-    in_specs = [full(shp)] * 5
-    args = (vr_r, vr_c, valid, row, col)
+    out_shape = tuple(jax.ShapeDtypeStruct(shp, vr.dtype) for _ in range(ndim))
+    out_shape += (jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                  jax.ShapeDtypeStruct((1, 1), jnp.int32))
+    in_specs = [_full(shp)] * (2 * ndim + 1)
+    args = tuple(vr[i] for i in range(ndim)) + (valid,)
+    args += tuple(coords[i] for i in range(ndim))
     if seed is not None:
         sq, cnt = seed
         sq = _fit_seed(sq, cap)[None, :]            # (1, cap)
         cnt = jnp.asarray(cnt, jnp.int32).reshape(1, 1)
-        in_specs += [full(sq.shape), full((1, 1))]
+        in_specs += [_full(sq.shape), _full((1, 1))]
         args += (sq, cnt)
-    o_r, o_c, iters, spills = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         out_shape=out_shape,
         in_specs=in_specs,
-        out_specs=(full(shp), full(shp), full((1, 1)), full((1, 1))),
+        out_specs=tuple([_full(shp)] * ndim) + (_full((1, 1)), _full((1, 1))),
         interpret=interpret,
     )(*args)
-    return o_r, o_c, iters[0, 0], spills[0, 0]
+    return jnp.stack(outs[:ndim]), outs[ndim][0, 0], outs[ndim + 1][0, 0]
+
+
+def edt_tile_solve_queued(vr_r, vr_c, valid, row, col, seed=None, *,
+                          connectivity=8,
+                          max_iters: int = 1024, queue_capacity: int = 64,
+                          interpret: bool = True):
+    """Queued drain of one 2D EDT halo block — the historical spelling of
+    :func:`edt_tile_solve_queued_nd`.  Returns (vr_r, vr_c, iters, spills)."""
+    o, iters, spills = edt_tile_solve_queued_nd(
+        jnp.stack([vr_r, vr_c]), valid, jnp.stack([row, col]), seed,
+        connectivity=connectivity, max_iters=max_iters,
+        queue_capacity=queue_capacity, interpret=interpret)
+    return o[0], o[1], iters, spills
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, seed=None, *,
-                                  connectivity: int = 8, max_iters: int = 1024,
-                                  queue_capacity: int = 64,
-                                  interpret: bool = True):
-    """Queued drain of a (K, T+2, T+2) EDT batch; one local queue per grid
-    step.  Returns (vr_r, vr_c, iters, spills) with (K,) counters.
+def edt_tile_solve_queued_batched_nd(vr, valid, coords, seed=None, *,
+                                     connectivity=8, max_iters: int = 1024,
+                                     queue_capacity: int = 64,
+                                     interpret: bool = True):
+    """Queued drain of a (K, ndim, *spatial) EDT batch; one local queue per
+    grid step.  Returns (vr_out, iters, spills) with (K,) counters.
 
     ``seed`` — optional per-block resident queues ``(indices, counts)``
     with shapes (K, n) / (K,)."""
-    K, Hp, Wp = vr_r.shape
-    cap = _clip_capacity(queue_capacity, Hp * Wp)
+    K, ndim = vr.shape[0], vr.shape[1]
+    spatial = valid.shape[1:]
+    n_off = len(offsets_for(connectivity))
+    cap = _clip_capacity(queue_capacity, math.prod(spatial), n_off)
     kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True,
                                  seeded=seed is not None)
-    out_shape = (
-        jax.ShapeDtypeStruct((K, Hp, Wp), vr_r.dtype),
-        jax.ShapeDtypeStruct((K, Hp, Wp), vr_c.dtype),
-        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
-        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
-    )
-    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    out_shape = tuple(jax.ShapeDtypeStruct((K,) + spatial, vr.dtype)
+                      for _ in range(ndim))
+    out_shape += (jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
+                  jax.ShapeDtypeStruct((K, 1, 1), jnp.int32))
+    blk = _batch_blk(spatial)
     scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
-    in_specs = [blk] * 5
-    args = (vr_r, vr_c, valid, row, col)
+    in_specs = [blk] * (2 * ndim + 1)
+    args = tuple(vr[:, i] for i in range(ndim)) + (valid,)
+    args += tuple(coords[:, i] for i in range(ndim))
     if seed is not None:
         sq, cnt = seed
         sq = jax.vmap(lambda s_: _fit_seed(s_, cap))(sq)      # (K, cap)
         cnt = jnp.asarray(cnt, jnp.int32).reshape(K, 1, 1)
         in_specs += [pl.BlockSpec((1, cap), lambda k: (k, 0)), scalar]
         args += (sq, cnt)
-    o_r, o_c, iters, spills = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=(K,),
         out_shape=out_shape,
         in_specs=in_specs,
-        out_specs=(blk, blk, scalar, scalar),
+        out_specs=tuple([blk] * ndim) + (scalar, scalar),
         interpret=interpret,
     )(*args)
-    return o_r, o_c, iters[:, 0, 0], spills[:, 0, 0]
+    return (jnp.stack(outs[:ndim], axis=1),
+            outs[ndim][:, 0, 0], outs[ndim + 1][:, 0, 0])
+
+
+def edt_tile_solve_queued_batched(vr_r, vr_c, valid, row, col, seed=None, *,
+                                  connectivity=8, max_iters: int = 1024,
+                                  queue_capacity: int = 64,
+                                  interpret: bool = True):
+    """Queued drain of a (K, T+2, T+2) 2D EDT batch — historical spelling of
+    :func:`edt_tile_solve_queued_batched_nd`."""
+    o, iters, spills = edt_tile_solve_queued_batched_nd(
+        jnp.stack([vr_r, vr_c], axis=1), valid,
+        jnp.stack([row, col], axis=1), seed,
+        connectivity=connectivity, max_iters=max_iters,
+        queue_capacity=queue_capacity, interpret=interpret)
+    return o[:, 0], o[:, 1], iters, spills
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
-def edt_tile_solve_batched(vr_r, vr_c, valid, row, col, *, connectivity: int = 8,
-                           max_iters: int = 1024, interpret: bool = True):
-    """Drain a (K, T+2, T+2) batch of EDT halo blocks concurrently.
+def edt_tile_solve_batched_nd(vr, valid, coords, *, connectivity=8,
+                              max_iters: int = 1024, interpret: bool = True):
+    """Drain a (K, ndim, *spatial) batch of EDT halo blocks concurrently.
 
-    Returns (vr_r, vr_c, iters) with iters shaped (K,); each grid step
-    iterates its own block to stability independently.
+    Returns (vr_out, iters) with iters shaped (K,); each grid step iterates
+    its own block to stability independently.
     """
-    K, Hp, Wp = vr_r.shape
+    K, ndim = vr.shape[0], vr.shape[1]
+    spatial = valid.shape[1:]
     kernel = _make_kernel(connectivity, max_iters, batched=True)
-    out_shape = (
-        jax.ShapeDtypeStruct((K, Hp, Wp), vr_r.dtype),
-        jax.ShapeDtypeStruct((K, Hp, Wp), vr_c.dtype),
-        jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
-    )
-    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
-    o_r, o_c, iters = pl.pallas_call(
+    out_shape = tuple(jax.ShapeDtypeStruct((K,) + spatial, vr.dtype)
+                      for _ in range(ndim))
+    out_shape += (jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),)
+    blk = _batch_blk(spatial)
+    outs = pl.pallas_call(
         kernel,
         grid=(K,),
         out_shape=out_shape,
-        in_specs=[blk] * 5,
-        out_specs=(blk, blk, pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))),
+        in_specs=[blk] * (2 * ndim + 1),
+        out_specs=tuple([blk] * ndim) + (pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0)),),
         interpret=interpret,
-    )(vr_r, vr_c, valid, row, col)
-    return o_r, o_c, iters[:, 0, 0]
+    )(*[vr[:, i] for i in range(ndim)], valid, *[coords[:, i] for i in range(ndim)])
+    return jnp.stack(outs[:ndim], axis=1), outs[ndim][:, 0, 0]
+
+
+def edt_tile_solve_batched(vr_r, vr_c, valid, row, col, *, connectivity=8,
+                           max_iters: int = 1024, interpret: bool = True):
+    """Drain a (K, T+2, T+2) batch of 2D EDT halo blocks — historical
+    spelling of :func:`edt_tile_solve_batched_nd`."""
+    o, iters = edt_tile_solve_batched_nd(
+        jnp.stack([vr_r, vr_c], axis=1), valid,
+        jnp.stack([row, col], axis=1),
+        connectivity=connectivity, max_iters=max_iters, interpret=interpret)
+    return o[:, 0], o[:, 1], iters

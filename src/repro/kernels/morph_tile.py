@@ -2,15 +2,17 @@
 
 This is the hot spot the paper optimizes with its BQ/TQ queues: repeated
 neighbor propagation over one tile.  The TPU formulation keeps the whole
-(T+2, T+2) halo block resident in VMEM and iterates the 8/4-neighbor
-max-propagate + min-clamp to local stability *inside the kernel* — zero HBM
-traffic between iterations (the BQ analogue; DESIGN.md §2).  The neighbor
-combine is 8 statically-shifted VREG planes (TQ analogue).
+halo block (``(T+2, T+2)`` in 2D, ``(T+2, T+2, T+2)`` in 3D — DESIGN.md
+§2.7) resident in VMEM and iterates the neighbor max-propagate + min-clamp
+to local stability *inside the kernel* — zero HBM traffic between
+iterations (the BQ analogue; DESIGN.md §2).  The neighbor combine is one
+statically-shifted VREG plane per offset in the op's
+:class:`~repro.core.geometry.Neighborhood` (TQ analogue).
 
 Two entry points:
 
-* :func:`morph_tile_solve`          — one (T+2, T+2) block;
-* :func:`morph_tile_solve_batched`  — a (K, T+2, T+2) batch of blocks,
+* :func:`morph_tile_solve`          — one halo block;
+* :func:`morph_tile_solve_batched`  — a (K, T+2, ...) batch of blocks,
   drained concurrently with a ``pl.pallas_call`` grid over the batch
   dimension (the paper's parallel consumption of the global queue,
   DESIGN.md §2 "batched queue drain"); each grid step iterates its own
@@ -23,11 +25,13 @@ int32/float32 payloads (wrappers upcast uint8 — TPU-native dtype policy).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.geometry import ravel_index, unravel_index
 from repro.core.pattern import offsets_for
 from repro.kernels.queue import fit_seed as _fit_seed
 from repro.kernels.queue import queued_fixed_point
@@ -37,7 +41,25 @@ def _neutral(dtype):
     return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf
 
 
-def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
+def _full(shape):
+    """BlockSpec for a whole-array block of any rank."""
+    shape = tuple(shape)
+    return pl.BlockSpec(shape, lambda: (0,) * len(shape))
+
+
+def _batch_blk(spatial):
+    """BlockSpec for one (1, *spatial) slab of a batched array under grid=(K,)."""
+    spatial = tuple(spatial)
+    return pl.BlockSpec((1,) + spatial, lambda k: (k,) + (0,) * len(spatial))
+
+
+def _shifted_slice(xp, off, shape):
+    """The neighbor plane at `off` of a halo-padded block (rank-generic)."""
+    return jax.lax.slice(xp, tuple(1 + d for d in off),
+                         tuple(1 + d + s for d, s in zip(off, shape)))
+
+
+def _make_kernel(connectivity, max_iters: int, batched: bool = False):
     offsets = offsets_for(connectivity)
 
     def kernel(j_ref, i_ref, valid_ref, o_ref, iters_ref):
@@ -49,7 +71,7 @@ def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
             J = j_ref[...]
             I = i_ref[...]
             valid = valid_ref[...]
-        Hp, Wp = J.shape  # (T+2, T+2)
+        shp = J.shape  # halo block: (T+2, ...) over the spatial rank
         neut = _neutral(J.dtype)
         # Invalid in-block pixels (non-rectangular masks) must neither source
         # nor hold propagation: pin them to the neutral value — the morph
@@ -66,9 +88,8 @@ def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
             # propagation paths identical to the dense-round oracle.
             Jp = jnp.pad(J, 1, constant_values=neut)
             cand = jnp.full_like(J, neut)
-            for dr, dc in offsets:
-                nb = jax.lax.slice(Jp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
-                cand = jnp.maximum(cand, nb)
+            for off in offsets:
+                cand = jnp.maximum(cand, _shifted_slice(Jp, off, shp))
             new = jnp.minimum(I, jnp.maximum(J, cand))
             new = jnp.where(valid, new, neut)
             changed = jnp.any(new != J)
@@ -86,11 +107,11 @@ def _make_kernel(connectivity: int, max_iters: int, batched: bool = False):
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
-def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 1024,
+def morph_tile_solve(J, I, valid, *, connectivity=8, max_iters: int = 1024,
                      interpret: bool = True):
-    """Drain one (T+2, T+2) halo block to local stability.
+    """Drain one (T+2, ...) halo block to local stability.
 
-    Returns (J_out, iters).  Halo rows/cols are read as propagation sources
+    Returns (J_out, iters).  Halo faces are read as propagation sources
     but their output values are unspecified (callers write back interiors
     only, as the tiled engine does).  Invalid cells come back neutral.
     """
@@ -102,17 +123,14 @@ def morph_tile_solve(J, I, valid, *, connectivity: int = 8, max_iters: int = 102
     J_out, iters = pl.pallas_call(
         kernel,
         out_shape=out_shape,
-        in_specs=[pl.BlockSpec(J.shape, lambda: (0, 0)),
-                  pl.BlockSpec(I.shape, lambda: (0, 0)),
-                  pl.BlockSpec(valid.shape, lambda: (0, 0))],
-        out_specs=(pl.BlockSpec(J.shape, lambda: (0, 0)),
-                   pl.BlockSpec((1, 1), lambda: (0, 0))),
+        in_specs=[_full(J.shape), _full(I.shape), _full(valid.shape)],
+        out_specs=(_full(J.shape), _full((1, 1))),
         interpret=interpret,
     )(J, I, valid)
     return J_out, iters[0, 0]
 
 
-def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
+def _make_queued_kernel(connectivity, max_iters: int, capacity: int,
                         batched: bool = False, seeded: bool = False):
     """Queued variant (DESIGN.md §2.5), push formulation: the queue holds
     last round's *improved* pixels, and each round gathers only those and
@@ -143,8 +161,8 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             J = j_ref[...]
             I = i_ref[...]
             valid = valid_ref[...]
-        Hp, Wp = J.shape  # (T+2, T+2)
-        n = Hp * Wp
+        shp = J.shape  # halo block: (T+2, ...) over the spatial rank
+        n = math.prod(shp)
         neut = _neutral(J.dtype)
         J = jnp.where(valid, J, neut)
 
@@ -152,9 +170,8 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             # Same body as the dense kernel's while-loop step.
             Jp = jnp.pad(J, 1, constant_values=neut)
             cand = jnp.full_like(J, neut)
-            for dr, dc in offsets:
-                nb = jax.lax.slice(Jp, (1 + dr, 1 + dc), (1 + dr + Hp, 1 + dc + Wp))
-                cand = jnp.maximum(cand, nb)
+            for off in offsets:
+                cand = jnp.maximum(cand, _shifted_slice(Jp, off, shp))
             new = jnp.minimum(I, jnp.maximum(J, cand))
             new = jnp.where(valid, new, neut)
             return new, new != J
@@ -172,12 +189,14 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             live = queue >= 0
             src = jnp.where(live, queue, 0)
             vs = Jf[src]                    # pre-round source values
-            sr, sc = src // Wp, src % Wp
+            sco = unravel_index(src, shp)   # per-axis source coords
             tgts = []                       # offsets unrolled in Python:
-            for dr, dc in offsets:          # Pallas forbids captured arrays
-                tr, tc = sr + dr, sc + dc
-                inb = live & (tr >= 0) & (tr < Hp) & (tc >= 0) & (tc < Wp)
-                tgts.append(jnp.where(inb, tr * Wp + tc, n))  # n -> dropped
+            for off in offsets:             # Pallas forbids captured arrays
+                tco = tuple(c + d for c, d in zip(sco, off))
+                inb = live
+                for c, s in zip(tco, shp):
+                    inb = inb & (c >= 0) & (c < s)
+                tgts.append(jnp.where(inb, ravel_index(tco, shp), n))  # n -> dropped
             tgt = jnp.concatenate(tgts)
             offer = jnp.minimum(
                 jnp.take(I_flat, tgt, mode="fill", fill_value=neut),
@@ -186,7 +205,7 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
             imp = (offer > old) & jnp.take(valid_flat, tgt, mode="fill",
                                            fill_value=False)
             Jf = Jf.at[jnp.where(imp, tgt, n)].max(offer, mode="drop")
-            return Jf.reshape(Hp, Wp), tgt, imp
+            return Jf.reshape(shp), tgt, imp
 
         initial_queue = None
         if seeded:
@@ -210,18 +229,18 @@ def _make_queued_kernel(connectivity: int, max_iters: int, capacity: int,
     return kernel
 
 
-def _clip_capacity(queue_capacity: int, n: int) -> int:
-    # The queue counts per-contribution (duplicates included), so up to 8*n
-    # slots are meaningful — a capacity of 8*n can never overflow.
-    return max(1, min(int(queue_capacity), 8 * n))
+def _clip_capacity(queue_capacity: int, n: int, n_offsets: int) -> int:
+    # The queue counts per-contribution (duplicates included), so up to
+    # n_offsets*n slots are meaningful — that capacity can never overflow.
+    return max(1, min(int(queue_capacity), n_offsets * n))
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
-def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity: int = 8,
+def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity=8,
                             max_iters: int = 1024, queue_capacity: int = 64,
                             interpret: bool = True):
-    """Queued drain of one (T+2, T+2) halo block (DESIGN.md §2.5).
+    """Queued drain of one (T+2, ...) halo block (DESIGN.md §2.5).
 
     Returns (J_out, iters, spills): bit-identical J_out and iters to
     :func:`morph_tile_solve`; ``spills`` counts the rounds whose candidate
@@ -234,7 +253,8 @@ def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity: int = 8,
     O(block) seeding sweep; a count above the (clipped) capacity safely
     spills to a dense first round.
     """
-    cap = _clip_capacity(queue_capacity, J.shape[0] * J.shape[1])
+    n_off = len(offsets_for(connectivity))
+    cap = _clip_capacity(queue_capacity, math.prod(J.shape), n_off)
     kernel = _make_queued_kernel(connectivity, max_iters, cap,
                                  seeded=seed is not None)
     out_shape = (
@@ -242,22 +262,20 @@ def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity: int = 8,
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
-    scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
-    in_specs = [pl.BlockSpec(J.shape, lambda: (0, 0)),
-                pl.BlockSpec(I.shape, lambda: (0, 0)),
-                pl.BlockSpec(valid.shape, lambda: (0, 0))]
+    scalar = _full((1, 1))
+    in_specs = [_full(J.shape), _full(I.shape), _full(valid.shape)]
     args = (J, I, valid)
     if seed is not None:
         sq, cnt = seed
         sq = _fit_seed(sq, cap)[None, :]            # (1, cap)
         cnt = jnp.asarray(cnt, jnp.int32).reshape(1, 1)
-        in_specs += [pl.BlockSpec(sq.shape, lambda: (0, 0)), scalar]
+        in_specs += [_full(sq.shape), scalar]
         args += (sq, cnt)
     J_out, iters, spills = pl.pallas_call(
         kernel,
         out_shape=out_shape,
         in_specs=in_specs,
-        out_specs=(pl.BlockSpec(J.shape, lambda: (0, 0)), scalar, scalar),
+        out_specs=(_full(J.shape), scalar, scalar),
         interpret=interpret,
     )(*args)
     return J_out, iters[0, 0], spills[0, 0]
@@ -266,26 +284,28 @@ def morph_tile_solve_queued(J, I, valid, seed=None, *, connectivity: int = 8,
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters",
                                              "queue_capacity", "interpret"))
 def morph_tile_solve_queued_batched(J, I, valid, seed=None, *,
-                                    connectivity: int = 8,
+                                    connectivity=8,
                                     max_iters: int = 1024,
                                     queue_capacity: int = 64,
                                     interpret: bool = True):
-    """Queued drain of a (K, T+2, T+2) batch; each grid step owns one block
+    """Queued drain of a (K, T+2, ...) batch; each grid step owns one block
     and one local queue.  Returns (J_out, iters, spills), both (K,).
 
     ``seed`` — optional per-block resident queues ``(indices, counts)``
     with shapes (K, n) / (K,) (same contract as
     :func:`morph_tile_solve_queued`)."""
-    K, Hp, Wp = J.shape
-    cap = _clip_capacity(queue_capacity, Hp * Wp)
+    K = J.shape[0]
+    spatial = J.shape[1:]
+    n_off = len(offsets_for(connectivity))
+    cap = _clip_capacity(queue_capacity, math.prod(spatial), n_off)
     kernel = _make_queued_kernel(connectivity, max_iters, cap, batched=True,
                                  seeded=seed is not None)
     out_shape = (
-        jax.ShapeDtypeStruct((K, Hp, Wp), J.dtype),
+        jax.ShapeDtypeStruct(J.shape, J.dtype),
         jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
         jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
     )
-    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    blk = _batch_blk(spatial)
     scalar = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
     in_specs = [blk, blk, blk]
     args = (J, I, valid)
@@ -307,22 +327,23 @@ def morph_tile_solve_queued_batched(J, I, valid, seed=None, *,
 
 
 @functools.partial(jax.jit, static_argnames=("connectivity", "max_iters", "interpret"))
-def morph_tile_solve_batched(J, I, valid, *, connectivity: int = 8,
+def morph_tile_solve_batched(J, I, valid, *, connectivity=8,
                              max_iters: int = 1024, interpret: bool = True):
-    """Drain a (K, T+2, T+2) batch of halo blocks concurrently.
+    """Drain a (K, T+2, ...) batch of halo blocks concurrently.
 
     One ``pallas_call`` with ``grid=(K,)``: each grid step owns one block and
     iterates it to *its own* local stability (no cross-block sync, unlike a
     vmapped while_loop which runs every block for the batch max).  Returns
     (J_out, iters) with iters shaped (K,).
     """
-    K, Hp, Wp = J.shape
+    K = J.shape[0]
+    spatial = J.shape[1:]
     kernel = _make_kernel(connectivity, max_iters, batched=True)
     out_shape = (
-        jax.ShapeDtypeStruct((K, Hp, Wp), J.dtype),
+        jax.ShapeDtypeStruct(J.shape, J.dtype),
         jax.ShapeDtypeStruct((K, 1, 1), jnp.int32),
     )
-    blk = pl.BlockSpec((1, Hp, Wp), lambda k: (k, 0, 0))
+    blk = _batch_blk(spatial)
     J_out, iters = pl.pallas_call(
         kernel,
         grid=(K,),

@@ -25,14 +25,17 @@
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.edt_tile import (edt_tile_solve, edt_tile_solve_batched,
-                                    edt_tile_solve_queued,
-                                    edt_tile_solve_queued_batched)
+from repro.edt.ops import COORD_LEAVES
+from repro.kernels.edt_tile import (edt_tile_solve_batched_nd,
+                                    edt_tile_solve_nd,
+                                    edt_tile_solve_queued_batched_nd,
+                                    edt_tile_solve_queued_nd)
 from repro.kernels.morph_tile import (morph_tile_solve,
                                       morph_tile_solve_batched,
                                       morph_tile_solve_queued,
@@ -43,17 +46,22 @@ from repro.label.ops import LABEL_CAP
 DEFAULT_MAX_ITERS = 1024
 
 
-def default_kernel_queue_capacity(block_side: int) -> int:
-    """Default in-kernel queue capacity for a (B, B) halo block.
+def default_kernel_queue_capacity(block) -> int:
+    """Default in-kernel queue capacity for a halo block.
 
-    The queue holds last round's *improved* pixels — a propagating
-    wavefront crossing the block is a band of O(B) of them.  A push round's
-    cost scales with the capacity whether or not the slots are occupied, so
-    the default tracks the band (B), floored at 64 so tiny tiles don't
-    thrash the dense-spill path and capped at the block size (a queue
-    bigger than the block is just the block).  See DESIGN.md §2.5.
+    ``block`` is the block's spatial shape tuple (an int means a square 2D
+    block — the historical spelling).  The queue holds last round's
+    *improved* pixels — a propagating wavefront crossing the block is a
+    band of O(prod(B)/min(B)) of them (a row of a 2D block, a slab of a 3D
+    one).  A push round's cost scales with the capacity whether or not the
+    slots are occupied, so the default tracks the band, floored at 64 so
+    tiny tiles don't thrash the dense-spill path and capped at the block
+    size (a queue bigger than the block is just the block).  See DESIGN.md
+    §2.5/§2.7.
     """
-    return int(min(block_side * block_side, max(64, block_side)))
+    shape = (block, block) if isinstance(block, int) else tuple(block)
+    band = math.prod(shape) // min(shape)
+    return int(min(math.prod(shape), max(64, band)))
 
 
 def _up(x):
@@ -151,14 +159,21 @@ def tile_solver_label_batched(connectivity: int = 8, interpret: bool = True,
     return solver
 
 
-def edt_tile_pallas(state_block, connectivity: int = 8, interpret: bool = True,
+def _edt_coords(state_block, ndim: int, stack_axis: int = 0):
+    """Stack the op's coordinate leaves ((row, col) or (dep, row, col))
+    into the (ndim, *spatial) array the ``*_nd`` kernels take."""
+    return jnp.stack([state_block[k] for k in COORD_LEAVES[ndim]],
+                     axis=stack_axis)
+
+
+def edt_tile_pallas(state_block, connectivity=8, interpret: bool = True,
                     max_iters: int = DEFAULT_MAX_ITERS):
-    vr = state_block["vr"]
-    o_r, o_c, iters = edt_tile_solve(
-        vr[0], vr[1], state_block["valid"], state_block["row"], state_block["col"],
+    vr = state_block["vr"]  # (ndim, *spatial)
+    o, iters = edt_tile_solve_nd(
+        vr, state_block["valid"], _edt_coords(state_block, vr.shape[0]),
         connectivity=connectivity, max_iters=max_iters, interpret=interpret)
     out = dict(state_block)
-    out["vr"] = jnp.stack([o_r, o_c])
+    out["vr"] = o
     return out, iters
 
 
@@ -170,17 +185,17 @@ def tile_solver_edt(connectivity: int = 8, interpret: bool = True,
     return solver
 
 
-def edt_tile_pallas_batched(state_blocks, connectivity: int = 8,
+def edt_tile_pallas_batched(state_blocks, connectivity=8,
                             interpret: bool = True,
                             max_iters: int = DEFAULT_MAX_ITERS):
     """Batched EDT drain over leaves with a leading (K,) batch dim."""
-    vr = state_blocks["vr"]  # (K, 2, T+2, T+2)
-    o_r, o_c, iters = edt_tile_solve_batched(
-        vr[:, 0], vr[:, 1], state_blocks["valid"], state_blocks["row"],
-        state_blocks["col"], connectivity=connectivity, max_iters=max_iters,
-        interpret=interpret)
+    vr = state_blocks["vr"]  # (K, ndim, *spatial)
+    o, iters = edt_tile_solve_batched_nd(
+        vr, state_blocks["valid"],
+        _edt_coords(state_blocks, vr.shape[1], stack_axis=1),
+        connectivity=connectivity, max_iters=max_iters, interpret=interpret)
     out = dict(state_blocks)
-    out["vr"] = jnp.stack([o_r, o_c], axis=1)
+    out["vr"] = o
     return out, iters
 
 
@@ -213,7 +228,7 @@ def morph_tile_pallas_queued(J, I, valid, connectivity: int = 8,
                              queue_capacity: int | None = None,
                              queue=None):
     if queue_capacity is None:
-        queue_capacity = default_kernel_queue_capacity(J.shape[-1])
+        queue_capacity = default_kernel_queue_capacity(J.shape)
     Ju, orig = _up(J)
     Iu, _ = _up(I)
     out, iters, spills = morph_tile_solve_queued(
@@ -242,7 +257,7 @@ def tile_solver_morph_queued_batched(connectivity: int = 8,
                                      queue_capacity: int | None = None):
     """`batched_tile_solver` over the queued grid-over-batch morph kernel."""
     def solver(blocks, queue=None):
-        cap = (default_kernel_queue_capacity(blocks["J"].shape[-1])
+        cap = (default_kernel_queue_capacity(blocks["J"].shape[1:])
                if queue_capacity is None else queue_capacity)
         Ju, orig = _up(blocks["J"])
         Iu, _ = _up(blocks["I"])
@@ -261,7 +276,7 @@ def tile_solver_label_queued(connectivity: int = 8, interpret: bool = True,
     """Queued morph kernel parametrized into the label masked-max update."""
     def solver(block, queue=None):
         J, I = _label_as_morph(block)
-        cap = (default_kernel_queue_capacity(J.shape[-1])
+        cap = (default_kernel_queue_capacity(J.shape)
                if queue_capacity is None else queue_capacity)
         lab, iters, _ = morph_tile_solve_queued(
             J, I, block["valid"], queue, connectivity=connectivity,
@@ -278,7 +293,7 @@ def tile_solver_label_queued_batched(connectivity: int = 8,
                                      queue_capacity: int | None = None):
     def solver(blocks, queue=None):
         J, I = _label_as_morph(blocks)
-        cap = (default_kernel_queue_capacity(J.shape[-1])
+        cap = (default_kernel_queue_capacity(J.shape[1:])
                if queue_capacity is None else queue_capacity)
         lab, iters, _ = morph_tile_solve_queued_batched(
             J, I, blocks["valid"], queue, connectivity=connectivity,
@@ -289,37 +304,37 @@ def tile_solver_label_queued_batched(connectivity: int = 8,
     return solver
 
 
-def tile_solver_edt_queued(connectivity: int = 8, interpret: bool = True,
+def tile_solver_edt_queued(connectivity=8, interpret: bool = True,
                            max_iters: int = DEFAULT_MAX_ITERS,
                            queue_capacity: int | None = None):
     def solver(block, queue=None):
         vr = block["vr"]
-        cap = (default_kernel_queue_capacity(vr.shape[-1])
+        cap = (default_kernel_queue_capacity(block["valid"].shape)
                if queue_capacity is None else queue_capacity)
-        o_r, o_c, iters, _ = edt_tile_solve_queued(
-            vr[0], vr[1], block["valid"], block["row"], block["col"], queue,
+        o, iters, _ = edt_tile_solve_queued_nd(
+            vr, block["valid"], _edt_coords(block, vr.shape[0]), queue,
             connectivity=connectivity, max_iters=max_iters,
             queue_capacity=cap, interpret=interpret)
         out = dict(block)
-        out["vr"] = jnp.stack([o_r, o_c])
+        out["vr"] = o
         return out, iters >= max_iters
     return solver
 
 
-def tile_solver_edt_queued_batched(connectivity: int = 8,
+def tile_solver_edt_queued_batched(connectivity=8,
                                    interpret: bool = True,
                                    max_iters: int = DEFAULT_MAX_ITERS,
                                    queue_capacity: int | None = None):
     def solver(blocks, queue=None):
-        vr = blocks["vr"]  # (K, 2, T+2, T+2)
-        cap = (default_kernel_queue_capacity(vr.shape[-1])
+        vr = blocks["vr"]  # (K, ndim, *spatial)
+        cap = (default_kernel_queue_capacity(blocks["valid"].shape[1:])
                if queue_capacity is None else queue_capacity)
-        o_r, o_c, iters, _ = edt_tile_solve_queued_batched(
-            vr[:, 0], vr[:, 1], blocks["valid"], blocks["row"], blocks["col"],
+        o, iters, _ = edt_tile_solve_queued_batched_nd(
+            vr, blocks["valid"], _edt_coords(blocks, vr.shape[1], stack_axis=1),
             queue, connectivity=connectivity, max_iters=max_iters,
             queue_capacity=cap, interpret=interpret)
         out = dict(blocks)
-        out["vr"] = jnp.stack([o_r, o_c], axis=1)
+        out["vr"] = o
         return out, iters >= max_iters
     return solver
 

@@ -45,7 +45,7 @@ from typing import Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import shift2d
+from repro.core.pattern import shiftnd
 
 
 def _iota1d(n: int) -> jnp.ndarray:
@@ -53,16 +53,16 @@ def _iota1d(n: int) -> jnp.ndarray:
     return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
 
 
-def dilate(mask: jnp.ndarray, offsets: Sequence[Tuple[int, int]]) -> jnp.ndarray:
+def dilate(mask: jnp.ndarray, offsets: Sequence[Tuple[int, ...]]) -> jnp.ndarray:
     """Pixels adjacent (under ``offsets``) to a set pixel.
 
-    ``offsets`` is symmetric for both N4 and N8, so shifting the mask by
-    each offset covers both "my neighbor changed" directions.  The result
+    Every ``Neighborhood`` offset table is symmetric, so shifting the mask
+    by each offset covers both "my neighbor changed" directions.  The result
     does *not* include ``mask`` itself — callers union it in explicitly.
     """
     out = jnp.zeros_like(mask)
-    for dr, dc in offsets:
-        out = out | shift2d(mask, dr, dc, fill=False)
+    for off in offsets:
+        out = out | shiftnd(mask, off, fill=False)
     return out
 
 

@@ -23,7 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import PropagationOp, shift2d
+from repro.core.pattern import PropagationOp, shiftnd
 
 
 def _neutral_min(dtype):
@@ -55,9 +55,9 @@ class MorphReconstructOp(PropagationOp):
         J, I = state["J"], state["I"]
         neut = _neutral_min(J.dtype)
         can = jnp.zeros(J.shape, dtype=bool)
-        for dr, dc in self.offsets:
-            Jq = shift2d(J, dr, dc, neut)
-            Iq = shift2d(I, dr, dc, neut)
+        for off in self.offsets:
+            Jq = shiftnd(J, off, neut)
+            Iq = shiftnd(I, off, neut)
             can = can | ((Jq < J) & (Jq < Iq))
         return can & state["valid"]
 
@@ -72,8 +72,8 @@ class MorphReconstructOp(PropagationOp):
         neut = _neutral_min(J.dtype)
         src = jnp.where(frontier, J, neut)
         cand = jnp.full_like(J, neut)
-        for dr, dc in self.offsets:
-            cand = jnp.maximum(cand, shift2d(src, dr, dc, neut))
+        for off in self.offsets:
+            cand = jnp.maximum(cand, shiftnd(src, off, neut))
         Jn = jnp.minimum(I, jnp.maximum(J, cand))
         new_frontier = (Jn > J) & state["valid"]
         return {"J": Jn, "I": I, "valid": state["valid"]}, new_frontier

@@ -32,8 +32,15 @@ def _rng_valid(rng, shape, frac: float = 0.85):
     import jax.numpy as jnp
     v = rng.random(shape) < frac
     # keep the mask non-degenerate: at least one valid pixel
-    v[shape[0] // 2, shape[1] // 2] = True
+    v[tuple(s // 2 for s in shape)] = True
     return jnp.asarray(v)
+
+
+def _example_connectivity(shape):
+    """The conformance suite's default neighborhood for a given rank: full
+    Moore connectivity (2-D conn8 keeps its historical legacy-int spelling
+    so cache keys and stats stay bit-identical; 3-D uses conn26)."""
+    return 8 if len(shape) == 2 else "conn26"
 
 
 def _register_morph():
@@ -45,7 +52,7 @@ def _register_morph():
     from repro.morph.ops import MorphReconstructOp
 
     def example_state(rng, shape):
-        op = MorphReconstructOp(connectivity=8)
+        op = MorphReconstructOp(connectivity=_example_connectivity(shape))
         mask = rng.integers(0, 200, shape).astype(np.int32)
         marker = np.where(rng.random(shape) < 0.03, mask, 0).astype(np.int32)
         return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask),
@@ -69,6 +76,8 @@ def _register_morph():
         # default elementwise-max merge; single int32 mutable plane (J) and
         # the 8-neighbor max round define the cost model's unit weights.
         example_state=example_state,
+        supported_ndims=(2, 3),
+        neighborhoods=("conn4", "conn8", "conn6", "conn18", "conn26"),
         bytes_per_pixel=4.0, round_cost_weight=1.0,
         doc="grayscale morphological reconstruction-by-dilation (paper §2.1)"))
 
@@ -84,20 +93,20 @@ def _register_edt():
         def merge(origin, old_inner, new_inner):
             # Keep, per pixel, whichever Voronoi pointer is closer; the
             # host-scheduler analogue of Algorithm 6's atomicCAS retry.
-            r0, c0 = origin
+            # ``origin`` is the interior's global ndim-tuple; the global
+            # coordinate grids are rebuilt per axis (np.ogrid broadcasts).
             vo = old_inner["vr"].astype(np.int64)
             vn = new_inner["vr"].astype(np.int64)
-            T_h, T_w = vo.shape[-2:]
-            rr = (r0 + np.arange(T_h))[:, None]
-            cc = (c0 + np.arange(T_w))[None, :]
-            d_old = (rr - vo[0]) ** 2 + (cc - vo[1]) ** 2
-            d_new = (rr - vn[0]) ** 2 + (cc - vn[1]) ** 2
+            grids = np.ogrid[tuple(slice(o, o + s)
+                                   for o, s in zip(origin, vo.shape[1:]))]
+            d_old = sum((g - vo[a]) ** 2 for a, g in enumerate(grids))
+            d_new = sum((g - vn[a]) ** 2 for a, g in enumerate(grids))
             take = d_new < d_old
             return {"vr": np.where(take[None], new_inner["vr"], old_inner["vr"])}
         return merge
 
     def example_state(rng, shape):
-        op = EdtOp(connectivity=8)
+        op = EdtOp(connectivity=_example_connectivity(shape))
         fg = rng.random(shape) < 0.9
         return op, op.make_state(jnp.asarray(fg), _rng_valid(rng, shape))
 
@@ -118,8 +127,10 @@ def _register_edt():
                                            max_iters, queue_capacity)),
         scheduler_merge=merge_factory,
         example_state=example_state,
-        # mutable payload = the (2, H, W) int32 vr pointer; one round does
-        # 8 squared-distance computes vs morph's 8 maxes.
+        supported_ndims=(2, 3),
+        neighborhoods=("conn4", "conn8", "conn6", "conn18", "conn26"),
+        # mutable payload = the (ndim, *spatial) int32 vr pointer; one round
+        # does n_offsets squared-distance computes vs morph's maxes.
         bytes_per_pixel=8.0, round_cost_weight=2.0,
         doc="squared euclidean distance transform (Danielsson/paper Alg. 3)"))
 

@@ -35,7 +35,7 @@ spec when the class was never ``register_op``'d.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 __all__ = [
     "OpSpec", "register_op", "get_op", "list_ops", "spec_for",
@@ -101,11 +101,23 @@ class OpSpec:
         buys idempotence / engine-equivalence / invalid-restore checks for
         free.
 
+    Geometry capabilities (DESIGN.md §2.7)
+    --------------------------------------
+    supported_ndims : spatial ranks the op's state builder and round
+        support (default: 2-D only).  Ops whose rounds are rank-generic
+        (morph, edt) declare ``(2, 3)``.
+    neighborhoods : canonical connectivity names accepted by
+        :meth:`make_op` — a subset of ``repro.core.geometry.NEIGHBORHOODS``
+        (2-D: ``conn4``/``conn8``; 3-D: ``conn6``/``conn18``/``conn26``).
+        A by-name ``solve(..., connectivity=...)`` request outside this set
+        raises ``ValueError`` naming the op, the requested name, and this
+        list.  Legacy ints 4/8 mean ``conn4``/``conn8``.
+
     Cost-model hints
     ----------------
     bytes_per_pixel : HBM bytes of *mutable* payload per pixel (morph: one
-        int32 ``J`` plane = 4; EDT: the (2, H, W) int32 ``vr`` pointer =
-        8).  Scales ``CostModel.transfer_cost``.
+        int32 ``J`` plane = 4; EDT: the (ndim, *spatial) int32 ``vr``
+        pointer = 4*ndim).  Scales ``CostModel.transfer_cost``.
     round_cost_weight : relative compute of one propagation round per
         pixel against morph's 8-neighbor max (EDT's distance arithmetic
         ~ 2x).  Scales ``CostModel.drain_cost``.
@@ -122,15 +134,31 @@ class OpSpec:
     pallas_queue_batch_solver: Optional[Callable] = None
     scheduler_merge: Callable = default_scheduler_merge
     example_state: Optional[Callable] = None
+    supported_ndims: Tuple[int, ...] = (2,)
+    neighborhoods: Tuple[str, ...] = ("conn4", "conn8")
     bytes_per_pixel: float = 4.0
     round_cost_weight: float = 1.0
     doc: str = ""
 
-    def make_op(self, connectivity: Optional[int] = None):
+    def make_op(self, connectivity: Optional[Union[int, str]] = None):
         """Build the op via the factory, forwarding the op-level
         ``connectivity`` knob only when given (each op's own default
         applies otherwise).  The single construction path behind both
-        by-name ``solve()`` and :func:`run_op`."""
+        by-name ``solve()`` and :func:`run_op` — and the single validation
+        point for the connectivity-by-name contract: an unknown name, or a
+        known one this op does not declare in ``neighborhoods``, raises
+        ``ValueError`` here, before any engine work happens."""
+        if connectivity is not None:
+            from repro.core.geometry import NEIGHBORHOODS, connectivity_name
+            canon = connectivity_name(connectivity)   # raises on unknown
+            if canon not in self.neighborhoods:
+                label = self.name or self.op_cls.__name__
+                raise ValueError(
+                    f"op {label!r} does not support connectivity "
+                    f"{connectivity!r} ({canon!r}, "
+                    f"{NEIGHBORHOODS[canon].ndim}-D); supported "
+                    f"neighborhoods: {list(self.neighborhoods)} "
+                    f"(supported ndims: {list(self.supported_ndims)})")
         return self.factory(**({} if connectivity is None
                                else {"connectivity": connectivity}))
 
@@ -233,7 +261,7 @@ def amend_op_class(op_cls: type, **fields) -> OpSpec:
     return spec
 
 
-def run_op(name: str, *inputs, connectivity: Optional[int] = None,
+def run_op(name: str, *inputs, connectivity: Optional[Union[int, str]] = None,
            **solve_kw):
     """Run a registered op end to end: build, solve, extract.
 

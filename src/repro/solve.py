@@ -49,7 +49,7 @@ import dataclasses
 import math
 import time
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -190,10 +190,20 @@ class InputStats:
     n_devices: int
     bytes_per_pixel: float = 4.0        # mutable HBM payload per pixel
     round_cost_weight: float = 1.0      # per-round compute vs morph's max
+    shape: Tuple[int, ...] = ()         # full spatial shape (() = 2-D compat)
+    n_offsets: int = 8                  # neighborhood size (offsets/pixel)
+
+    @property
+    def spatial(self) -> Tuple[int, ...]:
+        return self.shape if self.shape else (self.height, self.width)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.spatial)
 
     @property
     def area(self) -> int:
-        return self.height * self.width
+        return math.prod(self.spatial)
 
     @property
     def density(self) -> float:
@@ -204,19 +214,21 @@ class InputStats:
         """Expected propagation depth (rounds to the fixed point).
 
         Mean inter-source spacing: sparse seeds must sweep waves across
-        O(sqrt(area / n_sources)) pixels; a near-full frontier converges in
-        O(1) rounds.  This single number is what separates the dense and
-        tiled regimes (paper Table 1 / Fig. 12).
+        O((area / n_sources)^(1/ndim)) pixels; a near-full frontier
+        converges in O(1) rounds.  This single number is what separates the
+        dense and tiled regimes (paper Table 1 / Fig. 12).
         """
-        return max(1.0, math.sqrt(self.area / max(self.n_sources, 1)))
+        return max(1.0, (self.area / max(self.n_sources, 1))
+                   ** (1.0 / self.ndim))
 
     def n_tiles(self, tile: int) -> int:
-        return (-(-self.height // tile)) * (-(-self.width // tile))
+        return math.prod(-(-s // tile) for s in self.spatial)
 
 
 def collect_input_stats(op: PropagationOp, state, n_devices: int = 1,
                         tiles: Sequence[int] = DEFAULT_TILES) -> InputStats:
-    H, W = tree_shape(state)
+    spatial = tree_shape(state, op.ndim)
+    H, W = spatial[-2:]
     f0 = op.init_frontier(state)
     n_sources = int(jnp.sum(f0))
     active = {t: int(jnp.sum(initial_active_tiles(op, state, t)))
@@ -224,7 +236,8 @@ def collect_input_stats(op: PropagationOp, state, n_devices: int = 1,
     spec = spec_for(op)
     return InputStats(H, W, n_sources, active, n_devices,
                       bytes_per_pixel=spec.bytes_per_pixel if spec else 4.0,
-                      round_cost_weight=spec.round_cost_weight if spec else 1.0)
+                      round_cost_weight=spec.round_cost_weight if spec else 1.0,
+                      shape=spatial, n_offsets=len(op.offsets))
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +323,12 @@ class CostModel:
         self._recompile_rate: Dict[str, float] = {}
 
     # -- helpers -----------------------------------------------------------
+    @staticmethod
+    def _lead(stats: InputStats) -> int:
+        """Product of the leading (non-mesh-sharded) spatial extents — the
+        per-ring-cell depth multiplier of an N-D shard's halo traffic."""
+        return max(1, stats.area // max(1, stats.height * stats.width))
+
     def _drains(self, stats: InputStats, tile: int) -> float:
         """Expected tile drains: initially-active tiles, re-drained once per
         tile-layer the wavefront crosses."""
@@ -325,11 +344,11 @@ class CostModel:
         if e == "sweep":
             return (stats.depth_est + 2) * stats.area * self.sweep_penalty
         if e in ("tiled", "tiled-pallas", "scheduler", "hybrid"):
-            block = (cfg.tile + 2) ** 2
+            block = (cfg.tile + 2) ** stats.ndim
             return self._drains(stats, cfg.tile) * block
         if e == "shard_map":
             bp_rounds = self._bp_rounds(stats)
-            halo = 2 * (stats.height + stats.width)
+            halo = 2 * (stats.height + stats.width) * self._lead(stats)
             return (stats.depth_est * stats.area / stats.n_devices
                     + bp_rounds * halo)
         if e == "shard_map-tiled":
@@ -339,8 +358,8 @@ class CostModel:
             # never the whole shard per round (the flat engine's
             # depth*area/n term).
             bp_rounds = self._bp_rounds(stats)
-            halo = 2 * (stats.height + stats.width)
-            block = (cfg.tile + 2) ** 2
+            halo = 2 * (stats.height + stats.width) * self._lead(stats)
+            block = (cfg.tile + 2) ** stats.ndim
             drains = self._drains(stats, cfg.tile) / stats.n_devices
             return drains * block + bp_rounds * halo
         raise ValueError(f"unknown engine {e!r}")
@@ -351,17 +370,19 @@ class CostModel:
         if e in ("frontier", "sweep"):
             return 0.0  # dense engines are bandwidth-bound; folded above
         if e in ("tiled", "tiled-pallas"):
-            block = (cfg.tile + 2) ** 2
+            block = (cfg.tile + 2) ** stats.ndim
             inner = block * cfg.tile * self.vmem_discount
             if e == "tiled-pallas" and cfg.kernel_queue:
                 from repro.kernels.ops import default_kernel_queue_capacity
                 qcap = (cfg.kernel_queue_capacity
-                        or default_kernel_queue_capacity(cfg.tile + 2))
+                        or default_kernel_queue_capacity(
+                            (cfg.tile + 2,) * stats.ndim))
                 # One dense seeding round + ~tile push rounds of fixed
-                # dispatch overhead plus 9 contribution lanes per slot:
-                # queued only wins on big blocks with sparse wavefronts.
+                # dispatch overhead plus (n_offsets + 1) contribution lanes
+                # per slot: queued only wins on big blocks with sparse
+                # wavefronts.
                 inner = ((block + (self.kernel_queue_round_overhead
-                                   + 9 * qcap) * cfg.tile)
+                                   + (stats.n_offsets + 1) * qcap) * cfg.tile)
                          * self.vmem_discount)
             if e == "tiled-pallas" and self.interpret:
                 inner *= self.interpret_penalty
@@ -369,7 +390,7 @@ class CostModel:
             dispatch = self.tile_dispatch / max(1, cfg.drain_batch or 1)
             return drains * inner + drains * dispatch
         if e == "scheduler":
-            block = (cfg.tile + 2) ** 2
+            block = (cfg.tile + 2) ** stats.ndim
             drains = self._drains(stats, cfg.tile)
             return (drains * block * cfg.tile * self.vmem_discount
                     * self.host_penalty + drains * self.host_dispatch)
@@ -392,7 +413,7 @@ class CostModel:
             # Per-shard amortized tile dispatch (the E2 drain cost at 1/n
             # devices worth of drains each) + the same per-BP-round
             # collective latency as the flat shard_map.
-            block = (cfg.tile + 2) ** 2
+            block = (cfg.tile + 2) ** stats.ndim
             inner = block * cfg.tile * self.vmem_discount
             drains = self._drains(stats, cfg.tile) / stats.n_devices
             dispatch = self.tile_dispatch / max(1, cfg.drain_batch or 1)
@@ -532,7 +553,7 @@ def autotune_signature(op: PropagationOp, stats: InputStats,
     """
     bucket = (-99 if stats.n_sources == 0
               else int(math.floor(math.log10(max(stats.density, 1e-9)))))
-    return (type(op).__name__, op.connectivity, stats.height, stats.width,
+    return (type(op).__name__, op.neighborhood.name, stats.spatial,
             bucket, stats.n_devices) + tuple(restrictions)
 
 
@@ -599,26 +620,33 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
 # Engine adapters.
 # ---------------------------------------------------------------------------
 
-def _pad_to_multiple(op, state, mult_h: int, mult_w: int):
-    """Bottom/right-pad every leaf to a grid multiple with neutral values.
+def _pad_to_multiple(op, state, mults: Sequence[int]):
+    """High-side-pad the trailing ``len(mults)`` spatial axes of every leaf
+    to grid multiples with neutral values.
 
     Padded cells are invalid and hold ``op.pad_value`` fills, so they can
     never source a propagation; cropping afterwards restores the domain.
+    Returns ``(padded, orig_spatial)`` over the op's full spatial shape.
     """
-    H, W = tree_shape(state)
-    Hp, Wp = -(-H // mult_h) * mult_h, -(-W // mult_w) * mult_w
-    if (Hp, Wp) == (H, W):
-        return state, (H, W)
+    nd = op.ndim
+    spatial = tree_shape(state, nd)
+    mults = (1,) * (nd - len(mults)) + tuple(mults)
+    target = tuple(-(-s // m) * m for s, m in zip(spatial, mults))
+    if target == spatial:
+        return state, spatial
     pv = op.pad_value(state)
+    grow = [t - s for s, t in zip(spatial, target)]
     padded = jax.tree_util.tree_map(
-        lambda x, v: jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, Hp - H), (0, Wp - W)],
-                             constant_values=v),
+        lambda x, v: jnp.pad(
+            x, [(0, 0)] * (x.ndim - nd) + [(0, g) for g in grow],
+            constant_values=v),
         state, pv)
-    return padded, (H, W)
+    return padded, spatial
 
 
-def _crop(state, H: int, W: int):
-    return jax.tree_util.tree_map(lambda x: x[..., :H, :W], state)
+def _crop(state, spatial: Sequence[int]):
+    idx = (Ellipsis,) + tuple(slice(0, s) for s in spatial)
+    return jax.tree_util.tree_map(lambda x: x[idx], state)
 
 
 def _mesh_shape(n: int) -> Tuple[int, int]:
@@ -744,14 +772,16 @@ def _run_tiled_engine(op, state, cfg, max_rounds, interpret=True, **_):
     kq = bool(cfg.kernel_queue)
     kq_cap = None
     if cfg.engine == "tiled-pallas":
-        # Thread the engine's (T+2)² geodesic bound into the kernels: the
-        # kernel-default 1024 is *below* the bound for any tile >= 32, and a
-        # drain cut off there must re-queue, not masquerade as converged.
-        max_iters = (tile + 2) ** 2
+        # Thread the engine's prod(T_i+2) geodesic bound into the kernels:
+        # the kernel-default 1024 is *below* the bound for any 2-D tile
+        # >= 32, and a drain cut off there must re-queue, not masquerade as
+        # converged.
+        max_iters = (tile + 2) ** op.ndim
         if kq:
             from repro.kernels.ops import default_kernel_queue_capacity
             kq_cap = (cfg.kernel_queue_capacity
-                      or default_kernel_queue_capacity(tile + 2))
+                      or default_kernel_queue_capacity(
+                          (tile + 2,) * op.ndim))
         solver = _pallas_solver_for(op, interpret, max_iters=max_iters,
                                     engine=cfg.engine, kernel_queue=kq,
                                     kernel_queue_capacity=kq_cap)
@@ -779,13 +809,13 @@ def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
     nr, nc = _mesh_shape(len(devices))
     from jax.sharding import Mesh
     mesh = Mesh(np.asarray(devices).reshape(nr, nc), ("data", "model"))
-    padded, (H, W) = _pad_to_multiple(op, state, nr, nc)
+    padded, orig = _pad_to_multiple(op, state, (nr, nc))
     if cfg.engine == "shard_map-tiled":
         tile, cap, drain_batch = _tiled_cfg_defaults(cfg)
         out, st = run_sharded(op, padded, mesh, tile=tile,
                               queue_capacity=cap, drain_batch=drain_batch,
                               max_bp_rounds=max_rounds)
-        return _crop(out, H, W), SolveStats(
+        return _crop(out, orig), SolveStats(
             cfg.engine, rounds=int(st.bp_rounds),
             tiles_processed=int(st.tiles_processed),
             overflow_events=int(st.overflow_events),
@@ -793,7 +823,7 @@ def _run_shard_map_engine(op, state, cfg, max_rounds, devices=None, **_):
             tile=tile, queue_capacity=cap, drain_batch=drain_batch,
             n_devices=len(devices))
     out, st = run_sharded(op, padded, mesh, max_bp_rounds=max_rounds)
-    return _crop(out, H, W), SolveStats("shard_map", rounds=int(st.bp_rounds),
+    return _crop(out, orig), SolveStats("shard_map", rounds=int(st.bp_rounds),
                                         n_devices=len(devices))
 
 
@@ -827,7 +857,8 @@ def _batched_drain_for(op, tile: int, interpret: bool, pallas: bool,
     """
     if pallas:
         return _pallas_solver_for(op, interpret, batched=True,
-                                  max_iters=(tile + 2) ** 2, engine="hybrid")
+                                  max_iters=(tile + 2) ** op.ndim,
+                                  engine="hybrid")
     if drain_batch <= 1:
         per = _scheduler_drain_for(op, tile)
 
@@ -880,7 +911,7 @@ def _scheduler_merge_for(op, engine: str):
 
 def _scheduler_state_for(op, state, tile: int, engine: str):
     """Shared host-engine setup: padded numpy state + scheduler plumbing."""
-    padded, (H, W) = _pad_to_multiple(op, state, tile, tile)
+    padded, orig = _pad_to_multiple(op, state, (tile,) * op.ndim)
     # np.array (not asarray): JAX buffers give read-only numpy views, and the
     # scheduler writes tile interiors back into this state in place.
     np_state = {k: np.array(v) for k, v in padded.items()}
@@ -889,13 +920,13 @@ def _scheduler_state_for(op, state, tile: int, engine: str):
     mutable = tuple(k for k in np_state if k not in op.static_leaves)
     pad_values = {k: np.asarray(v).item()
                   for k, v in op.pad_value(padded).items()}
-    return np_state, active, merge_block_fn, mutable, pad_values, (H, W)
+    return np_state, active, merge_block_fn, mutable, pad_values, orig
 
 
 def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
     tile = cfg.tile or DEFAULT_TILES[1]
     (np_state, active, merge_block_fn, mutable, pad_values,
-     (H, W)) = _scheduler_state_for(op, state, tile, "scheduler")
+     orig) = _scheduler_state_for(op, state, tile, "scheduler")
     sched = TileScheduler(np_state, tile, _host_tile_fn_for(op, tile), active,
                           n_workers=n_workers, mutable=mutable,
                           merge_block_fn=merge_block_fn,
@@ -908,7 +939,7 @@ def _run_scheduler_engine(op, state, cfg, max_rounds, n_workers=4, **_):
             "scheduler engine gave up with tiles still queued "
             f"(requeues_from_failures={st.requeues_from_failures}); "
             "the state did not reach its fixed point")
-    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
+    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, orig)
     # Engine output contract: invalid cells hold their input values.
     out = restore_invalid(op, state, out)
     return out, SolveStats("scheduler", rounds=1,
@@ -928,7 +959,7 @@ def _bp_residual_for(op):
     def build():
         @jax.jit
         def _residual(state):
-            f0 = jnp.ones(tree_shape(state), dtype=bool)
+            f0 = jnp.ones(tree_shape(state, op.ndim), dtype=bool)
             if "valid" in state:
                 f0 = f0 & state["valid"]
             return op.round(state, f0)
@@ -966,9 +997,9 @@ def _run_hybrid_engine(op, state, cfg, max_rounds, interpret=True,
         raise ValueError("hybrid engine needs n_workers >= 1 or "
                          "n_device_workers >= 1")
     (np_state, active, merge_block_fn, mutable, pad_values,
-     (H, W)) = _scheduler_state_for(op, state, tile, "hybrid")
-    nty, ntx = (np_state[mutable[0]].shape[-2] // tile,
-                np_state[mutable[0]].shape[-1] // tile)
+     orig) = _scheduler_state_for(op, state, tile, "hybrid")
+    grid = tuple(s // tile
+                 for s in np_state[mutable[0]].shape[-op.ndim:])
 
     tile_fn = _host_tile_fn_for(op, tile) if n_workers > 0 else None
     batch_fn = _batched_drain_for(op, tile, interpret, hybrid_pallas,
@@ -1023,15 +1054,14 @@ def _run_hybrid_engine(op, state, cfg, max_rounds, interpret=True,
             break
         for k in mutable:
             np_state[k] = np.array(new_state[k])
-        active = np.asarray(active_tiles_from_frontier(op, f_in, tile,
-                                                       nty, ntx))
+        active = np.asarray(active_tiles_from_frontier(op, f_in, tile, grid))
     if incomplete:
         warnings.warn(
             f"hybrid engine stopped after {bp_rounds} BP rounds with a "
             "non-empty residual frontier; the state is NOT at its fixed "
             "point (SolveStats.incomplete=True)", RuntimeWarning,
             stacklevel=2)
-    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, H, W)
+    out = _crop({k: jnp.asarray(v) for k, v in np_state.items()}, orig)
     # Engine output contract: invalid cells hold their input values.
     out = restore_invalid(op, state, out)
     return out, SolveStats("hybrid", rounds=bp_rounds,
@@ -1067,7 +1097,7 @@ def _run_engine(op, state, cfg: EngineConfig, **kw):
 # ---------------------------------------------------------------------------
 
 def solve(op, state, *, engine: str = "auto",
-          connectivity: Optional[int] = None,
+          connectivity: Optional[Union[int, str]] = None,
           devices: Optional[Sequence] = None,
           tile: Optional[int] = None,
           queue_capacity: Optional[int] = None,
@@ -1098,8 +1128,13 @@ def solve(op, state, *, engine: str = "auto",
         still the converged *state*; apply ``get_op(name).extract`` (or use
         the per-op wrappers) for the user-facing array.
     connectivity : op-level knob for by-name calls, forwarded to the spec
-        factory (each op's default applies when None).  Invalid with an op
-        instance — construct the instance with the connectivity you want.
+        factory (each op's default applies when None).  Accepts a
+        neighborhood *name* (``"conn4"``/``"conn8"`` in 2-D;
+        ``"conn6"``/``"conn18"``/``"conn26"`` in 3-D — DESIGN.md §2.7) or
+        the legacy 2-D ints 4/8; an unknown name or one the op does not
+        support raises ``ValueError`` naming the op and its supported
+        neighborhoods.  Invalid with an op instance — construct the
+        instance with the connectivity you want.
     engine : one of :data:`ENGINES`.  ``"auto"`` ranks candidates with
         ``cost_model`` (default :class:`CostModel`) and runs the cheapest.
         ``"shard_map-tiled"`` composes the mesh TP/BP pipeline with a

@@ -152,6 +152,30 @@ def test_runstate_docs_pinned():
         "EXPERIMENTS.md lacks the composed-vs-flat table"
 
 
+def test_geometry_docs_pinned():
+    """The N-D geometry layer must stay documented everywhere it is
+    user-visible: DESIGN.md §2.7 exists and describes the Neighborhood/
+    Geometry contract, the conn26 halo/corner semantics and the
+    generalized truncation bound; docs/OPS.md carries the op × ndim
+    matrix; docs/ENGINES.md documents the connectivity knob."""
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    m = re.search(r"^###\s+§2\.7\b.*$", design, re.M)
+    assert m and "geometry" in m.group(0).lower(), \
+        "DESIGN.md lacks the §2.7 N-D geometry section"
+    sec = design[m.start():]
+    for term in ("Neighborhood", "conn26", "geodesic_bound",
+                 "supported_ndims", "order-dependent"):
+        assert term in sec, f"DESIGN.md §2.7 no longer mentions {term!r}"
+    ops = _read(os.path.join(ROOT, "docs", "OPS.md"))
+    assert re.search(r"^##\s+Op\b.*ndim", ops, re.M), \
+        "docs/OPS.md lacks the op × ndim support matrix"
+    for term in ("conn6", "conn26", "supported_ndims"):
+        assert term in ops, f"docs/OPS.md no longer mentions {term!r}"
+    engines = _read(os.path.join(ROOT, "docs", "ENGINES.md"))
+    assert "connectivity" in engines and "conn26" in engines, \
+        "docs/ENGINES.md lacks the connectivity knob rows"
+
+
 def test_every_op_has_a_catalog_section():
     """docs/OPS.md must stay complete: one `## \\`op\\`` section per
     registered op — a new register_op() without a catalog entry fails

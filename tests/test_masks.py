@@ -141,7 +141,7 @@ def test_scheduler_slice_block_uses_op_pad_values():
     sched = TileScheduler(np_state, 8, lambda b: (b, None),
                           np.ones((1, 1), bool), n_workers=1,
                           mutable=("vr",), pad_values=pad_values)
-    blk = sched._slice_block(0, 0)
+    blk = sched._slice_block((0, 0))
     assert blk["row"][0, 0] == SENTINEL      # not iinfo(int32).min
     assert blk["col"][0, 0] == SENTINEL
     assert (blk["vr"][:, 0, 0] == SENTINEL).all()
@@ -150,4 +150,4 @@ def test_scheduler_slice_block_uses_op_pad_values():
     legacy = TileScheduler({"J": np.zeros((8, 8), np.int32)}, 8,
                            lambda b: (b, None), np.ones((1, 1), bool),
                            n_workers=1)
-    assert legacy._slice_block(0, 0)["J"][0, 0] == np.iinfo(np.int32).min
+    assert legacy._slice_block((0, 0))["J"][0, 0] == np.iinfo(np.int32).min

@@ -28,21 +28,39 @@ from repro.ops import OpSpec, get_op, list_ops, register_op, spec_for
 from repro.solve import solve
 
 SHAPE = (24, 28)
+# Per-rank conformance shapes: 2-D keeps the historical SHAPE (and RNG
+# stream) bit-identical; 3-D exercises the N-D geometry path (DESIGN.md
+# §2.7) on a volume small enough for the interpret-mode Pallas kernels.
+SHAPES = {2: SHAPE, 3: (10, 12, 14)}
 OPS = list_ops()
 
 
-@pytest.fixture(scope="module")
-def example():
-    """name -> (spec, op, random masked state) for every registered op."""
+@pytest.fixture(scope="module", params=sorted(SHAPES),
+                ids=lambda nd: f"{nd}d")
+def example(request):
+    """name -> (spec, op, random masked state) for every registered op, at
+    the parametrized spatial rank; ops that do not declare the rank in
+    ``OpSpec.supported_ndims`` are absent (tests skip via :func:`_case`)."""
+    nd = request.param
     out = {}
     for i, name in enumerate(OPS):
         spec = get_op(name)
         assert spec.example_state is not None, (
             f"op {name!r} has no OpSpec.example_state — the conformance "
             "suite cannot check it for free")
-        op, state = spec.example_state(np.random.default_rng(100 + i), SHAPE)
+        if nd not in spec.supported_ndims:
+            continue
+        op, state = spec.example_state(np.random.default_rng(100 + i),
+                                       SHAPES[nd])
         out[name] = (spec, op, state)
     return out
+
+
+def _case(example, name):
+    if name not in example:
+        pytest.skip(f"op {name!r} does not support this spatial rank "
+                    "(OpSpec.supported_ndims)")
+    return example[name]
 
 
 def _assert_tree_equal(a, b, msg):
@@ -53,7 +71,7 @@ def _assert_tree_equal(a, b, msg):
 
 @pytest.mark.parametrize("name", OPS)
 def test_second_pass_is_noop(example, name):
-    _, op, state = example[name]
+    _, op, state = _case(example, name)
     out1, _ = solve(op, state, engine="frontier")
     out2, _ = solve(op, out1, engine="frontier")
     _assert_tree_equal(out1, out2, f"{name}: solve() from the fixed point "
@@ -66,7 +84,7 @@ def test_engines_reach_identical_fixed_points(example, name):
     bit-comparable artifact (EDT's raw Voronoi pointers may resolve
     distance *ties* differently per engine — paper §3.4 — while the
     distance map is identical)."""
-    spec, op, state = example[name]
+    spec, op, state = _case(example, name)
     ref, _ = solve(op, state, engine="frontier")
     ref_result = np.asarray(spec.extract(op, ref))
     for engine in ("sweep", "tiled"):
@@ -78,7 +96,7 @@ def test_engines_reach_identical_fixed_points(example, name):
 
 @pytest.mark.parametrize("name", OPS)
 def test_restore_invalid_holds(example, name):
-    _, op, state = example[name]
+    _, op, state = _case(example, name)
     inv = ~np.asarray(state["valid"])
     assert inv.any(), "example_state must include invalid pixels"
     out, _ = solve(op, state, engine="frontier")
@@ -117,7 +135,7 @@ def test_queued_kernel_path_reaches_identical_fixed_points(example, name,
     and drain_batch=2 routes it through the batched (grid-over-batch)
     queued kernels."""
     spec = _queued_or_skip(name)
-    _, op, state = example[name]
+    _, op, state = _case(example, name)
     ref, _ = solve(op, state, engine="frontier")
     ref_result = np.asarray(spec.extract(op, ref))
     out, st = solve(op, state, engine="tiled-pallas", tile=8,
@@ -138,7 +156,7 @@ def test_queued_restore_invalid_holds(example, name):
     """The engine output contract holds on the queued path: invalid cells
     of every mutable leaf carry their input values bit-for-bit."""
     _queued_or_skip(name)
-    _, op, state = example[name]
+    _, op, state = _case(example, name)
     inv = ~np.asarray(state["valid"])
     assert inv.any(), "example_state must include invalid pixels"
     out, _ = solve(op, state, engine="tiled-pallas", tile=8,
@@ -162,8 +180,12 @@ def test_builtin_catalog_is_registered():
 
 
 def test_solve_by_name_equals_instance_call(example):
+    # connectivity passed explicitly: the 3-D example op is conn26, while
+    # the by-name default would build the op's 2-D default (under which a
+    # 3-D state legitimately means a batch of 2-D planes).
     spec, op, state = example["morph"]
-    by_name, _ = solve("morph", state, engine="frontier")
+    by_name, _ = solve("morph", state, engine="frontier",
+                       connectivity=op.connectivity)
     by_inst, _ = solve(op, state, engine="frontier")
     _assert_tree_equal(by_name, by_inst, "by-name vs instance solve")
 
@@ -189,6 +211,50 @@ def test_connectivity_kwarg_is_by_name_only(example):
     _, op, state = example["morph"]
     with pytest.raises(ValueError, match="by-name"):
         solve(op, state, engine="frontier", connectivity=4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the connectivity knob is validated per op at make_op() time —
+# an unknown name, a bad legacy int, or a known neighborhood the op does
+# not declare all raise a ValueError naming the op, the requested value,
+# and the supported alternatives (never a downstream shape/TypeError).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", OPS)
+def test_unknown_connectivity_raises_with_known_neighborhoods(name):
+    spec = get_op(name)
+    with pytest.raises(ValueError, match="known neighborhoods"):
+        spec.make_op("conn7")
+    with pytest.raises(ValueError, match="conn4"):
+        spec.make_op(5)          # bad legacy int names the valid spellings
+    with pytest.raises(ValueError):
+        spec.make_op(True)       # bool is an int; rejected explicitly
+
+
+@pytest.mark.parametrize("name", OPS)
+def test_unsupported_connectivity_names_op_and_alternatives(name):
+    spec = get_op(name)
+    unsupported = [n for n in ("conn4", "conn8", "conn6", "conn18", "conn26")
+                   if n not in spec.neighborhoods]
+    if not unsupported:
+        pytest.skip(f"op {name!r} declares every built-in neighborhood")
+    with pytest.raises(ValueError) as ei:
+        spec.make_op(unsupported[0])
+    msg = str(ei.value)
+    assert name in msg and unsupported[0] in msg
+    for supported in spec.neighborhoods:
+        assert supported in msg, (
+            f"{name}: the error must list the supported neighborhoods")
+
+
+def test_unsupported_connectivity_raises_through_solve_by_name():
+    """The validation fires on the by-name dispatch path too, before any
+    state building or engine work."""
+    fg = jnp.zeros((6, 7), bool)
+    with pytest.raises(ValueError, match="fill_holes"):
+        solve("fill_holes", fg, connectivity="conn26")
+    with pytest.raises(ValueError, match="known neighborhoods"):
+        solve("morph", (fg, fg), connectivity="conn9")
 
 
 class _UnregisteredOp(PropagationOp):
