@@ -33,7 +33,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import (bench_argparser, edt_state, morph_state,
+from benchmarks.common import (maybe_calibrate as common_calibrate,
+                               bench_argparser, edt_state, morph_state,
                                record, write_json)
 from repro.solve import solve
 
@@ -125,4 +126,5 @@ if __name__ == "__main__":
         DEFAULT_JSON, size=1024,
         smoke_help="CI profile: one 256² config, single timed iteration")
     a = ap.parse_args()
+    common_calibrate(a)
     main(a.size, json_path=a.json, smoke=a.smoke)

@@ -32,7 +32,8 @@ import textwrap
 
 import numpy as np
 
-from benchmarks.common import bench_argparser, record, write_json
+from benchmarks.common import (maybe_calibrate as common_calibrate,
+                               bench_argparser, record, write_json)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = "BENCH_multidevice.json"
@@ -248,4 +249,5 @@ if __name__ == "__main__":
         DEFAULT_JSON,
         smoke_help="CI profile: small grid, 1+8 device meshes, 1 iter")
     a = ap.parse_args()
+    common_calibrate(a)
     main(a.size, json_path=a.json, smoke=a.smoke)

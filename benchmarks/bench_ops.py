@@ -16,7 +16,8 @@ cross-op/cross-engine *shape* is the reproducible claim.
 
 from __future__ import annotations
 
-from benchmarks.common import (bench_argparser, edt_state, edt_state3d,
+from benchmarks.common import (maybe_calibrate as common_calibrate,
+                               bench_argparser, edt_state, edt_state3d,
                                fill_state, label_state, morph_state,
                                morph_state3d, record, timeit, write_json)
 from repro.solve import solve
@@ -106,4 +107,5 @@ if __name__ == "__main__":
         DEFAULT_JSON, size=1024,
         smoke_help="CI profile: 256², frontier+tiled only, 1 timed iteration")
     a = ap.parse_args()
+    common_calibrate(a)
     main(a.size, json_path=a.json, smoke=a.smoke)

@@ -41,7 +41,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_argparser, morph_state, record, timeit, write_json
+from benchmarks.common import (maybe_calibrate as common_calibrate,
+                               bench_argparser, morph_state, record,
+                               timeit, write_json)
 from repro.core.tiles import initial_active_tiles
 from repro.kernels.morph_tile import morph_tile_solve, morph_tile_solve_queued
 from repro.morph.ops import MorphReconstructOp
@@ -222,4 +224,5 @@ if __name__ == "__main__":
                     help="grid side for the drain comparison (default: "
                          "max(size, 1024))")
     a = ap.parse_args()
+    common_calibrate(a)
     main(a.size, json_path=a.json, drain_size=a.drain_size, smoke=a.smoke)

@@ -1,0 +1,66 @@
+"""Calibration runner: measure this machine's cost-model profile
+(DESIGN.md §2.8) and persist/export it.
+
+    PYTHONPATH=src python benchmarks/calibrate.py                 # full run
+    PYTHONPATH=src python benchmarks/calibrate.py --smoke         # CI probe
+    PYTHONPATH=src python benchmarks/calibrate.py --json CAL.json # artifact
+
+The measured profile installs into the autotune disk cache
+(``~/.cache/repro-iwpp/autotune.json``, keyed by device kind + code
+version), from where every later ``solve(engine="auto")`` in any process
+picks it up; ``--no-install`` measures and exports without persisting.
+``--json`` additionally writes the profile as a standalone artifact —
+``benchmarks/CALIBRATION.json`` is one such committed run, replayed by
+``tests/test_calibration.py`` as the selection-regression fixture.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+DEFAULT_JSON = "CALIBRATION.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: tiny grids, morph-only host/hybrid/"
+                         "Pallas families; structurally complete, "
+                         "magnitudes not to be trusted")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"also write the profile as a standalone JSON "
+                         f"artifact (default path {DEFAULT_JSON})")
+    ap.add_argument("--no-install", action="store_true",
+                    help="measure and export only; do not persist to the "
+                         "autotune disk cache")
+    ap.add_argument("--ops", nargs="*", default=None,
+                    help="restrict to these registered ops (default: every "
+                         "op with calibration workloads)")
+    ap.add_argument("--size", type=int, default=None,
+                    help="override the calibration grid size")
+    a = ap.parse_args(argv)
+
+    from repro.core.calibrate import run_calibration
+
+    prof = run_calibration(ops=a.ops, smoke=a.smoke,
+                           save=not a.no_install, cal_size=a.size,
+                           verbose=True)
+    doc = prof.to_dict()
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote calibration profile to {a.json}", flush=True)
+    n_ops = len(doc.get("drain", {}))
+    fams = sorted({f for fams in prof.drain.values() for f in fams})
+    print(f"# profile: {n_ops} ops, drain families {fams}, "
+          f"hybrid_rel_speed={prof.hybrid_rel_speed}, "
+          f"installed={not a.no_install}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

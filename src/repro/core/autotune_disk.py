@@ -1,4 +1,5 @@
-"""Disk persistence for autotune winners (DESIGN.md §2.6).
+"""Disk persistence for autotune winners and calibration profiles
+(DESIGN.md §2.6/§2.8).
 
 The in-process ``_AUTOTUNE_CACHE`` dies with the interpreter, so every new
 process re-pays the micro-benchmark sweep (seconds per (op, shape) pair) even
@@ -13,24 +14,34 @@ to relocate — keyed by everything that can change the answer:
     the propagation code orphans every stale winner at once instead of
     trusting callers to remember a manual bump.
 
+The same file carries a second section, ``profiles``: the measured
+calibration profiles behind :class:`repro.solve.MeasuredCostModel`
+(DESIGN.md §2.8), keyed by (device kind, code version) only — a profile is
+per-machine, not per-input.
+
 Entries are plain dicts (the ``EngineConfig`` fields + measured seconds);
 writes go through a same-directory temp file + ``os.replace`` so a crashed
-writer can never leave a torn JSON behind.  Concurrent writers last-win per
-whole file, which is acceptable for a cache: the loser's entries get re-
-measured next run.  All I/O failures degrade to "no disk cache" — a
-read-only HOME must never break a solve.
+writer can never leave a torn JSON behind, and every read-modify-write holds
+an ``fcntl`` lock on a sidecar ``.lock`` file so two concurrent writers
+serialize instead of silently dropping each other's entries.  A corrupt or
+truncated file degrades to an empty cache with a warning; a schema-version
+mismatch silently invalidates everything (stale winners AND stale profiles
+must not outlive a format change).  All I/O failures degrade to "no disk
+cache" — a read-only HOME must never break a solve.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+import warnings
+from typing import Any, Dict, Iterator, Optional, Tuple
 
-_SCHEMA = 1
+_SCHEMA = 2
 
 # Hash these sources into the key: an edit to any engine/kernel layer can
 # flip which candidate wins, so it must orphan the persisted winners.
@@ -39,6 +50,7 @@ _VERSIONED_SOURCES = (
     os.path.join("core", "tiles.py"),
     os.path.join("core", "distributed.py"),
     os.path.join("core", "scheduler.py"),
+    os.path.join("core", "calibrate.py"),
     os.path.join("kernels", "queue.py"),
     os.path.join("kernels", "morph_tile.py"),
     os.path.join("kernels", "edt_tile.py"),
@@ -95,19 +107,68 @@ def entry_key(op_name: str, signature: tuple) -> str:
     return "|".join((_device_kind(), op_name, repr(signature), code_version()))
 
 
-def _load_raw() -> Dict[str, Any]:
+def profile_key() -> str:
+    """Calibration profiles key on (device kind, code version) only."""
+    return "|".join((_device_kind(), code_version()))
+
+
+@contextlib.contextmanager
+def _locked() -> Iterator[None]:
+    """Serialize read-modify-write cycles across processes/threads.
+
+    Uses ``fcntl.flock`` on a sidecar ``.lock`` file (each entrant opens its
+    own descriptor, so the lock also serializes threads in one process).
+    Degrades to unlocked best-effort where flock or the directory is
+    unavailable — same policy as every other I/O failure here.
+    """
+    try:
+        import fcntl
+    except ImportError:                       # non-POSIX: best effort
+        yield
+        return
+    try:
+        os.makedirs(cache_dir(), exist_ok=True)
+        f = open(cache_path() + ".lock", "a+")
+    except OSError:
+        yield
+        return
+    try:
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        yield
+    finally:
+        f.close()                             # closing drops the flock
+
+
+def _load_doc() -> Dict[str, Any]:
+    """The whole persisted document: ``{"entries": ..., "profiles": ...}``.
+
+    Corrupt/truncated JSON warns and degrades to empty; a schema mismatch
+    (older or newer writer) silently invalidates — stale profiles must not
+    survive a format change.
+    """
     try:
         with open(cache_path()) as f:
             data = json.load(f)
-    except (OSError, ValueError):
-        return {}
+    except OSError:
+        return {"entries": {}, "profiles": {}}
+    except ValueError:
+        warnings.warn(
+            f"corrupt autotune cache at {cache_path()}; starting empty",
+            RuntimeWarning, stacklevel=3)
+        return {"entries": {}, "profiles": {}}
     if not isinstance(data, dict) or data.get("schema") != _SCHEMA:
-        return {}
+        return {"entries": {}, "profiles": {}}
     entries = data.get("entries")
-    return entries if isinstance(entries, dict) else {}
+    profiles = data.get("profiles")
+    return {"entries": entries if isinstance(entries, dict) else {},
+            "profiles": profiles if isinstance(profiles, dict) else {}}
 
 
-def _store_raw(entries: Dict[str, Any]) -> None:
+def _load_raw() -> Dict[str, Any]:
+    return _load_doc()["entries"]
+
+
+def _store_doc(doc: Dict[str, Any]) -> None:
     path = cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -115,7 +176,9 @@ def _store_raw(entries: Dict[str, Any]) -> None:
                                    prefix=".autotune-", suffix=".json")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump({"schema": _SCHEMA, "entries": entries}, f, indent=2)
+                json.dump({"schema": _SCHEMA,
+                           "entries": doc.get("entries", {}),
+                           "profiles": doc.get("profiles", {})}, f, indent=2)
             os.replace(tmp, path)            # atomic on POSIX
         except BaseException:
             os.unlink(tmp)
@@ -144,14 +207,29 @@ def load(op_name: str, signature: tuple,
 
 
 def store(op_name: str, signature: tuple, config, seconds: float) -> None:
-    """Persist one measured winner (read-modify-write of the whole file)."""
-    entries = _load_raw()
-    entries[entry_key(op_name, signature)] = {
-        "op": op_name,
-        "config": dataclasses.asdict(config),
-        "seconds": seconds,
-    }
-    _store_raw(entries)
+    """Persist one measured winner (locked read-modify-write)."""
+    with _locked():
+        doc = _load_doc()
+        doc["entries"][entry_key(op_name, signature)] = {
+            "op": op_name,
+            "config": dataclasses.asdict(config),
+            "seconds": seconds,
+        }
+        _store_doc(doc)
+
+
+def load_profile() -> Optional[Dict[str, Any]]:
+    """The persisted calibration profile for this (device, code version)."""
+    prof = _load_doc()["profiles"].get(profile_key())
+    return prof if isinstance(prof, dict) else None
+
+
+def store_profile(profile: Dict[str, Any]) -> None:
+    """Persist one calibration profile (locked read-modify-write)."""
+    with _locked():
+        doc = _load_doc()
+        doc["profiles"][profile_key()] = profile
+        _store_doc(doc)
 
 
 def invalidate_op(op_names) -> int:
@@ -162,19 +240,25 @@ def invalidate_op(op_names) -> int:
     resurface through ANY stale winner.  Returns the number dropped.
     """
     names = set(op_names)
-    entries = _load_raw()
-    doomed = [k for k, v in entries.items()
-              if isinstance(v, dict) and v.get("op") in names]
-    if not doomed:
-        return 0
-    for k in doomed:
-        del entries[k]
-    _store_raw(entries)
+    with _locked():
+        doc = _load_doc()
+        entries = doc["entries"]
+        doomed = [k for k, v in entries.items()
+                  if isinstance(v, dict) and v.get("op") in names]
+        if not doomed:
+            return 0
+        for k in doomed:
+            del entries[k]
+        _store_doc(doc)
     return len(doomed)
 
 
 def clear() -> None:
     try:
         os.unlink(cache_path())
+    except OSError:
+        pass
+    try:
+        os.unlink(cache_path() + ".lock")
     except OSError:
         pass

@@ -61,16 +61,19 @@ class ChunkPolicy:
     A device consumer amortizes its dispatch overhead over a whole chunk,
     so it should claim ``rel_speed`` tiles for every single tile a host
     thread claims, where ``rel_speed`` is the device:host throughput ratio.
-    The ratio is *seeded* analytically (the CostModel's per-drain unit
-    costs) and *refined online*: every worker reports its measured
+    The ratio is *seeded* from the cost model — analytically on a cold
+    start, from the measured ``hybrid_rel_speed`` once a calibration
+    profile is installed (DESIGN.md §2.8; ``seed_kind`` records which) —
+    and *refined online*: every worker reports its measured
     seconds-per-tile and the policy keeps one EWMA per worker class —
     demand-driven FCFS then converges the split to the actual relative
     speeds, the paper's load-balance argument made quantitative.
     """
 
     def __init__(self, rel_speed: float = 4.0, max_chunk: int = 16,
-                 alpha: float = 0.25):
+                 alpha: float = 0.25, seed_kind: str = "analytic"):
         self.seed_rel_speed = max(1.0, float(rel_speed))
+        self.seed_kind = seed_kind
         self.max_chunk = max(1, int(max_chunk))
         self.alpha = alpha
         self._host_spt: Optional[float] = None    # EWMA host seconds/tile

@@ -43,6 +43,33 @@ def _example_connectivity(shape):
     return 8 if len(shape) == 2 else "conn26"
 
 
+def _calibration_states_morph(size: int):
+    from repro.ops.workloads import morph_state
+    # Two regimes on purpose (DESIGN.md §2.8): the sparse seeded wavefront
+    # (long rounds, deep per-tile drains) and the fh_init near-converged
+    # marker (long rounds, shallow drains) — the pair spans the density
+    # axis the measured model interpolates over.
+    return [("sparse",) + morph_state(size, coverage=1.0, seed=0,
+                                      marker_kind="seeded"),
+            ("dense",) + morph_state(size, coverage=1.0, seed=0,
+                                     n_sweeps=1)]
+
+
+def _calibration_states_edt(size: int):
+    from repro.ops.workloads import edt_state
+    return [("sparse",) + edt_state(size, coverage=0.9, seed=0)]
+
+
+def _calibration_states_fill(size: int):
+    from repro.ops.workloads import fill_state
+    return [("sparse",) + fill_state(size, coverage=0.5, seed=0)]
+
+
+def _calibration_states_label(size: int):
+    from repro.ops.workloads import label_state
+    return [("dense",) + label_state(size, coverage=0.55, seed=0)]
+
+
 def _register_morph():
     import jax.numpy as jnp
     from repro.kernels.ops import (tile_solver_morph,
@@ -79,6 +106,7 @@ def _register_morph():
         supported_ndims=(2, 3),
         neighborhoods=("conn4", "conn8", "conn6", "conn18", "conn26"),
         bytes_per_pixel=4.0, round_cost_weight=1.0,
+        calibration_states=_calibration_states_morph,
         doc="grayscale morphological reconstruction-by-dilation (paper §2.1)"))
 
 
@@ -132,6 +160,7 @@ def _register_edt():
         # mutable payload = the (ndim, *spatial) int32 vr pointer; one round
         # does n_offsets squared-distance computes vs morph's maxes.
         bytes_per_pixel=8.0, round_cost_weight=2.0,
+        calibration_states=_calibration_states_edt,
         doc="squared euclidean distance transform (Danielsson/paper Alg. 3)"))
 
 
@@ -165,6 +194,7 @@ def _register_fill_holes():
                                                       queue_capacity)),
         example_state=example_state,
         bytes_per_pixel=4.0, round_cost_weight=1.0,
+        calibration_states=_calibration_states_fill,
         doc="binary fill-holes = border-seeded reconstruction of the "
             "complement (paper §2's named further IWPP instance)"))
 
@@ -200,6 +230,7 @@ def _register_label():
         # default elementwise-max merge: lab is a single monotone-max plane
         example_state=example_state,
         bytes_per_pixel=4.0, round_cost_weight=1.0,
+        calibration_states=_calibration_states_label,
         doc="connected-component labeling as monotone max-label flood fill"))
 
 

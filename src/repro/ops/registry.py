@@ -121,6 +121,12 @@ class OpSpec:
     round_cost_weight : relative compute of one propagation round per
         pixel against morph's 8-neighbor max (EDT's distance arithmetic
         ~ 2x).  Scales ``CostModel.drain_cost``.
+    calibration_states : ``f(size) -> [(label, op, state), ...]`` —
+        representative workloads (typically one sparse-wavefront and one
+        dense/near-converged regime) that :func:`repro.core.calibrate.
+        run_calibration` measures to build this op's entries in the
+        measured cost profile (DESIGN.md §2.8).  Ops without it are priced
+        by the morph reference rates scaled by the two hint fields above.
     """
 
     op_cls: type
@@ -138,6 +144,7 @@ class OpSpec:
     neighborhoods: Tuple[str, ...] = ("conn4", "conn8")
     bytes_per_pixel: float = 4.0
     round_cost_weight: float = 1.0
+    calibration_states: Optional[Callable] = None
     doc: str = ""
 
     def make_op(self, connectivity: Optional[Union[int, str]] = None):

@@ -1,0 +1,114 @@
+"""Canonical workload builders shared by benchmarks, calibration and the
+selection-regression tests.
+
+These used to live in ``benchmarks/common.py``; they moved into the package
+so that (a) ``core/calibrate.py`` can measure per-op profiles on the same
+inputs the benchmarks time, and (b) ``tests/test_calibration.py`` can replay
+committed ``BENCH_*.json`` records by rebuilding the exact workload each
+record named.  ``benchmarks/common.py`` re-exports them, so bench scripts
+are unchanged.
+
+Every builder returns ``(op, state)`` for :func:`repro.solve.solve`.
+Determinism matters more than realism here: the same ``(size, seed)`` must
+rebuild the same input on every machine, or the replay harness would test
+a different problem than the committed record measured.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def morph_state(size: int, coverage: float, seed: int = 0, n_sweeps: int = 0,
+                marker_kind: str = "seeded"):
+    """marker_kind: "seeded" (paper Fig. 1 markers-in-objects; sparse ring
+    wavefront) or "dense" (mask - h dome filling; dense wavefront)."""
+    import jax.numpy as jnp
+    from repro.data.images import tissue_image
+    from repro.morph.ops import MorphReconstructOp
+    marker, mask = tissue_image(size, size, coverage, seed)
+    if marker_kind == "seeded":
+        from repro.data.images import seeded_marker
+        marker = seeded_marker(mask, n_seeds=max(8, size // 20), seed=seed)
+    op = MorphReconstructOp(connectivity=8)
+    J = jnp.asarray(marker.astype(np.int32))
+    I = jnp.asarray(mask.astype(np.int32))
+    if n_sweeps:
+        from repro.morph.ops import fh_init
+        J = fh_init(J, I, n_sweeps=n_sweeps)
+    return op, op.make_state(J, I)
+
+
+def edt_state(size: int, coverage: float, seed: int = 0):
+    """Few concentrated background disks -> distances of O(size): the
+    long-propagation regime of the paper's whole-slide images."""
+    import jax.numpy as jnp
+    from repro.data.images import bg_disks
+    from repro.edt.ops import EdtOp
+    fg = bg_disks(size, size, min(coverage, 0.97), n_disks=6, seed=seed)
+    op = EdtOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(fg))
+
+
+def fill_state(size: int, coverage: float = 0.5, seed: int = 0):
+    """Blob image whose background splits into border-reachable sea plus
+    enclosed holes — the fill-holes regime (border flood depth O(size))."""
+    import jax.numpy as jnp
+    from repro.data.images import binary_blobs
+    from repro.fill.ops import FillHolesOp
+    img = binary_blobs(size, size, coverage, seed)
+    op = FillHolesOp()
+    return op, op.make_state(jnp.asarray(img))
+
+
+def label_state(size: int, coverage: float = 0.55, seed: int = 0):
+    """Blob foreground with many components of mixed scales — the labeling
+    regime (per-component flood depth ~ component diameter)."""
+    import jax.numpy as jnp
+    from repro.data.images import binary_blobs
+    from repro.label.ops import LabelPropagationOp
+    fg = binary_blobs(size, size, coverage, seed)
+    op = LabelPropagationOp(connectivity=8)
+    return op, op.make_state(jnp.asarray(fg))
+
+
+def _blob_volume(size: int, seed: int = 0, scale: int = 8) -> np.ndarray:
+    """Blocky random blob field in [0, 1): a low-res random volume
+    upsampled by ``scale`` — cheap 3-D structure at O(size/scale) feature
+    scale (no scipy, same spirit as ``binary_blobs``)."""
+    rng = np.random.default_rng(seed)
+    lo = rng.random((max(2, -(-size // scale)),) * 3)
+    vol = lo
+    for ax in range(3):
+        vol = np.repeat(vol, scale, axis=ax)
+    return vol[:size, :size, :size]
+
+
+def morph_state3d(size: int, seed: int = 0, connectivity: str = "conn26"):
+    """3-D reconstruction workload (DESIGN.md §2.7): blob intensity volume
+    with sparse seeded markers — the volumetric analogue of the seeded
+    2-D regime (wavefronts climb whole blobs)."""
+    import jax.numpy as jnp
+    from repro.morph.ops import MorphReconstructOp
+    vol = _blob_volume(size, seed)
+    mask = (vol * 200).astype(np.int32)
+    rng = np.random.default_rng(seed + 1)
+    marker = np.where(rng.random(mask.shape) < 1e-3, mask, 0).astype(np.int32)
+    op = MorphReconstructOp(connectivity=connectivity)
+    return op, op.make_state(jnp.asarray(marker), jnp.asarray(mask))
+
+
+def edt_state3d(size: int, seed: int = 0, connectivity: str = "conn26"):
+    """Few background balls in a foreground volume -> distances of
+    O(size): the long-propagation regime, volumetric."""
+    import jax.numpy as jnp
+    from repro.edt.ops import EdtOp
+    rng = np.random.default_rng(seed)
+    z, y, x = np.ogrid[:size, :size, :size]
+    fg = np.ones((size, size, size), bool)
+    r = max(2, size // 8)
+    for _ in range(4):
+        c = rng.integers(0, size, 3)
+        fg &= ((z - c[0]) ** 2 + (y - c[1]) ** 2 + (x - c[2]) ** 2) > r * r
+    op = EdtOp(connectivity=connectivity)
+    return op, op.make_state(jnp.asarray(fg))

@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune_disk, compile_cache
+from repro.core import autotune_disk, calibrate, compile_cache
 from repro.core.distributed import run_sharded
 from repro.core.frontier import run_dense
 from repro.core.pattern import PropagationOp, restore_invalid, tree_shape
@@ -128,6 +128,10 @@ class SolveStats:
     # this stays *constant in the round count*: a warm re-solve reports 0,
     # and an engine whose recompiles grow with `rounds` is leaking traces.
     recompiles: int = 0
+    # Which cost model decided an `auto` run: "analytic" (cold start) or
+    # "measured" (a calibration profile was installed; DESIGN.md §2.8).
+    # None for explicitly-chosen engines — nothing decided anything.
+    cost_model: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +196,7 @@ class InputStats:
     round_cost_weight: float = 1.0      # per-round compute vs morph's max
     shape: Tuple[int, ...] = ()         # full spatial shape (() = 2-D compat)
     n_offsets: int = 8                  # neighborhood size (offsets/pixel)
+    op_name: str = ""                   # registry name ("" = unregistered op)
 
     @property
     def spatial(self) -> Tuple[int, ...]:
@@ -237,7 +242,8 @@ def collect_input_stats(op: PropagationOp, state, n_devices: int = 1,
     return InputStats(H, W, n_sources, active, n_devices,
                       bytes_per_pixel=spec.bytes_per_pixel if spec else 4.0,
                       round_cost_weight=spec.round_cost_weight if spec else 1.0,
-                      shape=spatial, n_offsets=len(op.offsets))
+                      shape=spatial, n_offsets=len(op.offsets),
+                      op_name=spec.name if spec else "")
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +277,10 @@ class CostModel:
     tiles plus a per-drain dispatch overhead, so it wins as the wavefront
     sparsifies (paper Fig. 12: speedups grow with wave sparsity).
     """
+
+    # Which model decided, reported through SolveStats.cost_model (the
+    # MeasuredCostModel subclass overrides this with "measured").
+    kind = "analytic"
 
     # Relative VMEM:HBM bandwidth — inner drain iterations stay on-chip, so
     # a tile's local rounds are discounted by this factor (the paper's BQ
@@ -329,27 +339,38 @@ class CostModel:
         per-ring-cell depth multiplier of an N-D shard's halo traffic."""
         return max(1, stats.area // max(1, stats.height * stats.width))
 
+    def depth(self, stats: InputStats) -> float:
+        """Expected propagation depth (outer rounds to the fixed point).
+
+        The analytic model uses the inter-source-spacing guess
+        ``stats.depth_est``; the measured subclass replaces this with the
+        rounds-per-extent profile — the single hook through which every
+        rounds-dependent term below (dense transfer, drain counts, BP
+        rounds) switches from guessed to measured.
+        """
+        return stats.depth_est
+
     def _drains(self, stats: InputStats, tile: int) -> float:
         """Expected tile drains: initially-active tiles, re-drained once per
         tile-layer the wavefront crosses."""
         active0 = max(1, stats.active_tiles.get(tile, stats.n_tiles(tile)))
-        return active0 * max(1.0, stats.depth_est / tile)
+        return active0 * max(1.0, self.depth(stats) / tile)
 
     # -- the two MATCH-style plug points -----------------------------------
     def transfer_cost(self, stats: InputStats, cfg: EngineConfig) -> float:
         """Slow-memory traffic (pixels moved between rounds)."""
         e = cfg.engine
         if e == "frontier":
-            return stats.depth_est * stats.area
+            return self.depth(stats) * stats.area
         if e == "sweep":
-            return (stats.depth_est + 2) * stats.area * self.sweep_penalty
+            return (self.depth(stats) + 2) * stats.area * self.sweep_penalty
         if e in ("tiled", "tiled-pallas", "scheduler", "hybrid"):
             block = (cfg.tile + 2) ** stats.ndim
             return self._drains(stats, cfg.tile) * block
         if e == "shard_map":
             bp_rounds = self._bp_rounds(stats)
             halo = 2 * (stats.height + stats.width) * self._lead(stats)
-            return (stats.depth_est * stats.area / stats.n_devices
+            return (self.depth(stats) * stats.area / stats.n_devices
                     + bp_rounds * halo)
         if e == "shard_map-tiled":
             # Composed hierarchy: transfer = the BP halo rings (same
@@ -446,17 +467,17 @@ class CostModel:
     def _bp_rounds(self, stats: InputStats) -> float:
         side = max(1.0, math.sqrt(stats.n_devices))
         block_side = min(stats.height, stats.width) / side
-        return max(1.0, stats.depth_est / max(block_side, 1.0))
+        return max(1.0, self.depth(stats) / max(block_side, 1.0))
 
     # -- per-round fixed overhead (calibrated from SolveStats.recompiles) --
     def rounds_est(self, stats: InputStats, cfg: EngineConfig) -> float:
         """Expected outer rounds — the multiplier of the fixed overhead."""
         e = cfg.engine
         if e in ("sweep", "frontier"):
-            return stats.depth_est
+            return self.depth(stats)
         if e in ("tiled", "tiled-pallas"):
             # Outer queue rounds ~ wavefront layers measured in tiles.
-            return max(1.0, stats.depth_est / max(cfg.tile or 1, 1))
+            return max(1.0, self.depth(stats) / max(cfg.tile or 1, 1))
         if e in ("scheduler", "hybrid"):
             return 1.0  # one FCFS pass (hybrid BP recovery is the rare path)
         return self._bp_rounds(stats)
@@ -525,6 +546,212 @@ class CostModel:
         scored = [(self.cost(stats, c), c) for c in cands]
         scored.sort(key=lambda sc: sc[0])
         return scored
+
+
+class MeasuredCostModel(CostModel):
+    """Cost model over a measured :class:`~repro.core.calibrate.
+    CalibrationProfile` (DESIGN.md §2.8); unit = wall seconds.
+
+    Same MATCH-style structure as the analytic parent, but every ingredient
+    the profile measured replaces its guessed counterpart:
+
+    * ``depth`` — the measured rounds-per-extent curve over seed density
+      replaces the inter-source-spacing guess (``InputStats.depth_est``);
+      since every rounds-dependent term routes through :meth:`CostModel.
+      depth`, the fix propagates to dense transfer, drain counts and BP
+      rounds at once.
+    * dense engines — measured seconds per round, interpolated over area
+      (so the HBM bandwidth knee is in the curve, not a constant).
+    * tiled families — measured wall seconds per drain over block pixels,
+      scaled by the measured density factor (shallow drains near
+      convergence), the measured batched-drain amortization curve, and the
+      op's neighborhood-size ratio.  Scheduler/hybrid profiles are wall
+      seconds per tile *at the calibration worker counts* (recorded in
+      ``profile.meta``).
+
+    Anything the profile did not measure — an unprofiled op, a Pallas
+    family measured under a different ``interpret`` mode, the shard_map
+    engines — falls back to the *op's cost hints over the morph reference
+    curves*, and past that to the analytic formula bridged into seconds,
+    so every candidate stays comparable in one ranking.  Construct via
+    :func:`default_cost_model`, which picks this subclass exactly when a
+    profile is installed.
+    """
+
+    kind = "measured"
+
+    def __init__(self, profile, interpret: bool = True):
+        super().__init__(interpret)
+        self.profile = profile
+
+    # -- profile lookups with the op -> morph -> analytic fallback chain ---
+    def _op_key(self, stats: InputStats, table: Dict[str, Any],
+                need: Optional[str] = None) -> Optional[str]:
+        """The table key to price ``stats``'s op from: the op's own entry
+        when present (and carrying ``need``), else the morph reference."""
+        for key in (stats.op_name, "morph"):
+            entry = table.get(key)
+            if entry is None:
+                continue
+            if need is not None and need not in entry:
+                continue
+            return key
+        return None
+
+    def _hint_scale(self, stats: InputStats, key: str, weight: float) -> float:
+        """Scaling applied when pricing an op off another op's curves: the
+        OpSpec cost hints (bytes for transfer-bound terms, round weight for
+        compute-bound terms) — 1.0 when the op owns the curve."""
+        if key == stats.op_name:
+            return 1.0
+        return weight
+
+    def _offs_ratio(self, stats: InputStats, key: str) -> float:
+        """Neighborhood-size correction: per-round and per-drain work is
+        linear in the offsets applied per pixel (conn26 rounds cost ~3x a
+        conn8 round of the same area)."""
+        ref = self.profile.ref_n_offsets.get(key)
+        return stats.n_offsets / ref if ref else 1.0
+
+    # -- measured ingredients ----------------------------------------------
+    def depth(self, stats: InputStats) -> float:
+        rc = self.profile.rounds_per_extent.get(stats.op_name)
+        if rc is None:
+            return stats.depth_est
+        ld = math.log10(max(stats.density, 1e-9))
+        return max(1.0, rc.interp(ld) * max(stats.spatial))
+
+    def _density_factor(self, stats: InputStats) -> float:
+        # Only the op's *own* measured curve: regime-vs-drain-depth
+        # dynamics don't transfer across ops the way per-pixel rates do.
+        df = self.profile.drain_density_factor.get(stats.op_name)
+        if df is None:
+            return 1.0
+        ld = math.log10(max(stats.density, 1e-9))
+        return max(df.interp(ld), 1e-3)
+
+    def _family(self, cfg: EngineConfig) -> str:
+        if cfg.engine == "tiled-pallas" and cfg.kernel_queue:
+            return "tiled-pallas-queued"
+        return cfg.engine
+
+    def _nearest_block(self, curves: Dict[str, Any], block: float) -> str:
+        """Key of the measured block size closest (log-distance) to
+        ``block`` — 3-D blocks land on the largest measured 2-D one."""
+        return min(curves, key=lambda k: abs(math.log(float(k) / block)))
+
+    def _grid_factor(self, stats: InputStats, block: float) -> float:
+        """Growth of per-drain cost with the *full grid* (queue compaction
+        and block scatter touch every tile each round): the measured
+        drain-grid curve at the nearest block size, normalized to its
+        calibration-grid anchor (its first point)."""
+        curves = self.profile.drain_grid
+        if not curves:
+            return 1.0
+        c = curves[self._nearest_block(curves, block)]
+        return max(c.interp(float(stats.area)) / c.ys[0], 1e-3)
+
+    def _batch_factor(self, block: float, drain_batch: float) -> float:
+        curves = self.profile.batch_factor
+        if not curves:
+            return 1.0
+        c = curves[self._nearest_block(curves, block)]
+        return max(c.interp(drain_batch), 1e-3)
+
+    def _drain_seconds(self, stats: InputStats,
+                       cfg: EngineConfig) -> Optional[float]:
+        """Measured wall seconds for one drain of ``cfg``'s family at
+        ``cfg.tile``, fully corrected — None when unprofiled."""
+        fam = self._family(cfg)
+        if fam.startswith("tiled-pallas") and \
+                self.profile.meta.get("interpret") != self.interpret:
+            return None     # interpret-mode timings don't transfer
+        key = self._op_key(stats, self.profile.drain, need=fam)
+        if key is None:
+            return None
+        block = float((cfg.tile + 2) ** stats.ndim)
+        sec = self.profile.drain[key][fam].scaled(block)
+        sec *= self._hint_scale(stats, key, stats.round_cost_weight)
+        sec *= self._offs_ratio(stats, key)
+        sec *= self._density_factor(stats)
+        if fam in ("tiled", "tiled-pallas", "tiled-pallas-queued"):
+            # scheduler/hybrid wall-per-tile rates already include their
+            # host-side overheads and transfer across grid sizes; the
+            # block-drain families need the measured grid and batch
+            # corrections (both measured with the tiled outer loop, which
+            # the Pallas families share).
+            sec *= self._grid_factor(stats, block)
+            sec *= self._batch_factor(block, float(cfg.drain_batch or 1))
+        return sec
+
+    def _unit_seconds(self, stats: InputStats) -> float:
+        """Seconds per analytic pixel-visit unit — the bridge that keeps
+        analytically-priced candidates comparable with measured ones.
+        Preferred source: the measured HBM byte rate at this input's
+        working-set size; else the measured dispatch overhead against the
+        analytic per-round charge; else a nominal DRAM-era constant."""
+        if self.profile.transfer is not None:
+            nbytes = max(1.0, stats.area * stats.bytes_per_pixel)
+            return (self.profile.transfer.scaled(nbytes) / nbytes
+                    * self.ref_bytes_per_pixel)
+        if self.profile.round_overhead_s > 0:
+            return self.profile.round_overhead_s / CostModel.round_overhead
+        return 1e-9
+
+    def _bridge(self, stats: InputStats, cfg: EngineConfig) -> float:
+        return self._unit_seconds(stats) * super().cost(stats, cfg)
+
+    # -- the overridden MATCH plug points (now in seconds) -----------------
+    def round_overhead_cost(self, stats: InputStats,
+                            cfg: EngineConfig) -> float:
+        per_round = (self.profile.round_overhead_s
+                     + self._recompile_rate.get(cfg.engine, 0.0)
+                     * self.profile.recompile_s)
+        return self.rounds_est(stats, cfg) * per_round
+
+    def hybrid_rel_speed(self, tile: int, drain_batch: int = 1) -> float:
+        if self.profile.hybrid_rel_speed:
+            return self.profile.hybrid_rel_speed
+        return super().hybrid_rel_speed(tile, drain_batch)
+
+    def cost(self, stats: InputStats, cfg: EngineConfig) -> float:
+        e = cfg.engine
+        if e in ("frontier", "sweep"):
+            key = self._op_key(stats, self.profile.dense_round, need=e)
+            if key is None:
+                return self._bridge(stats, cfg)
+            sec_per_round = (
+                self.profile.dense_round[key][e].scaled(float(stats.area))
+                * self._hint_scale(stats, key,
+                                   stats.bytes_per_pixel
+                                   / self.ref_bytes_per_pixel)
+                * self._offs_ratio(stats, key))
+            # sweep pays the extra settle rounds past the fixed point (the
+            # analytic model's +2) on top of the measured per-round rate
+            rounds = self.depth(stats) + (2.0 if e == "sweep" else 0.0)
+            return (rounds * sec_per_round
+                    + self.round_overhead_cost(stats, cfg))
+        if e in ("tiled", "tiled-pallas", "scheduler", "hybrid"):
+            sec = self._drain_seconds(stats, cfg)
+            if sec is None:
+                return self._bridge(stats, cfg)
+            return (self._drains(stats, cfg.tile) * sec
+                    + self.round_overhead_cost(stats, cfg))
+        # shard_map engines: no measured profile (needs a mesh to time);
+        # analytic shape, measured depth, bridged into seconds.
+        return self._bridge(stats, cfg)
+
+
+def default_cost_model(interpret: bool = True) -> CostModel:
+    """The model ``engine="auto"`` uses when the caller passed none: the
+    :class:`MeasuredCostModel` over the installed calibration profile when
+    one exists for this (device kind, code version), else the analytic
+    :class:`CostModel` — the cold-start path (DESIGN.md §2.8)."""
+    from repro.core import calibrate
+    profile = calibrate.current_profile()
+    if profile is not None:
+        return MeasuredCostModel(profile, interpret=interpret)
+    return CostModel(interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -1006,13 +1233,15 @@ def _run_hybrid_engine(op, state, cfg, max_rounds, interpret=True,
                                   drain_batch)
     devs = [DeviceWorker(batch_fn, drain_batch=drain_batch,
                          name=f"device{d}") for d in range(n_device_workers)]
-    model = cost_model if cost_model is not None else CostModel(interpret)
+    model = (cost_model if cost_model is not None
+             else default_cost_model(interpret))
     # One policy across all BP passes: the EWMA keeps learning the real
     # host:device speed ratio over the whole solve.
     # max_chunk ~ two batched dispatches ahead: more claim-ahead only adds
     # halo staleness without further dispatch amortization.
     policy = ChunkPolicy(model.hybrid_rel_speed(tile, drain_batch),
-                         max_chunk=max(2 * max(1, drain_batch), 4))
+                         max_chunk=max(2 * max(1, drain_batch), 4),
+                         seed_kind=model.kind)
     residual = _bp_residual_for(op)
     fail = _HYBRID_FAIL_INJECT
 
@@ -1205,12 +1434,27 @@ def solve(op, state, *, engine: str = "auto",
         cfg = EngineConfig(engine, tile, queue_capacity, drain_batch,
                            kernel_queue=bool(kernel_queue),
                            kernel_queue_capacity=kernel_queue_capacity)
-        return _run_engine(op, state, cfg, **run_kw)
+        with calibrate.solve_guard():
+            return _run_engine(op, state, cfg, **run_kw)
 
     n_devices = len(devices) if devices is not None else len(jax.devices())
     tiles = (tile,) if tile is not None else DEFAULT_TILES
+    with calibrate.solve_guard():
+        return _solve_auto(op, state, tile, tiles, n_devices, queue_capacity,
+                           drain_batch, kernel_queue, kernel_queue_capacity,
+                           cost_model, interpret, autotune, autotune_top_k,
+                           autotune_repeats, run_kw)
+
+
+def _solve_auto(op, state, tile, tiles, n_devices, queue_capacity,
+                drain_batch, kernel_queue, kernel_queue_capacity,
+                cost_model, interpret, autotune, autotune_top_k,
+                autotune_repeats, run_kw) -> Tuple[Any, SolveStats]:
+    """The ``engine="auto"`` path: rank candidates, run the winner, report
+    which model decided through ``SolveStats.cost_model``."""
     stats_in = collect_input_stats(op, state, n_devices, tiles)
-    model = cost_model if cost_model is not None else CostModel(interpret=interpret)
+    model = (cost_model if cost_model is not None
+             else default_cost_model(interpret=interpret))
 
     cands = model.candidates(stats_in, tiles)
     if queue_capacity is not None:
@@ -1242,9 +1486,10 @@ def solve(op, state, *, engine: str = "auto",
         model.calibrate(st)
         return out, dataclasses.replace(
             st, autotuned=True, predicted_cost=model.cost(stats_in, cfg),
-            n_devices=max(st.n_devices, 1))
+            n_devices=max(st.n_devices, 1), cost_model=model.kind)
 
     cost, cfg = model.rank(stats_in, cands)[0]
     out, st = _run_engine(op, state, cfg, **run_kw)
     model.calibrate(st)
-    return out, dataclasses.replace(st, predicted_cost=cost)
+    return out, dataclasses.replace(st, predicted_cost=cost,
+                                    cost_model=model.kind)

@@ -11,5 +11,13 @@ def rng():
 def _isolated_autotune_disk(tmp_path, monkeypatch):
     """Point the persisted autotune cache (core.autotune_disk) at a per-test
     tmpdir: tests must neither read winners measured on the developer's
-    machine nor pollute ~/.cache with winners measured under test fixtures."""
+    machine nor pollute ~/.cache with winners measured under test fixtures.
+    The process-wide memoized calibration profile (core.calibrate) is reset
+    on both sides for the same reason — a profile installed by one test (or
+    present on the developer's machine) must not leak into another test's
+    engine selection."""
     monkeypatch.setenv("REPRO_IWPP_CACHE_DIR", str(tmp_path / "autotune-cache"))
+    from repro.core import calibrate
+    calibrate.reset_profile_cache()
+    yield
+    calibrate.reset_profile_cache()

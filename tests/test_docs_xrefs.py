@@ -176,6 +176,29 @@ def test_geometry_docs_pinned():
         "docs/ENGINES.md lacks the connectivity knob rows"
 
 
+def test_calibration_docs_pinned():
+    """Measured cost profiles (ISSUE 9) must stay documented everywhere
+    they are user-visible: DESIGN.md §2.8 exists and describes the
+    measured curves + cold-start contract, EXPERIMENTS.md carries the
+    analytic-vs-calibrated selection scorecard, README carries the
+    calibration quickstart."""
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    m = re.search(r"^###\s+§2\.8\b.*$", design, re.M)
+    assert m and "cost profile" in m.group(0).lower(), \
+        "DESIGN.md lacks the §2.8 measured cost profiles section"
+    sec = design[m.start():]
+    for term in ("MeasuredCostModel", "run_calibration", "rounds_per_extent",
+                 "drain_grid", "batch_factor", "cold-start", "solve_guard",
+                 "CALIBRATION.json"):
+        assert term in sec, f"DESIGN.md §2.8 no longer mentions {term!r}"
+    experiments = _read(os.path.join(ROOT, "EXPERIMENTS.md"))
+    assert "calibrated pick" in experiments, \
+        "EXPERIMENTS.md lacks the analytic-vs-calibrated selection table"
+    readme = _read(os.path.join(ROOT, "README.md"))
+    assert "calibrate.py" in readme and "cost_model" in readme, \
+        "README lacks the calibration quickstart"
+
+
 def test_every_op_has_a_catalog_section():
     """docs/OPS.md must stay complete: one `## \\`op\\`` section per
     registered op — a new register_op() without a catalog entry fails

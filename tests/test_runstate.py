@@ -313,9 +313,9 @@ def test_disk_cache_rejects_foreign_schema(tmp_path, monkeypatch):
     # EngineConfig) must be ignored, not crash the load
     autotune_disk.store("EdtOp", sig, EngineConfig("frontier"), 0.5)
     key = autotune_disk.entry_key("EdtOp", sig)
-    entries = autotune_disk._load_raw()
-    entries[key]["config"]["not_a_field"] = 1
-    autotune_disk._store_raw(entries)
+    doc = autotune_disk._load_doc()
+    doc["entries"][key]["config"]["not_a_field"] = 1
+    autotune_disk._store_doc(doc)
     assert autotune_disk.load("EdtOp", sig, EngineConfig) is None
 
 
