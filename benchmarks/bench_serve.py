@@ -1,0 +1,205 @@
+"""Serving-layer benchmark: coalesced multi-tenant throughput vs the
+serialized one-at-a-time baseline, plus an open-loop arrival sweep
+(DESIGN.md §2.9, docs/SERVING.md).
+
+Two row families:
+
+* ``serve/throughput/*`` — N tenants submit a fixed request stream
+  (1024² morph reconstruction by default) through one
+  :class:`~repro.serve.IwppService`; ``seconds`` is the serve makespan
+  (first ``start()`` to last future resolved) and
+  ``speedup_vs_serial`` compares it against the **serialized baseline**:
+  the sum over the same stream of each request's measured solo
+  ``run_op`` wall time (every unique input is timed by actually running
+  it; duplicate requests reuse their input's measured time — identical
+  input, identical program).  The ``shared-pool`` row is the realistic
+  multi-tenant mix (tenants overlap on a shared input pool, so
+  coalescing *and* the content cache contribute); the ``unique`` row is
+  the honest worst case (every request distinct — batching alone).
+* ``serve/arrival/*`` — open-loop arrival sweep at a smaller size:
+  requests arrive at a fixed rate from 4 tenant threads and the row
+  records the SLO surface (p50/p95/p99 latency, mean batch size, cache
+  hit rate, rejections under a tight queue bound).
+
+Every jitted path (solo and batch-of-``max_batch``) is warmed before
+timing, per the EXPERIMENTS.md §BENCH JSON schema compile-excluded rule.
+``--smoke`` shrinks to the CI profile (256²/128², short streams);
+``--json [PATH]`` writes ``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import (bench_argparser, maybe_calibrate, record,
+                               write_json)
+
+DEFAULT_JSON = "BENCH_serve.json"
+OP = "morph"
+TENANTS = 4
+
+
+def _pool(size: int, n_unique: int):
+    """n_unique distinct seeded-marker reconstruction inputs (the
+    bench_ops sparse-wavefront regime, one per seed)."""
+    from repro.data.images import seeded_marker, tissue_image
+    out = []
+    for seed in range(n_unique):
+        marker, mask = tissue_image(size, size, coverage=1.0, seed=seed)
+        marker = seeded_marker(mask, n_seeds=max(8, size // 20), seed=seed)
+        out.append((marker.astype(np.int32), mask.astype(np.int32)))
+    return out
+
+
+def _solo_seconds(pool):
+    """Measured one-at-a-time wall seconds per unique input (warm path)."""
+    from repro.ops import run_op
+    times = []
+    for inputs in pool:
+        t0 = time.perf_counter()
+        run_op(OP, *inputs, engine="frontier")
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def _serve_stream(stream, pool, max_batch):
+    """Run one request stream through a fresh service; returns
+    ``(makespan_s, ServeStats)``.  The stream is queued first
+    (``start=False``) so the coalescer sees the full backlog — the
+    steady-state shape of a loaded service."""
+    from repro.serve import IwppService
+    svc = IwppService(engine="frontier", max_batch=max_batch,
+                      batch_window_s=0.0, start=False)
+    futs = [svc.submit(OP, pool[i], tenant=f"tenant{t}")
+            for t, i in stream]
+    t0 = time.perf_counter()
+    svc.start()
+    for f in futs:
+        f.result()
+    makespan = time.perf_counter() - t0
+    svc.close()
+    return makespan, svc.stats()
+
+
+def _throughput_row(records, label, stream, pool, t_solo, size, max_batch):
+    serialized = sum(t_solo[i] for _, i in stream)
+    makespan, st = _serve_stream(stream, pool, max_batch)
+    record(records,
+           f"serve/throughput/{OP}/size={size}/engine=frontier/{label}",
+           makespan, tenants=TENANTS, requests=len(stream),
+           unique=len({i for _, i in stream}), max_batch=max_batch,
+           batches=st.batches, mean_batch=round(st.mean_batch_size, 2),
+           cache_hit_rate=round(st.cache_hit_rate, 3),
+           p50_s=round(st.latency_p50_s, 3), p99_s=round(st.latency_p99_s, 3),
+           serialized_s=round(serialized, 3),
+           speedup_vs_serial=round(serialized / makespan, 2))
+
+
+def _arrival_row(records, size, pool, rate_hz, n_requests, max_batch,
+                 max_queue_depth=64):
+    """Open-loop: fixed-rate arrivals from TENANTS submitter threads."""
+    from repro.serve import IwppService, Rejected
+    svc = IwppService(engine="frontier", max_batch=max_batch,
+                      batch_window_s=0.01, max_queue_depth=max_queue_depth)
+    futs, rejects = [], [0]
+    lock = threading.Lock()
+
+    def tenant(t):
+        for k in range(t, n_requests, TENANTS):
+            time.sleep(TENANTS / rate_hz)
+            try:
+                f = svc.submit(OP, pool[k % len(pool)], tenant=f"tenant{t}")
+                with lock:
+                    futs.append(f)
+            except Rejected:
+                with lock:
+                    rejects[0] += 1
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=tenant, args=(t,))
+               for t in range(TENANTS)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    for f in futs:
+        f.result()
+    makespan = time.perf_counter() - t0
+    svc.close()
+    st = svc.stats()
+    record(records,
+           f"serve/arrival/{OP}/size={size}/rate={rate_hz}"
+           f"/depth={max_queue_depth}",
+           makespan, tenants=TENANTS, requests=n_requests,
+           completed=st.completed, rejected=rejects[0],
+           mean_batch=round(st.mean_batch_size, 2),
+           cache_hit_rate=round(st.cache_hit_rate, 3),
+           p50_s=round(st.latency_p50_s, 3),
+           p95_s=round(st.latency_p95_s, 3),
+           p99_s=round(st.latency_p99_s, 3))
+
+
+def _warm(pool, sizes, small_pool):
+    """Compile every timed program shape up front (solo + each batch
+    size the arrival sweep can form), so rows exclude compile time."""
+    from repro.ops import get_op
+    from repro.solve import solve_batch
+    import jax.numpy as jnp
+    spec = get_op(OP)
+    op = spec.make_op(None)
+    for p, ks in ((pool, sizes), (small_pool, range(1, len(small_pool) + 1))):
+        states = [spec.build_state(op, jnp.asarray(m), jnp.asarray(i))
+                  for m, i in p]
+        for k in ks:
+            solve_batch(op, states[:k], engine="frontier")
+
+
+def main(size: int = 1024, json_path: str | None = None, smoke: bool = False):
+    records: list = []
+    if smoke:
+        size, small, n_unique, reps, max_batch = 256, 128, 4, 2, 4
+        rates = (8.0,)
+        n_arrival = 8
+    else:
+        small, n_unique, reps, max_batch = 256, 8, 6, 4
+        rates = (4.0, 16.0)
+        n_arrival = 16
+
+    pool = _pool(size, n_unique)
+    small_pool = _pool(small, 4)
+    print(f"# warming jitted paths (size={size}/{small}) ...", flush=True)
+    _warm(pool[:max_batch], (1, max_batch), small_pool)
+
+    t_solo = _solo_seconds(pool)
+    # shared-pool: TENANTS tenants x reps requests over the first
+    # max_batch unique inputs — the overlapping multi-tenant mix.
+    stream = [(t, (t + k) % max_batch)
+              for k in range(reps) for t in range(TENANTS)]
+    _throughput_row(records, "shared-pool", stream, pool, t_solo, size,
+                    max_batch)
+    # unique: every request distinct — no cache help, batching alone.
+    stream = [(i % TENANTS, i) for i in range(len(pool))]
+    _throughput_row(records, "unique", stream, pool, t_solo, size, max_batch)
+
+    for rate in rates:
+        _arrival_row(records, small, small_pool, rate, n_arrival, max_batch)
+    # backpressure row: all-unique arrivals (cache hits bypass the queue,
+    # so a shared pool would never fill it) far above service capacity
+    # against a tight queue bound — rejections (with retry-after) instead
+    # of an unbounded queue.
+    _arrival_row(records, small, _pool(small, n_arrival), rate_hz=200.0,
+                 n_requests=n_arrival, max_batch=max_batch,
+                 max_queue_depth=2)
+
+    write_json(records, json_path)
+    return records
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(
+        DEFAULT_JSON, size=1024,
+        smoke_help="CI profile: 256² streams, one arrival rate")
+    a = ap.parse_args()
+    maybe_calibrate(a)
+    main(a.size, json_path=a.json, smoke=a.smoke)

@@ -26,13 +26,15 @@ def main(argv=None):
     size = 256 if args.quick else args.size
 
     from benchmarks import (bench_coverage, bench_ops, bench_overflow,
-                            bench_queue_variants, bench_tile_size)
+                            bench_queue_variants, bench_serve,
+                            bench_tile_size)
     benches = [
         ("queue_variants", lambda: bench_queue_variants.main(size)),
         ("tile_size", lambda: bench_tile_size.main(size)),
         ("coverage", lambda: bench_coverage.main(size)),
         ("overflow", lambda: bench_overflow.main(size)),
         ("ops", lambda: bench_ops.main(size, smoke=args.quick)),
+        ("serve", lambda: bench_serve.main(size, smoke=args.quick)),
     ]
     if not args.quick and "multidevice" not in args.skip:
         from benchmarks import bench_multidevice

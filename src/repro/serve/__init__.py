@@ -1,0 +1,18 @@
+"""IWPP serving layer (DESIGN.md §2.9, docs/SERVING.md).
+
+:class:`IwppService` is the multi-tenant batched front door over the
+engine stack; :mod:`repro.serve.engine` holds the unrelated token-decode
+``ServeEngine`` for the LM substrate (import it from its module).
+"""
+
+from repro.serve.batching import (Coalescer, PendingRequest,
+                                  content_fingerprint, request_key,
+                                  shape_bucket)
+from repro.serve.metrics import LatencyReservoir, MetricsRecorder, ServeStats
+from repro.serve.service import IwppService, Rejected
+
+__all__ = [
+    "Coalescer", "IwppService", "LatencyReservoir", "MetricsRecorder",
+    "PendingRequest", "Rejected", "ServeStats", "content_fingerprint",
+    "request_key", "shape_bucket",
+]

@@ -1,0 +1,150 @@
+"""Request coalescing for the IWPP serving layer (DESIGN.md §2.9).
+
+The throughput story of the paper's motivating deployment — many
+independent slide-analysis requests sharing one hybrid machine — is
+batching: compatible requests must ride one solve so devices stay
+saturated.  This module owns the *grouping* half of that story:
+
+* :func:`request_key` — the compatibility signature.  Two requests
+  coalesce iff they share ``(op, bucketed spatial shape, input dtypes,
+  connectivity, engine signature)``; anything else would either change
+  results (different op/connectivity), fail to stack (different
+  shape/dtype), or solve under the wrong engine config.
+* :func:`shape_bucket` — the pad-to-bucket policy for near-miss shapes:
+  each spatial axis rounds up to the next multiple of
+  ``bucket_multiple``, so a 1000×1010 request shares a batch with a
+  1024×1024 one instead of stranding alone.  Padding happens at the
+  *state* level with the op's neutral values (:func:`padded_state`), so
+  padded cells are invalid, can never source a propagation, and the
+  cropped result is bit-identical to the unpadded solo solve — the same
+  invariant the tiled engines' grid padding rests on.
+* :class:`Coalescer` — the pending queue: FIFO across keys (the oldest
+  request always leads the next batch), with up to ``max_batch - 1``
+  compatible followers pulled out of arrival order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+
+def canonical_connectivity(connectivity: Optional[Union[int, str]]) -> str:
+    """Canonical neighborhood name for a request's connectivity knob
+    (``""`` = the op's own default, which is part of the op identity)."""
+    if connectivity is None:
+        return ""
+    from repro.core.geometry import connectivity_name
+    return connectivity_name(connectivity)
+
+
+def content_fingerprint(op_name: str, inputs: Sequence[Any],
+                        connectivity: Optional[Union[int, str]] = None) -> str:
+    """Content address of one request: sha256 over the op name, canonical
+    connectivity, and every input's shape/dtype/bytes.
+
+    Two requests with equal fingerprints ask for the same deterministic
+    fixed point, so the result cache and the in-flight single-flight
+    dedup key on this.  The *finalized* result is what gets cached —
+    engine-independent for every registered op (even EDT, whose Voronoi
+    pointers may tie-differ per engine, finalizes to the unique distance
+    map — paper §3.4).
+    """
+    h = hashlib.sha256()
+    h.update(op_name.encode())
+    h.update(b"\x00")
+    h.update(canonical_connectivity(connectivity).encode())
+    for x in inputs:
+        a = np.ascontiguousarray(np.asarray(x))
+        h.update(b"\x00")
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def shape_bucket(spatial: Sequence[int], bucket_multiple: int) -> Tuple[int, ...]:
+    """Round each spatial axis up to the next ``bucket_multiple`` — the
+    pad-to-bucket policy (``1`` = exact-shape grouping only)."""
+    if bucket_multiple < 1:
+        raise ValueError(f"bucket_multiple must be >= 1, got {bucket_multiple}")
+    return tuple(-(-s // bucket_multiple) * bucket_multiple for s in spatial)
+
+
+def request_key(op_name: str, spatial: Sequence[int],
+                dtypes: Sequence[str],
+                connectivity: Optional[Union[int, str]],
+                engine_sig: tuple, bucket_multiple: int) -> tuple:
+    """The coalescing compatibility key (see module docstring)."""
+    return (op_name, shape_bucket(spatial, bucket_multiple), tuple(dtypes),
+            canonical_connectivity(connectivity), engine_sig)
+
+
+def padded_state(op, state, target_spatial: Sequence[int]):
+    """State padded to the bucket target with neutral/invalid fill;
+    returns ``(padded, orig_spatial)`` (delegates to
+    :func:`repro.solve.pad_state_to`)."""
+    from repro.solve import pad_state_to
+    return pad_state_to(op, state, target_spatial)
+
+
+def crop_state(state, orig_spatial: Sequence[int]):
+    """Undo :func:`padded_state` on a result state."""
+    idx = (Ellipsis,) + tuple(slice(0, s) for s in orig_spatial)
+    import jax
+    return jax.tree_util.tree_map(lambda x: x[idx], state)
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """One queued request (the service fills every field at submit)."""
+
+    rid: int
+    op_name: str
+    inputs: tuple
+    connectivity: Optional[Union[int, str]]
+    tenant: str
+    key: tuple                     # request_key(...) compatibility signature
+    fingerprint: str               # content_fingerprint(...)
+    future: Any                    # concurrent.futures.Future
+    t_submit: float                # monotonic submit timestamp
+
+
+class Coalescer:
+    """FIFO pending queue with compatibility-keyed batch extraction.
+
+    ``push`` appends; ``take_batch`` pops the oldest request and up to
+    ``max_batch - 1`` later requests sharing its key (relative order
+    preserved).  Not thread-safe on its own — the service serializes
+    access under its lock.
+    """
+
+    def __init__(self):
+        self._pending: "OrderedDict[int, PendingRequest]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def push(self, req: PendingRequest) -> None:
+        self._pending[req.rid] = req
+
+    def peek_oldest(self) -> Optional[PendingRequest]:
+        return next(iter(self._pending.values()), None)
+
+    def compatible_pending(self, key: tuple) -> int:
+        return sum(1 for r in self._pending.values() if r.key == key)
+
+    def take_batch(self, max_batch: int) -> List[PendingRequest]:
+        """Extract the next batch (empty list when nothing is pending)."""
+        if not self._pending:
+            return []
+        head = self.peek_oldest()
+        batch = []
+        for rid in [r.rid for r in self._pending.values()
+                    if r.key == head.key][:max(1, max_batch)]:
+            batch.append(self._pending.pop(rid))
+        return batch

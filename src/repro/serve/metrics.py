@@ -1,0 +1,149 @@
+"""Observability surface of the IWPP serving layer (DESIGN.md §2.9).
+
+One thread-safe :class:`MetricsRecorder` collects every counter the service
+mutates on its hot paths (submissions, admissions, cache traffic, batch
+sizes, per-request latency), and :meth:`MetricsRecorder.snapshot` freezes
+them into an immutable :class:`ServeStats` — the record docs/SERVING.md
+defines the SLO metrics against and ``benchmarks/bench_serve.py`` reports.
+
+Latency is measured submit-to-result on the monotonic clock and kept in a
+bounded reservoir (newest-wins ring), so percentile queries stay O(cap log
+cap) and memory stays flat under sustained load.  Percentiles use the
+nearest-rank method: ``p99`` is the smallest observed latency ≥ 99% of the
+sample — never an interpolated value that no request actually experienced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional
+
+
+class LatencyReservoir:
+    """Bounded sample of request latencies (seconds), newest-wins ring."""
+
+    def __init__(self, capacity: int = 8192):
+        if capacity <= 0:
+            raise ValueError("reservoir capacity must be >= 1")
+        self.capacity = capacity
+        self._ring = [0.0] * capacity
+        self._n = 0          # total ever recorded
+
+    def record(self, latency_s: float) -> None:
+        self._ring[self._n % self.capacity] = float(latency_s)
+        self._n += 1
+
+    def __len__(self) -> int:
+        return min(self._n, self.capacity)
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile over the retained sample (0 if empty)."""
+        n = len(self)
+        if n == 0:
+            return 0.0
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
+        ordered = sorted(self._ring[:n])
+        rank = max(1, -(-int(p * n) // 100))      # ceil(p/100 * n), >= 1
+        return ordered[min(rank, n) - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Frozen service-level SLO snapshot (docs/SERVING.md #slo-metrics).
+
+    Counter semantics: ``submitted`` counts every ``submit()`` that was not
+    rejected (cache hits included); ``rejected`` counts admission-control
+    refusals (they never enter the queue, so they appear in no other
+    counter); ``completed``/``failed`` partition the finished requests.
+    ``cache_hits`` includes in-flight single-flight joins — a request that
+    attached to an identical pending request never cost a solve, which is
+    what the hit rate is meant to capture.
+    """
+
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    rejected: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    batches: int = 0                               # coalesced solves issued
+    batch_size_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    queue_depth: int = 0                           # pending, not yet claimed
+    inflight: int = 0                              # claimed, not yet resolved
+    uptime_s: float = 0.0
+    requests_per_sec: float = 0.0                  # completed / uptime
+    latency_p50_s: float = 0.0
+    latency_p95_s: float = 0.0
+    latency_p99_s: float = 0.0
+    latency_count: int = 0                         # reservoir sample size
+
+    @property
+    def cache_hit_rate(self) -> float:
+        looked = self.cache_hits + self.cache_misses
+        return self.cache_hits / looked if looked else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        n = sum(self.batch_size_hist.values())
+        total = sum(k * v for k, v in self.batch_size_hist.items())
+        return total / n if n else 0.0
+
+
+class MetricsRecorder:
+    """The mutable side of :class:`ServeStats`; every method is
+    thread-safe (one lock — the service's hot path is dominated by solves,
+    not counter updates)."""
+
+    def __init__(self, reservoir_capacity: int = 8192,
+                 clock=time.monotonic):
+        self._lock = threading.Lock()
+        self._clock = clock
+        self._t0 = clock()
+        self._latency = LatencyReservoir(reservoir_capacity)
+        self._counts = {k: 0 for k in
+                        ("submitted", "completed", "failed", "rejected",
+                         "cache_hits", "cache_misses", "batches")}
+        self._batch_hist: Dict[int, int] = {}
+        # EWMA of seconds of service time per completed request — the
+        # admission controller's retry-after estimator.
+        self._ewma_request_s: Optional[float] = None
+
+    def count(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counts[name] += n
+
+    def record_batch(self, size: int, wall_s: float) -> None:
+        with self._lock:
+            self._counts["batches"] += 1
+            self._batch_hist[size] = self._batch_hist.get(size, 0) + 1
+            per_req = wall_s / max(1, size)
+            self._ewma_request_s = (
+                per_req if self._ewma_request_s is None
+                else 0.7 * self._ewma_request_s + 0.3 * per_req)
+
+    def record_latency(self, latency_s: float) -> None:
+        with self._lock:
+            self._latency.record(latency_s)
+
+    def ewma_request_s(self, default: float = 0.05) -> float:
+        """Recent seconds of service time per request (retry-after unit)."""
+        with self._lock:
+            return (self._ewma_request_s
+                    if self._ewma_request_s is not None else default)
+
+    def snapshot(self, queue_depth: int = 0, inflight: int = 0) -> ServeStats:
+        with self._lock:
+            uptime = max(self._clock() - self._t0, 1e-9)
+            return ServeStats(
+                queue_depth=queue_depth, inflight=inflight,
+                uptime_s=uptime,
+                requests_per_sec=self._counts["completed"] / uptime,
+                latency_p50_s=self._latency.percentile(50),
+                latency_p95_s=self._latency.percentile(95),
+                latency_p99_s=self._latency.percentile(99),
+                latency_count=len(self._latency),
+                batch_size_hist=dict(self._batch_hist),
+                **self._counts)

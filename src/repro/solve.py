@@ -132,6 +132,14 @@ class SolveStats:
     # "measured" (a calibration profile was installed; DESIGN.md §2.8).
     # None for explicitly-chosen engines — nothing decided anything.
     cost_model: Optional[str] = None
+    # Monotonic-clock wall seconds of the engine run, measured around the
+    # engine adapter with the output forced resident (block_until_ready) —
+    # the one truthful latency source the serving layer (DESIGN.md §2.9)
+    # and the benches report from instead of re-timing around solve().
+    wall_time_s: float = 0.0
+    # Requests coalesced into the one solve that produced this record
+    # (solve_batch's vmapped dense path); None for solo solves.
+    batch_size: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -847,18 +855,21 @@ def _autotune(op, state, stats, model: CostModel, candidates, restrictions,
 # Engine adapters.
 # ---------------------------------------------------------------------------
 
-def _pad_to_multiple(op, state, mults: Sequence[int]):
-    """High-side-pad the trailing ``len(mults)`` spatial axes of every leaf
-    to grid multiples with neutral values.
+def pad_state_to(op, state, target: Sequence[int]):
+    """High-side-pad every leaf's trailing spatial axes to exactly
+    ``target`` with the op's neutral values.
 
     Padded cells are invalid and hold ``op.pad_value`` fills, so they can
     never source a propagation; cropping afterwards restores the domain.
-    Returns ``(padded, orig_spatial)`` over the op's full spatial shape.
+    Shared by the engines' grid-multiple padding and the serving layer's
+    pad-to-bucket coalescing (DESIGN.md §2.9).  Returns ``(padded,
+    orig_spatial)``; shrinking is an error.
     """
     nd = op.ndim
     spatial = tree_shape(state, nd)
-    mults = (1,) * (nd - len(mults)) + tuple(mults)
-    target = tuple(-(-s // m) * m for s, m in zip(spatial, mults))
+    target = tuple(target)
+    if any(t < s for s, t in zip(spatial, target)):
+        raise ValueError(f"pad_state_to cannot shrink {spatial} to {target}")
     if target == spatial:
         return state, spatial
     pv = op.pad_value(state)
@@ -869,6 +880,16 @@ def _pad_to_multiple(op, state, mults: Sequence[int]):
             constant_values=v),
         state, pv)
     return padded, spatial
+
+
+def _pad_to_multiple(op, state, mults: Sequence[int]):
+    """High-side-pad the trailing ``len(mults)`` spatial axes of every leaf
+    to grid multiples with neutral values (see :func:`pad_state_to`)."""
+    nd = op.ndim
+    spatial = tree_shape(state, nd)
+    mults = (1,) * (nd - len(mults)) + tuple(mults)
+    return pad_state_to(op, state,
+                        tuple(-(-s // m) * m for s, m in zip(spatial, mults)))
 
 
 def _crop(state, spatial: Sequence[int]):
@@ -1316,9 +1337,15 @@ def _run_engine(op, state, cfg: EngineConfig, **kw):
     # `recompiles` is the compile-cache miss delta across the run: 0 on a
     # warm re-solve, and — the DESIGN.md §2.6 contract — *independent of
     # the round count* even on a cold one (tests/test_runstate.py).
+    t0 = time.monotonic()
     with compile_cache.MissSnapshot() as snap:
         out, st = _ENGINE_RUNNERS[cfg.engine](op, state, cfg, **kw)
-    return out, dataclasses.replace(st, recompiles=snap.count)
+    # Force the result resident before closing the clock: with async
+    # dispatch the dense engines would otherwise return an unmaterialized
+    # future and wall_time_s would under-report the actual solve.
+    jax.block_until_ready(out)
+    return out, dataclasses.replace(st, recompiles=snap.count,
+                                    wall_time_s=time.monotonic() - t0)
 
 
 # ---------------------------------------------------------------------------
@@ -1493,3 +1520,159 @@ def _solve_auto(op, state, tile, tiles, n_devices, queue_capacity,
     model.calibrate(st)
     return out, dataclasses.replace(st, predicted_cost=cost,
                                     cost_model=model.kind)
+
+
+# ---------------------------------------------------------------------------
+# Batch-of-states entry — the serving layer's coalesced solve
+# (DESIGN.md §2.9).
+# ---------------------------------------------------------------------------
+
+# Engines whose convergence loop is a pure lax.while_loop over the state,
+# and therefore vmap cleanly into ONE batched fixed-point program: the
+# batching rule freezes converged elements via per-element select, so each
+# request's result (and round/source counters) is bit-identical to its solo
+# run — extra rounds past an element's fixed point are no-ops.
+BATCHABLE_ENGINES = ("frontier", "sweep")
+
+
+def _batched_dense_for(op, engine: str, max_rounds: int):
+    key = ("batch-dense", type(op), op.connectivity, engine, max_rounds)
+    return compile_cache.get(
+        key, lambda: jax.jit(jax.vmap(
+            lambda s: run_dense(op, s, engine, max_rounds))))
+
+
+def _tree_signature(state):
+    return tuple(sorted((k, tuple(v.shape), str(jnp.asarray(v).dtype))
+                        for k, v in state.items()))
+
+
+def solve_batch(op, states: Sequence[Any], *,
+                engine: str = "auto",
+                connectivity: Optional[Union[int, str]] = None,
+                cost_model: Optional[CostModel] = None,
+                autotune: bool = False,
+                max_rounds: int = 1_000_000,
+                interpret: bool = True,
+                **engine_kw) -> List[Tuple[Any, SolveStats]]:
+    """Solve ``len(states)`` independent same-shaped inputs as one batch.
+
+    The coalescing entry the serving layer (``repro.serve``, DESIGN.md
+    §2.9) drains its request queue through: all states must share one tree
+    signature (leaf names, shapes, dtypes) — the coalescer's grouping
+    contract — and the batch runs as **one** solve wherever the engine
+    supports it:
+
+    * dense engines (:data:`BATCHABLE_ENGINES`) — the states are stacked on
+      a new leading axis and run under one ``jax.vmap``-ed fixed-point
+      loop.  Results are bit-identical to per-state solo solves (the
+      while_loop batching rule freezes converged elements), and the
+      per-element round/source counters stay exact.
+    * every other engine (host-loop engines: tiled/scheduler/hybrid/...) —
+      the states run sequentially under the chosen config, still amortizing
+      the compiled-step cache and the autotune winner across the batch.
+
+    ``engine="auto"`` ranks candidates once on the first state via
+    ``cost_model`` (default :func:`default_cost_model` — the calibrated
+    profile when installed) and applies the winner to the whole batch;
+    ``autotune=True`` micro-benchmarks the top candidates on the first
+    state, sharing the process + disk autotune caches with solo solves.
+
+    Returns a list of ``(state, SolveStats)`` in input order.  Batched
+    elements report ``batch_size=len(states)`` and the *batch's* wall time
+    (one program solved them all); sequential elements report their own.
+    ``engine_kw`` takes the same per-engine knobs as :func:`solve`
+    (``tile``, ``queue_capacity``, ``drain_batch``, ...).
+    """
+    if isinstance(op, str):
+        spec = get_op(op)
+        op = spec.make_op(connectivity)
+        states = [s if isinstance(s, dict) else
+                  spec.build_state(op, *(s if isinstance(s, tuple) else (s,)))
+                  for s in states]
+    elif connectivity is not None:
+        raise ValueError(
+            "connectivity= applies to by-name solve_batch() calls only; "
+            "construct the op instance with the desired connectivity instead")
+    states = list(states)
+    if not states:
+        return []
+    sig0 = _tree_signature(states[0])
+    for i, s in enumerate(states[1:], start=1):
+        if _tree_signature(s) != sig0:
+            raise ValueError(
+                f"solve_batch needs one tree signature across the batch; "
+                f"states[{i}] has {_tree_signature(s)} != states[0]'s "
+                f"{sig0}.  Group requests by (op, shape, dtype) first — "
+                "the serve-layer coalescer's pad-to-bucket policy exists "
+                "for exactly this (docs/SERVING.md)")
+    if len(states) == 1:
+        out, st = solve(op, states[0], engine=engine, cost_model=cost_model,
+                        autotune=autotune, max_rounds=max_rounds,
+                        interpret=interpret, **engine_kw)
+        return [(out, st)]
+
+    if engine == "auto":
+        stats_in = collect_input_stats(op, states[0])
+        model = (cost_model if cost_model is not None
+                 else default_cost_model(interpret=interpret))
+        cands = model.candidates(stats_in)
+        with calibrate.solve_guard():
+            if autotune:
+                cfg = _autotune(op, states[0], stats_in, model, cands,
+                                ("batch",), top_k=3, repeats=2,
+                                max_rounds=max_rounds, interpret=interpret,
+                                devices=None, n_workers=4,
+                                n_device_workers=1, hybrid_pallas=False,
+                                cost_model=cost_model)
+            else:
+                cfg = model.rank(stats_in, cands)[0][1]
+        chosen, decided_by = cfg, model.kind
+    else:
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        chosen = EngineConfig(engine, engine_kw.get("tile"),
+                              engine_kw.get("queue_capacity"),
+                              engine_kw.get("drain_batch"),
+                              kernel_queue=bool(engine_kw.get("kernel_queue")),
+                              kernel_queue_capacity=engine_kw.get(
+                                  "kernel_queue_capacity"))
+        decided_by = None
+
+    if chosen.engine in BATCHABLE_ENGINES:
+        t0 = time.monotonic()
+        with calibrate.solve_guard(), compile_cache.MissSnapshot() as snap:
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *states)
+            fn = _batched_dense_for(op, chosen.engine, max_rounds)
+            out, rst = fn(stacked)
+            jax.block_until_ready(out)
+        wall = time.monotonic() - t0
+        results = []
+        for i in range(len(states)):
+            st_i = SolveStats(
+                chosen.engine, rounds=int(rst.rounds[i]),
+                sources_processed=(int(rst.sources_hi[i]) << 32)
+                | int(rst.sources_lo[i]),
+                recompiles=snap.count, cost_model=decided_by,
+                wall_time_s=wall, batch_size=len(states))
+            results.append(
+                (jax.tree_util.tree_map(lambda x: x[i], out), st_i))
+        return results
+
+    # Host-loop engines: no single-program batch formulation — run the
+    # batch sequentially under the one chosen config (compiled steps and
+    # autotune winners are shared across the loop via the process caches).
+    run_kw = dict(max_rounds=max_rounds, interpret=interpret,
+                  devices=engine_kw.get("devices"),
+                  n_workers=engine_kw.get("n_workers", 4),
+                  n_device_workers=engine_kw.get("n_device_workers", 1),
+                  hybrid_pallas=engine_kw.get("hybrid_pallas", False),
+                  cost_model=cost_model)
+    results = []
+    with calibrate.solve_guard():
+        for s in states:
+            out, st = _run_engine(op, s, chosen, **run_kw)
+            results.append((out, dataclasses.replace(
+                st, cost_model=decided_by)))
+    return results

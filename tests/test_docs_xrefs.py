@@ -22,6 +22,8 @@ _ENGINES_ANCHOR_REF = re.compile(r"docs/ENGINES\.md#([A-Za-z0-9\-_]+)")
 _ENGINES_FILE_REF = re.compile(r"docs/ENGINES\.md")
 _OPS_ANCHOR_REF = re.compile(r"docs/OPS\.md#([A-Za-z0-9\-_]+)")
 _OPS_FILE_REF = re.compile(r"docs/OPS\.md")
+_SERVING_ANCHOR_REF = re.compile(r"docs/SERVING\.md#([A-Za-z0-9\-_]+)")
+_SERVING_FILE_REF = re.compile(r"docs/SERVING\.md")
 
 
 def _scan_files():
@@ -99,6 +101,38 @@ def test_engines_md_references_resolve():
 
 def test_ops_md_references_resolve():
     _check_doc_references("OPS.md", _OPS_FILE_REF, _OPS_ANCHOR_REF)
+
+
+def test_serving_md_references_resolve():
+    _check_doc_references("SERVING.md", _SERVING_FILE_REF,
+                          _SERVING_ANCHOR_REF)
+
+
+def test_serving_docs_pinned():
+    """The serving layer (ISSUE 10) must stay documented everywhere it is
+    user-visible: DESIGN.md §2.9 exists and describes the coalescing /
+    caching / admission design, docs/SERVING.md covers the API and the SLO
+    metric definitions, EXPERIMENTS.md carries the batched-vs-serialized
+    table, README carries the serving quickstart."""
+    design = _read(os.path.join(ROOT, "DESIGN.md"))
+    m = re.search(r"^###\s+§2\.9\b.*$", design, re.M)
+    assert m and "serving" in m.group(0).lower(), \
+        "DESIGN.md lacks the §2.9 serving layer section"
+    sec = design[m.start():]
+    for term in ("solve_batch", "coalesc", "single-flight",
+                 "content_fingerprint", "pad-to-bucket", "retry_after_s",
+                 "BATCHABLE_ENGINES"):
+        assert term in sec, f"DESIGN.md §2.9 no longer mentions {term!r}"
+    serving = _read(os.path.join(ROOT, "docs", "SERVING.md"))
+    for term in ("IwppService", "submit", "max_queue_depth",
+                 "max_inflight_per_tenant", "bucket_multiple",
+                 "cache_hit_rate", "latency_p99_s", "Rejected"):
+        assert term in serving, f"docs/SERVING.md no longer mentions {term!r}"
+    experiments = _read(os.path.join(ROOT, "EXPERIMENTS.md"))
+    assert "speedup_vs_serial" in experiments, \
+        "EXPERIMENTS.md lacks the batched-vs-serialized serving table"
+    readme = _read(os.path.join(ROOT, "README.md"))
+    assert "IwppService" in readme, "README lacks the serving quickstart"
 
 
 def test_every_engine_has_a_reference_section():

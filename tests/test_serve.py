@@ -1,0 +1,354 @@
+"""Serving-layer suite (DESIGN.md §2.9, docs/SERVING.md): the coalescing
+front door must be *invisible* in results and *visible* in metrics.
+
+  (a) batch = solo, bit for bit — ``solve_batch`` over every registered op
+      (2-D and 3-D where supported) reproduces per-state solo solves
+      exactly, including the round/source counters (the vmapped
+      ``lax.while_loop`` freezes converged elements, so extra rounds past
+      an element's fixed point are no-ops);
+  (b) the service round-trips ``submit()`` futures to the same finalized
+      arrays ``run_op`` returns, through pad-to-bucket coalescing;
+  (c) result cache: repeat submits return equal arrays without a second
+      solve, in-flight duplicates single-flight onto one future;
+  (d) admission control rejects at the queue/tenant bounds with a
+      ``retry_after_s`` hint and never wedges the queue;
+  (e) failure isolation: an exploding batch rejects exactly its own
+      futures while later batches keep draining.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ops import get_op, list_ops, run_op
+from repro.serve import (Coalescer, IwppService, LatencyReservoir,
+                         MetricsRecorder, Rejected, ServeStats,
+                         content_fingerprint, request_key, shape_bucket)
+from repro.solve import BATCHABLE_ENGINES, solve, solve_batch
+
+SHAPES = {2: (24, 28), 3: (8, 10, 12)}
+
+
+def _raw_inputs(name, rng, shape):
+    """The op's natural ``submit()`` payload (None = op unknown here)."""
+    if name == "morph":
+        mask = rng.integers(0, 200, shape).astype(np.int32)
+        marker = np.where(rng.random(shape) < 0.05, mask, 0).astype(np.int32)
+        return (marker, mask)
+    if name == "edt":
+        return (np.asarray(rng.random(shape) < 0.85),)
+    if name == "fill_holes":
+        return (np.asarray(rng.random(shape) < 0.45),)
+    if name == "label":
+        return (np.asarray(rng.random(shape) < 0.55),)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# (a) solve_batch == solo, every op, every supported rank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nd", sorted(SHAPES), ids=lambda nd: f"{nd}d")
+@pytest.mark.parametrize("name", list_ops())
+def test_solve_batch_bit_identical_to_solo(name, nd):
+    spec = get_op(name)
+    if nd not in spec.supported_ndims:
+        pytest.skip(f"{name} does not support {nd}-D")
+    cases = [spec.example_state(np.random.default_rng(200 + i), SHAPES[nd])
+             for i in range(3)]
+    op = cases[0][0]
+    states = [st for _, st in cases]
+    batched = solve_batch(op, states, engine="frontier")
+    for i, st_in in enumerate(states):
+        out_b, stats_b = batched[i]
+        out_s, stats_s = solve(op, st_in, engine="frontier")
+        assert sorted(out_b) == sorted(out_s)
+        for k in out_s:
+            np.testing.assert_array_equal(np.asarray(out_b[k]),
+                                          np.asarray(out_s[k]))
+        assert stats_b.rounds == stats_s.rounds
+        assert stats_b.sources_processed == stats_s.sources_processed
+        assert stats_b.batch_size == len(states)
+        assert stats_b.wall_time_s > 0.0
+
+
+def test_solve_batch_mixed_signature_raises():
+    spec = get_op("morph")
+    op, s1 = spec.example_state(np.random.default_rng(0), (24, 28))
+    _, s2 = spec.example_state(np.random.default_rng(1), (32, 32))
+    with pytest.raises(ValueError, match="tree signature"):
+        solve_batch(op, [s1, s2])
+
+
+def test_solve_batch_by_name_auto_and_sequential():
+    rng = np.random.default_rng(3)
+    inputs = [_raw_inputs("edt", np.random.default_rng(3 + i), (24, 28))
+              for i in range(2)]
+    res = solve_batch("edt", inputs, engine="auto")
+    assert len(res) == 2 and res[0][1].cost_model is not None
+    # host-loop engines take the sequential path but still return
+    # per-element stats under the one chosen config
+    spec = get_op("edt")
+    op = spec.make_op(None)
+    states = [spec.build_state(op, jnp.asarray(x[0])) for x in inputs]
+    seq = solve_batch(op, states, engine="tiled", tile=32)
+    assert seq[0][1].engine == "tiled"
+    d_auto = spec.extract(op, res[0][0])
+    d_seq = spec.extract(op, seq[0][0])
+    np.testing.assert_array_equal(np.asarray(d_auto), np.asarray(d_seq))
+
+
+def test_wall_time_populated_by_every_solve():
+    spec = get_op("morph")
+    op, state = spec.example_state(np.random.default_rng(7), (24, 28))
+    for engine in ("frontier", "sweep", "tiled"):
+        _, st = solve(op, state, engine=engine)
+        assert st.wall_time_s > 0.0, f"{engine} left wall_time_s unset"
+        assert st.batch_size is None
+
+
+# ---------------------------------------------------------------------------
+# (b) service round trip: submit() == run_op(), coalesced
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list_ops())
+def test_service_matches_run_op(name):
+    shape = SHAPES[2]
+    payloads = [_raw_inputs(name, np.random.default_rng(300 + i), shape)
+                for i in range(3)]
+    if payloads[0] is None:
+        pytest.skip(f"no raw-input builder for op {name!r}")
+    want = [np.asarray(run_op(name, *p, engine="frontier")[0])
+            for p in payloads]
+    svc = IwppService(engine="frontier", max_batch=8, start=False)
+    futs = [svc.submit(name, p, tenant=f"t{i}")
+            for i, p in enumerate(payloads)]
+    svc.start()
+    try:
+        got = [np.asarray(f.result(timeout=300)) for f in futs]
+    finally:
+        svc.close()
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    stats = svc.stats()
+    assert stats.completed == 3 and stats.failed == 0
+    assert stats.batches == 1 and stats.batch_size_hist == {3: 1}
+    assert stats.queue_depth == 0 and stats.inflight == 0
+    assert stats.latency_p99_s >= stats.latency_p50_s > 0.0
+
+
+def test_service_pad_to_bucket_coalesces_near_miss_shapes():
+    rng = np.random.default_rng(11)
+    small = _raw_inputs("edt", rng, (40, 52))
+    exact = _raw_inputs("edt", rng, (64, 64))
+    want_small = np.asarray(run_op("edt", *small, engine="frontier")[0])
+    want_exact = np.asarray(run_op("edt", *exact, engine="frontier")[0])
+    svc = IwppService(engine="frontier", bucket_multiple=64, start=False)
+    f1 = svc.submit("edt", small)
+    f2 = svc.submit("edt", exact)
+    svc.start()
+    try:
+        got_small = np.asarray(f1.result(timeout=300))
+        got_exact = np.asarray(f2.result(timeout=300))
+    finally:
+        svc.close()
+    np.testing.assert_array_equal(got_small, want_small)
+    np.testing.assert_array_equal(got_exact, want_exact)
+    assert got_small.shape == (40, 52), "padding leaked into the result"
+    assert svc.stats().batch_size_hist == {2: 1}, \
+        "near-miss shapes did not share one batch"
+
+
+# ---------------------------------------------------------------------------
+# (c) result cache + single-flight
+# ---------------------------------------------------------------------------
+
+def test_service_cache_hits_and_single_flight():
+    payload = _raw_inputs("morph", np.random.default_rng(21), SHAPES[2])
+    other = _raw_inputs("morph", np.random.default_rng(22), SHAPES[2])
+    svc = IwppService(engine="frontier", start=False)
+    f1 = svc.submit("morph", payload, tenant="a")
+    f2 = svc.submit("morph", payload, tenant="b")    # in-flight duplicate
+    f3 = svc.submit("morph", other, tenant="c")
+    assert f2 is f1, "identical in-flight request did not single-flight"
+    svc.start()
+    base = np.asarray(f1.result(timeout=300))
+    batches_before = svc.stats().batches
+    f4 = svc.submit("morph", payload)                # post-completion repeat
+    got = np.asarray(f4.result(timeout=5))
+    np.testing.assert_array_equal(got, base)
+    svc.close()
+    stats = svc.stats()
+    assert stats.batches == batches_before, "cache hit triggered a solve"
+    assert stats.cache_hits == 2          # one join + one post-completion hit
+    assert stats.cache_misses == 2        # the two distinct payloads
+    assert stats.cache_hit_rate == pytest.approx(0.5)
+    assert stats.completed == 4
+
+
+def test_service_cache_lru_eviction():
+    svc = IwppService(engine="frontier", cache_capacity=1, start=False)
+    a = _raw_inputs("label", np.random.default_rng(31), SHAPES[2])
+    b = _raw_inputs("label", np.random.default_rng(32), SHAPES[2])
+    fa = svc.submit("label", a)
+    fb = svc.submit("label", b)
+    svc.start()
+    ra, rb = fa.result(300), fb.result(300)
+    # capacity 1: `a` was evicted when `b` completed -> resubmitting `a`
+    # is a miss, resubmitting `b` is a hit
+    misses_before = svc.stats().cache_misses
+    np.testing.assert_array_equal(np.asarray(svc.submit("label", b)
+                                             .result(300)), np.asarray(rb))
+    assert svc.stats().cache_misses == misses_before
+    np.testing.assert_array_equal(np.asarray(svc.submit("label", a)
+                                             .result(300)), np.asarray(ra))
+    assert svc.stats().cache_misses == misses_before + 1
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# (d) admission control
+# ---------------------------------------------------------------------------
+
+def test_service_rejects_past_queue_depth():
+    svc = IwppService(engine="frontier", max_queue_depth=2, start=False)
+    for i in range(2):
+        svc.submit("edt", _raw_inputs("edt", np.random.default_rng(40 + i),
+                                      SHAPES[2]))
+    with pytest.raises(Rejected) as exc:
+        svc.submit("edt", _raw_inputs("edt", np.random.default_rng(49),
+                                      SHAPES[2]))
+    assert exc.value.retry_after_s > 0.0
+    assert svc.stats().rejected == 1
+    # the refusal must not wedge the queue: start and drain normally
+    svc.start()
+    svc.close()
+    assert svc.stats().completed == 2
+
+
+def test_service_per_tenant_inflight_cap():
+    svc = IwppService(engine="frontier", max_inflight_per_tenant=1,
+                      start=False)
+    svc.submit("edt", _raw_inputs("edt", np.random.default_rng(50),
+                                  SHAPES[2]), tenant="greedy")
+    with pytest.raises(Rejected, match="greedy"):
+        svc.submit("edt", _raw_inputs("edt", np.random.default_rng(51),
+                                      SHAPES[2]), tenant="greedy")
+    # other tenants are unaffected, and duplicates/cache hits stay free
+    svc.submit("edt", _raw_inputs("edt", np.random.default_rng(51),
+                                  SHAPES[2]), tenant="modest")
+    svc.start()
+    svc.close()
+    assert svc.stats().completed == 2 and svc.stats().rejected == 1
+
+
+def test_service_unknown_op_raises_before_queueing():
+    svc = IwppService(start=False)
+    with pytest.raises(ValueError, match="unknown op"):
+        svc.submit("not_an_op", np.zeros((4, 4)))
+    assert len(svc._coalescer) == 0
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# (e) failure isolation
+# ---------------------------------------------------------------------------
+
+def test_service_failure_injection_rejects_only_affected_batch():
+    rng = np.random.default_rng(61)
+    svc = IwppService(engine="frontier", start=False)
+    svc.fail_injector = lambda batch: batch[0].op_name == "morph"
+    doomed = [svc.submit("morph", _raw_inputs("morph",
+                                              np.random.default_rng(61 + i),
+                                              SHAPES[2]))
+              for i in range(2)]
+    survivor = svc.submit("edt", _raw_inputs("edt", rng, SHAPES[2]))
+    svc.start()
+    try:
+        for f in doomed:
+            with pytest.raises(RuntimeError, match="injected"):
+                f.result(timeout=300)
+        assert survivor.result(timeout=300) is not None
+    finally:
+        svc.close()
+    stats = svc.stats()
+    assert stats.failed == 2 and stats.completed == 1
+    assert stats.queue_depth == 0 and stats.inflight == 0, \
+        "failed batch left accounting behind"
+
+
+# ---------------------------------------------------------------------------
+# metrics / batching units
+# ---------------------------------------------------------------------------
+
+def test_latency_reservoir_percentiles_nearest_rank():
+    r = LatencyReservoir(capacity=100)
+    for v in range(1, 101):                      # 0.01 .. 1.00
+        r.record(v / 100)
+    assert r.percentile(50) == pytest.approx(0.50)
+    assert r.percentile(95) == pytest.approx(0.95)
+    assert r.percentile(99) == pytest.approx(0.99)
+    assert r.percentile(100) == pytest.approx(1.00)
+    r2 = LatencyReservoir(capacity=4)            # newest-wins bound
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0):
+        r2.record(v)
+    assert len(r2) == 4 and r2.percentile(100) == 6.0
+    assert LatencyReservoir().percentile(99) == 0.0
+
+
+def test_serve_stats_derived_properties():
+    s = ServeStats(cache_hits=3, cache_misses=1,
+                   batch_size_hist={1: 2, 4: 1})
+    assert s.cache_hit_rate == pytest.approx(0.75)
+    assert s.mean_batch_size == pytest.approx(2.0)
+    assert ServeStats().cache_hit_rate == 0.0
+    assert ServeStats().mean_batch_size == 0.0
+
+
+def test_metrics_recorder_thread_safety_smoke():
+    m = MetricsRecorder()
+    def worker():
+        for _ in range(200):
+            m.count("submitted")
+            m.record_latency(0.01)
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert m.snapshot().submitted == 800
+
+
+def test_request_key_and_bucket_rules():
+    sig = ("auto", True, False, ())
+    k1 = request_key("morph", (40, 52), ("int32", "int32"), None, sig, 64)
+    k2 = request_key("morph", (64, 64), ("int32", "int32"), None, sig, 64)
+    k3 = request_key("morph", (65, 64), ("int32", "int32"), None, sig, 64)
+    assert k1 == k2, "near-miss shapes must bucket together"
+    assert k2 != k3, "shapes past the bucket boundary must not"
+    assert shape_bucket((1, 64, 65), 64) == (64, 64, 128)
+    # connectivity aliases canonicalize: 8 and "conn8" are one group
+    assert request_key("morph", (64, 64), ("int32",), 8, sig, 64) \
+        == request_key("morph", (64, 64), ("int32",), "conn8", sig, 64)
+    # distinct content, same key -> coalescible but separate fingerprints
+    a = np.zeros((4, 4), np.int32)
+    b = np.ones((4, 4), np.int32)
+    assert content_fingerprint("morph", (a, a)) \
+        != content_fingerprint("morph", (a, b))
+    assert content_fingerprint("morph", (a, b)) \
+        == content_fingerprint("morph", (a.copy(), b.copy()))
+
+
+def test_coalescer_fifo_and_key_grouping():
+    c = Coalescer()
+    def req(rid, key):
+        return type("R", (), {"rid": rid, "key": key})()
+    for rid, key in [(1, "A"), (2, "B"), (3, "A"), (4, "A"), (5, "B")]:
+        c.push(req(rid, key))
+    assert len(c) == 5 and c.compatible_pending("A") == 3
+    batch = c.take_batch(2)
+    assert [r.rid for r in batch] == [1, 3], \
+        "batch must lead with the oldest request and keep arrival order"
+    assert [r.rid for r in c.take_batch(8)] == [2, 5]
+    assert [r.rid for r in c.take_batch(8)] == [4]
+    assert c.take_batch(8) == []
